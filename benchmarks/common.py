@@ -1,0 +1,18 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def timed(fn, *args, repeat: int = 3, **kwargs):
+    """Returns (result, microseconds per call)."""
+    fn(*args, **kwargs)          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    return out, us

@@ -1,0 +1,35 @@
+"""Engine microbenchmarks on CPU (reduced configs): decode step latency per
+architecture family + kernel interpret-mode checks. Wall numbers are CPU
+debug figures; the TPU roofline lives in benchmarks/roofline.py."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params, reduced
+from repro.serving import DecodeEngine
+
+from .common import emit, timed
+
+ARCHS = ("qwen3-0.6b", "deepseek-moe-16b", "rwkv6-1.6b", "zamba2-7b")
+
+
+def main() -> None:
+    for arch in ARCHS:
+        cfg = reduced(get_config(arch))
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = DecodeEngine(cfg, params, cache_capacity=256)
+        prompts = np.ones((4, 16), dtype=np.int32)
+
+        def gen():
+            return eng.generate(prompts, [8, 8, 8, 8], max_extra_tokens=0)
+
+        out, us = timed(gen, repeat=2)
+        per_tok = us / (4 * 8)
+        emit(f"engine.{arch}.decode_us_per_token", f"{per_tok:.0f}",
+             "reduced cfg, CPU, batch=4")
+
+
+if __name__ == "__main__":
+    main()

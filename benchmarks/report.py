@@ -1,0 +1,58 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline tables from results/."""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+import sys
+
+RES = pathlib.Path("results")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(glob.glob(str(RES / "dryrun" / "*__dryrun.json"))):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            rows.append((r["arch"], r["shape"], r["mesh"], "FAIL", "", ""))
+            continue
+        mem = r["memory_analysis"]
+        rows.append((
+            r["arch"], r["shape"], r["mesh"],
+            "ok",
+            f"{mem.get('temp_size_in_bytes', 0) / 2**30:.1f}",
+            f"{r['compile_s']:.0f}",
+        ))
+    out = ["| arch | shape | mesh | lower+compile | temp GiB/dev | compile s |",
+           "|---|---|---|---|---:|---:|"]
+    for row in rows:
+        out.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(tag: str = "") -> str:
+    pat = f"*__roofline{('__' + tag) if tag else ''}.json"
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | 6ND/HLO ratio |",
+           "|---|---|---:|---:|---:|---|---:|"]
+    for f in sorted(glob.glob(str(RES / "roofline" / pat))):
+        r = json.load(open(f))
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        x = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {x['compute_s']:.3e} | "
+            f"{x['memory_s']:.3e} | {x['collective_s']:.3e} | "
+            f"**{x['bottleneck']}** | {x['model_flops_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## Dry-run table\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n## Roofline table\n")
+        print(roofline_table())

@@ -1,0 +1,50 @@
+"""Roofline report: reads the dry-run artifacts (results/dryrun +
+results/roofline) and prints the per-(arch x shape) table of the three
+terms. Run the sweeps first:
+
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh pod --roofline \
+        --out results/roofline
+"""
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+from .common import emit
+
+RESULTS = pathlib.Path("results")
+
+
+def main() -> None:
+    dr = sorted(glob.glob(str(RESULTS / "dryrun" / "*__dryrun*.json")))
+    ok = fail = 0
+    for f in dr:
+        r = json.load(open(f))
+        ok += bool(r.get("ok"))
+        fail += not r.get("ok")
+    emit("roofline.dryrun_combos_ok", ok, f"failed={fail}")
+
+    rf = sorted(glob.glob(str(RESULTS / "roofline" / "*__roofline*.json")))
+    if not rf:
+        emit("roofline.note", "no-roofline-artifacts",
+             "run the --roofline sweep first")
+        return
+    for f in rf:
+        r = json.load(open(f))
+        if not r.get("ok"):
+            emit(f"roofline.{r['arch']}.{r['shape']}", "FAIL",
+                 r.get("error", "")[:60])
+            continue
+        x = r["roofline"]
+        key = f"{r['arch']}.{r['shape']}"
+        emit(f"roofline.{key}.compute_s", f"{x['compute_s']:.3e}", "")
+        emit(f"roofline.{key}.memory_s", f"{x['memory_s']:.3e}", "")
+        emit(f"roofline.{key}.collective_s", f"{x['collective_s']:.3e}", "")
+        emit(f"roofline.{key}.bottleneck", x["bottleneck"],
+             f"model_flops_ratio={x['model_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

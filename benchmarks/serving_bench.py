@@ -1,0 +1,55 @@
+"""End-to-end serving benchmark: the real server (allocator + scheduler +
+virtual clock) under the paper workload, plus beyond-paper modes
+(SJF/priority disciplines, batched service, online adaptation, M/G/c)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import paper_problem, solve_mgc
+from repro.queueing_sim import generate_stream, pk_prediction
+from repro.serving import LLMServer, ServerConfig
+
+from .common import emit, timed
+
+
+def main() -> None:
+    prob = paper_problem()
+    stream = generate_stream(prob.tasks, prob.server.lam, 5000, seed=3)
+
+    def run(**kw):
+        srv = LLMServer(prob, ServerConfig(online_adaptation=False, **kw))
+        return srv.run(stream), srv
+
+    (fifo, srv), us = timed(lambda: run(), repeat=1)
+    pred = pk_prediction(prob, list(srv.allocator.solution.lengths_int))
+    emit("serve.fifo.mean_system_time", f"{fifo.mean_system_time:.4f}",
+         f"pk={pred['mean_system_time']:.4f}")
+    emit("serve.fifo.p99_system_time", f"{fifo.p99_system_time:.4f}", "")
+    emit("serve.fifo.objective", f"{fifo.objective:.4f}", "")
+    emit("serve.fifo.utilization", f"{fifo.utilization:.4f}", "")
+    emit("serve.fifo.throughput_qps", f"{5000 / (us / 1e6):.0f}",
+         "simulated queries per wall-second")
+
+    sjf, _ = run(discipline="sjf")
+    emit("serve.sjf.mean_wait", f"{sjf.mean_wait:.4f}",
+         f"fifo={fifo.mean_wait:.4f}")
+    pri, _ = run(discipline="priority")
+    emit("serve.priority.objective", f"{pri.objective:.4f}", "")
+    for bs in (2, 4, 8):
+        rep, _ = run(batch_size=bs)
+        emit(f"serve.batched_{bs}.mean_system_time",
+             f"{rep.mean_system_time:.4f}", f"objective={rep.objective:.4f}")
+    online_srv = LLMServer(prob, ServerConfig(online_adaptation=True))
+    online = online_srv.run(stream)
+    emit("serve.online.objective", f"{online.objective:.4f}",
+         f"resolves={online.n_resolves}")
+
+    # M/G/c replica planning (beyond paper)
+    for c in (1, 2, 4):
+        r = solve_mgc(prob, c)
+        emit(f"serve.mgc.replicas_{c}.J", f"{float(r.value):.4f}",
+             f"iters={r.iterations}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paper Table I: optimal reasoning-token allocation on the calibrated
+Qwen3-8B instance (lam=0.1, alpha=30, l_max=32768, pi=1/6)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (PAPER_TABLE1_LSTAR, paper_problem, solve,
+                        solve_fixed_point, solve_pga_backtracking)
+
+from .common import emit, timed
+
+
+def main() -> None:
+    prob = paper_problem()
+    sol, us = timed(lambda: solve(prob), repeat=3)
+    names = prob.tasks.names
+    paper = np.asarray(PAPER_TABLE1_LSTAR)
+    for i, n in enumerate(names):
+        emit(f"table1.lstar.{n}", f"{sol.lengths_cont[i]:.1f}",
+             f"paper={paper[i]:.1f}")
+        emit(f"table1.lint.{n}", int(sol.lengths_int[i]), "")
+    err = float(np.max(np.abs(sol.lengths_cont - paper)))
+    emit("table1.solve", f"{us:.0f}", f"max_abs_dev_vs_paper={err:.2f}")
+    emit("table1.J_continuous", f"{sol.value_cont:.6f}", "")
+    emit("table1.J_integer", f"{sol.value_int:.6f}", "")
+    emit("table1.J_lower_bound", f"{sol.value_lower_bound:.6f}", "eq41")
+    emit("table1.method", sol.method, f"iters={sol.iterations}")
+
+    import jax
+    with jax.enable_x64(True):
+        _, us_fp = timed(lambda: solve_fixed_point(prob).lengths.block_until_ready())
+        _, us_pga = timed(lambda: solve_pga_backtracking(prob)
+                          .lengths.block_until_ready())
+    emit("table1.fixed_point", f"{us_fp:.0f}", "us_per_solve")
+    emit("table1.pga_backtracking", f"{us_pga:.0f}", "us_per_solve")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Train a small decoder for a few hundred steps on the synthetic pipeline.
+
+    PYTHONPATH=src python examples/train_small.py --steps 150
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokens
+from repro.models import reduced
+from repro.train import (AdamWConfig, init_train_state, make_train_step,
+                         save_checkpoint)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), d_model=256)
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                      batch_size=8))
+    opt = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps,
+                      weight_decay=0.0)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    t0 = time.time()
+    first = None
+    for i in range(args.steps):
+        state, m = step_fn(state, {"tokens":
+                                   jnp.asarray(data.batch(i)["tokens"])})
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+    print(f"loss {first:.3f} -> {loss:.3f}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state, step=args.steps)
+        print("checkpoint saved to", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+model (Qwen3-8B). Select with ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "zamba2-7b",
+    "musicgen-medium",
+    "qwen3-0.6b",
+    "llava-next-mistral-7b",
+    "deepseek-moe-16b",
+    "granite-moe-3b-a800m",
+    "stablelm-3b",
+    "olmo-1b",
+    "starcoder2-3b",
+    "rwkv6-1.6b",
+    # the paper's own serving model (Sec IV), beyond the assigned ten:
+    "qwen3-8b",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.config()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,20 @@
+"""Qwen3-8B: the paper's own serving model (Sec IV numerics calibrated on
+it). Beyond the 10 assigned architectures. [arXiv:2505.09388]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        arch_id="qwen3-8b",
+        family="dense",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=12288,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        source="arXiv:2505.09388",
+    )

@@ -1,0 +1,38 @@
+"""Core: the paper's contribution — queueing-aware reasoning-token allocation.
+
+Public API:
+
+    Problem, TaskSet, ServerParams, paper_problem   -- problem data (Sec II)
+    objective, grad, hessian                        -- J(l) and derivatives (eq 7)
+    solve_fixed_point, contraction_certificate      -- Sec III-B/C (eqs 19-26)
+    solve_pga, safe_step_size                       -- Sec III-D (eqs 29-38)
+    round_policy, exhaustive_policy, sandwich       -- Sec III-E (eqs 39-41)
+    TokenBudgetAllocator, solve                     -- end-to-end facade
+"""
+from .allocator import Solution, TokenBudgetAllocator, solve
+from .calibration import calibrate_taskset, fit_accuracy, fit_latency
+from .fixed_point import (contraction_certificate, fixed_point_map,
+                          solve_fixed_point)
+from .integer import (coordinate_policy, exhaustive_policy, round_policy,
+                      rounding_lower_bound, sandwich)
+from .lambertw import lambertw0
+from .mgc import objective_mgc, solve_mgc
+from .objective import grad, hessian, lipschitz_grad_bound, objective
+from .params import (PAPER_TABLE1_LSTAR, Problem, ServerParams, TaskSet,
+                     paper_problem, paper_tasks)
+from .pga import safe_step_size, solve_pga, solve_pga_backtracking
+from .queueing import (is_stable, max_stable_budget, mean_system_time,
+                       mean_wait, service_moments, worst_case)
+
+__all__ = [
+    "Problem", "TaskSet", "ServerParams", "paper_problem", "paper_tasks",
+    "PAPER_TABLE1_LSTAR", "objective", "grad", "hessian",
+    "lipschitz_grad_bound", "solve_fixed_point", "fixed_point_map",
+    "contraction_certificate", "solve_pga", "solve_pga_backtracking",
+    "safe_step_size", "round_policy", "exhaustive_policy",
+    "coordinate_policy", "rounding_lower_bound", "sandwich", "lambertw0",
+    "TokenBudgetAllocator", "Solution", "solve", "service_moments",
+    "mean_wait", "mean_system_time", "is_stable", "worst_case",
+    "max_stable_budget", "calibrate_taskset", "fit_accuracy", "fit_latency",
+    "objective_mgc", "solve_mgc",
+]

@@ -1,0 +1,183 @@
+"""TokenBudgetAllocator — the paper's technique as a first-class feature.
+
+Facade consumed by the serving scheduler (``repro.serving``): given a
+calibrated :class:`Problem`, it solves for the optimal per-task integer
+reasoning-token budgets via the projected fixed-point iteration (eq 24),
+falling back to PGA (eq 29) when the fixed point stalls, then projects to
+integers (Sec III-E).
+
+Beyond the paper it supports *online* operation: the arrival rate lambda and
+the type mixture pi are re-estimated from the live request stream (EWMA) and
+the allocation is re-solved when the operating point drifts, so the server
+adapts its thinking budgets to load — exactly the control loop the paper's
+static analysis enables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import fixed_point, integer, pga
+from .objective import grad, objective
+from .params import Problem, ServerParams, TaskSet
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class Solution:
+    lengths_cont: np.ndarray     # continuous optimum l*
+    lengths_int: np.ndarray      # implemented integer budgets
+    value_cont: float            # J(l*)
+    value_int: float             # J(l_int)
+    value_lower_bound: float     # J_bar(l*), eq (41)
+    method: str                  # "fixed_point" | "pga" | "fixed_point+pga"
+    iterations: int
+    contraction_Linf: float      # Lemma 2 certificate (paper form; +inf when
+                                 # its rho_max < 1 assumption fails)
+    contraction_Linf_slab: float  # slab-restricted variant (beyond paper)
+    stable: bool
+
+
+def solve(problem: Problem, tol: float = 1e-8,
+          integer_method: str = "exhaustive") -> Solution:
+    """Full solve: FP -> (PGA fallback) -> integer projection.
+
+    Runs under x64 (control-plane precision; N ~ 10 scalars, cost is nil).
+    """
+    import jax
+
+    with jax.enable_x64(True):
+        return _solve_x64(problem, tol, integer_method)
+
+
+def _solve_x64(problem: Problem, tol: float,
+               integer_method: str) -> Solution:
+    problem.validate()
+    fp = fixed_point.solve_fixed_point(problem, tol=tol)
+    method = "fixed_point"
+    iters = int(fp.iterations)
+    lengths = fp.lengths
+    # Accept the FP answer only if it is a KKT point: converged AND the
+    # projected gradient residual is small (the FP map can cycle when the
+    # Lemma 2 certificate fails).
+    ok = bool(fp.converged)
+    if ok:
+        g = grad(problem, lengths)
+        # KKT: g ~ 0 on interior coords, g <= 0 at 0, g >= 0 at l_max
+        interior = (lengths > 0) & (lengths < problem.server.l_max)
+        resid = jnp.max(jnp.where(interior, jnp.abs(g),
+                                  jnp.where(lengths <= 0, jnp.maximum(g, 0),
+                                            jnp.maximum(-g, 0))))
+        ok = bool(resid < 1e-4 * (1.0 + float(jnp.max(jnp.abs(g)))))
+    if not ok:
+        pg = pga.solve_pga_backtracking(problem, l0=lengths, tol=tol)
+        lengths = pg.lengths
+        iters += int(pg.iterations)
+        method = "fixed_point+pga"
+
+    if integer_method == "exhaustive" and problem.tasks.n_tasks <= 16:
+        ir = integer.exhaustive_policy(problem, lengths)
+    elif integer_method == "coordinate":
+        ir = integer.coordinate_policy(problem, lengths)
+    else:
+        ir = integer.round_policy(problem, lengths)
+
+    return Solution(
+        lengths_cont=np.asarray(lengths, dtype=np.float64),
+        lengths_int=np.asarray(ir.lengths, dtype=np.float64),
+        value_cont=float(objective(problem, lengths)),
+        value_int=float(ir.value),
+        value_lower_bound=float(integer.rounding_lower_bound(problem, lengths)),
+        method=method,
+        iterations=iters,
+        contraction_Linf=float(fixed_point.contraction_certificate(problem)),
+        contraction_Linf_slab=float(
+            fixed_point.contraction_certificate(problem, 5e-2)),
+        stable=bool(jnp.all(jnp.isfinite(jnp.asarray(ir.value)))),
+    )
+
+
+class TokenBudgetAllocator:
+    """Online queueing-aware budget allocator.
+
+    Thread-safe: the serving scheduler calls :meth:`budget_for` on the hot
+    path and :meth:`observe_arrival` per admission; re-solves happen inline
+    (cheap, N ~ 10 control variables) when drift exceeds ``resolve_rel_tol``.
+    """
+
+    def __init__(self, problem: Problem, *, ewma_halflife: float = 200.0,
+                 resolve_rel_tol: float = 0.05,
+                 min_resolve_interval: int = 200):
+        problem.validate()
+        self._base = problem
+        self._lock = threading.Lock()
+        self._ewma_decay = math.log(2.0) / ewma_halflife
+        self._lam_est = problem.server.lam
+        self._pi_est = np.asarray(problem.tasks.pi, dtype=np.float64).copy()
+        self._last_arrival_t: float | None = None
+        self._resolve_rel_tol = resolve_rel_tol
+        # re-solving retraces the jitted solvers (the problem constants are
+        # baked in); cap the cadence so the control plane stays cheap
+        self._min_resolve_interval = min_resolve_interval
+        self._arrivals_since_resolve = 0
+        self._solution = solve(problem)
+        self._solved_at = (self._lam_est, self._pi_est.copy())
+        self.n_resolves = 1
+
+    # ------------------------------------------------------------- queries
+    @property
+    def solution(self) -> Solution:
+        return self._solution
+
+    def budget_for(self, task_index: int) -> int:
+        return int(self._solution.lengths_int[task_index])
+
+    def budgets(self) -> Mapping[str, int]:
+        names = self._base.tasks.names
+        return {n: int(v) for n, v in zip(names, self._solution.lengths_int)}
+
+    # ------------------------------------------------------------ learning
+    def observe_arrival(self, task_index: int, t_now: float) -> None:
+        """EWMA update of (lambda, pi) from the live stream; maybe re-solve."""
+        with self._lock:
+            if self._last_arrival_t is not None:
+                gap = max(t_now - self._last_arrival_t, 1e-9)
+                w = 1.0 - math.exp(-self._ewma_decay)
+                self._lam_est = (1 - w) * self._lam_est + w * (1.0 / gap)
+                onehot = np.zeros_like(self._pi_est)
+                onehot[task_index] = 1.0
+                self._pi_est = (1 - w) * self._pi_est + w * onehot
+                self._pi_est /= self._pi_est.sum()
+            self._last_arrival_t = t_now
+            self._arrivals_since_resolve += 1
+            self._maybe_resolve()
+
+    def _maybe_resolve(self) -> None:
+        if self._arrivals_since_resolve < self._min_resolve_interval:
+            return
+        lam0, pi0 = self._solved_at
+        drift = abs(self._lam_est - lam0) / max(lam0, 1e-9)
+        drift = max(drift, float(np.max(np.abs(self._pi_est - pi0))))
+        if drift < self._resolve_rel_tol:
+            return
+        self._arrivals_since_resolve = 0
+        tasks = self._base.tasks
+        new_tasks = TaskSet(names=tasks.names, A=tasks.A, b=tasks.b,
+                            D=tasks.D, t0=tasks.t0, c=tasks.c,
+                            pi=jnp.asarray(self._pi_est))
+        sp = self._base.server
+        # keep the re-solve feasible: cap lambda below the zero-token
+        # stability limit (an overloaded M/G/1 has no finite optimum)
+        es0 = float(np.sum(self._pi_est * np.asarray(tasks.t0)))
+        lam = min(self._lam_est, 0.95 / max(es0, 1e-9))
+        new_problem = Problem(tasks=new_tasks,
+                              server=ServerParams(lam, sp.alpha, sp.l_max))
+        self._solution = solve(new_problem)
+        self._solved_at = (lam, self._pi_est.copy())
+        self.n_resolves += 1

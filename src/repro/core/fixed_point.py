@@ -1,0 +1,171 @@
+"""Projected fixed-point iteration for the optimal token allocation (Sec III-B/C).
+
+The KKT stationarity condition (eq 17) with inactive box/stability multipliers
+rearranges to  l_k - L_k(l) exp(-b_k l_k) = K_k(l)  (eq 19) with
+
+    L_k(l) = alpha A_k b_k (1 - lam E[S]) / (lam c_k^2)            (eq 20)
+    K_k(l) = -t0_k/c_k - (1 - lam E[S])/(lam c_k)
+             - lam E[S^2] / (2 c_k (1 - lam E[S]))                 (eq 21)
+
+whose solution in l_k is the Lambert-W closed form (eq 22). Projecting onto
+[0, l_max]^N gives the iteration (eq 24), a contraction whenever the Lemma 2
+certificate L_inf < 1 (eq 26).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .lambertw import lambertw0
+from .params import Problem
+from .queueing import service_moments, stability_clip, worst_case
+
+Array = jnp.ndarray
+
+
+def coefficients(problem: Problem, lengths: Array):
+    """L_k(l) (eq 20) and K_k(l) (eq 21)."""
+    tasks, sp = problem.tasks, problem.server
+    m = service_moments(tasks, lengths, sp.lam)
+    L = sp.alpha * tasks.A * tasks.b * m.slack / (sp.lam * tasks.c ** 2)
+    K = (
+        -tasks.t0 / tasks.c
+        - m.slack / (sp.lam * tasks.c)
+        - sp.lam * m.es2 / (2.0 * tasks.c * m.slack)
+    )
+    return L, K
+
+
+def fixed_point_map(problem: Problem, lengths: Array) -> Array:
+    """Unprojected map l_hat(l), eq (22).
+
+    Computed in log space: W(b L e^{-b K}) with K very negative would
+    overflow exp, so we pass z through its logarithm implicitly by using
+    the identity W(e^y) via lambertw0 on a clipped argument. lambertw0
+    iterates in log space internally, so we only need a finite z: we clamp
+    the exponent and compensate nothing because for exponents > ~700 the
+    result W(z) ~ log z - log log z is computed from log z anyway.
+    """
+    tasks = problem.tasks
+    L, K = coefficients(problem, lengths)
+    # z = b L e^{-bK}; log z = log(bL) - bK
+    logz = jnp.log(tasks.b * L) - tasks.b * K
+    z = jnp.exp(jnp.minimum(logz, 700.0))
+    w = jnp.where(
+        logz > 690.0,
+        # asymptotic W(z) = log z - log log z + log log z / log z  (large z)
+        logz - jnp.log(logz) + jnp.log(logz) / logz,
+        lambertw0(z),
+    )
+    return w / tasks.b + K
+
+
+def project(lengths: Array, l_max: float) -> Array:
+    return jnp.clip(lengths, 0.0, l_max)
+
+
+class FPResult(NamedTuple):
+    lengths: Array
+    iterations: Array
+    residual: Array
+    converged: Array
+
+
+def solve_fixed_point(problem: Problem, l0: Array | None = None,
+                      tol: float = 1e-8, max_iters: int = 500) -> FPResult:
+    """Projected fixed-point iteration (eq 24) via lax.while_loop."""
+    sp = problem.server
+    tasks = problem.tasks
+    if l0 is None:
+        l0 = jnp.zeros(tasks.n_tasks, dtype=jnp.result_type(tasks.A))
+    # iterates must stay in the stability region: L_k(l) < 0 outside it and
+    # the Lambert-W argument leaves its domain
+    l0 = stability_clip(tasks, sp.lam,
+                        project(jnp.asarray(l0, dtype=jnp.result_type(float)), sp.l_max))
+
+    def cond(state):
+        _, it, res = state
+        return jnp.logical_and(it < max_iters, res > tol)
+
+    def body(state):
+        l, it, _ = state
+        l_new = stability_clip(tasks, sp.lam,
+                               project(fixed_point_map(problem, l), sp.l_max))
+        res = jnp.max(jnp.abs(l_new - l))
+        return l_new, it + 1, res
+
+    l, iters, res = jax.lax.while_loop(
+        cond, body, (l0, jnp.asarray(0), jnp.asarray(jnp.inf, dtype=l0.dtype))
+    )
+    return FPResult(lengths=l, iterations=iters, residual=res,
+                    converged=res <= tol)
+
+
+def contraction_certificate(problem: Problem,
+                            stability_margin: float | None = None) -> Array:
+    """L_inf of Lemma 2 (eq 26). L_inf < 1 certifies contraction.
+
+    Paper-faithful form requires the Lemma 2 assumption
+    rho_max = lam E[S]_max < 1 over the whole box — the paper's own Table I
+    instance violates it (rho_max ~ 43 at l_max = 32768), in which case we
+    return +inf ("certificate inapplicable"). Pass ``stability_margin`` to
+    evaluate the same constant over the feasible slab (beyond paper), which
+    is where the projected iterates actually live. Either way this is a
+    *sufficient* condition; the fixed point frequently converges when it
+    fails (1/c_k with c_k ~ 1e-2 makes it loose).
+    """
+    tasks, sp = problem.tasks, problem.server
+    lam = sp.lam
+    wc = worst_case(tasks, lam, sp.l_max, stability_margin)
+    if stability_margin is None and float(wc.rho_max) >= 1.0:
+        return jnp.asarray(jnp.inf)
+    d = 1.0 - wc.rho_max
+    bracket = 1.0 + lam * (wc.t_max / d + lam * wc.es2_max / (2.0 * d ** 2))
+    per_k = bracket / tasks.c + lam / (tasks.b * d)
+    return jnp.max(per_k) * jnp.sum(tasks.pi * tasks.c)
+
+
+def empirical_contraction_estimate(problem: Problem, n_samples: int = 64,
+                                   seed: int = 0,
+                                   margin: float = 5e-2) -> Array:
+    """Beyond paper: sampled sup of ||Jacobian of l_hat||_inf over the slab.
+
+    Motivation: the analytic certificate (eq 26) is *vacuous* — since
+    max_k (1/c_k)[1 + ...] >= 1/min_k c_k and sum_j pi_j c_j >= min_k c_k,
+    L_inf >= 1 + lam(t_max/(1-rho) + ...) > 1 for every instance. The
+    fixed point nonetheless contracts on typical instances; this estimates
+    the actual Lipschitz modulus by sampling jacfwd over feasible points.
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    tasks, sp = problem.tasks, problem.server
+    jac_fn = jax.jacfwd(lambda v: fixed_point_map(problem, v))
+    worst = 0.0
+    n_found = 0
+    while n_found < n_samples:
+        l = rng.uniform(0, min(sp.l_max, 4.0 / np.min(np.asarray(tasks.b))),
+                        size=tasks.n_tasks)
+        lc = stability_clip(tasks, sp.lam, jnp.asarray(l), margin)
+        jac = np.asarray(jac_fn(lc))
+        worst = max(worst, float(np.max(np.sum(np.abs(jac), axis=1))))
+        n_found += 1
+    return jnp.asarray(worst)
+
+
+def jacobian_bound_matrix(problem: Problem,
+                          stability_margin: float | None = None) -> Array:
+    """Elementwise bound |d l_hat_k / d l_j| of Lemma 2 (eq 25)."""
+    tasks, sp = problem.tasks, problem.server
+    lam = sp.lam
+    wc = worst_case(tasks, lam, sp.l_max, stability_margin)
+    if stability_margin is None and float(wc.rho_max) >= 1.0:
+        return jnp.full((tasks.n_tasks, tasks.n_tasks), jnp.inf)
+    d = 1.0 - wc.rho_max
+    pjcj = tasks.pi * tasks.c                       # [N] over j
+    bracket = 1.0 + lam * wc.t_max / d + lam ** 2 * wc.es2_max / (2.0 * d ** 2)
+    term1 = (pjcj[None, :] / tasks.c[:, None]) * bracket
+    term2 = lam * pjcj[None, :] / (tasks.b[:, None] * d)
+    return term1 + term2

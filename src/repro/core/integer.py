@@ -1,0 +1,129 @@
+"""Integer projection of the continuous optimum (Sec III-E).
+
+Three policies, ordered by cost/quality:
+
+* ``round_policy``      -- componentwise rounding (eq 40), O(N)
+* ``exhaustive_policy`` -- floor/ceil 2^N search (eq 39), exact over the
+                           floor/ceil lattice cell, vectorized with vmap
+* ``coordinate_policy`` -- beyond-paper: coordinate descent over integers,
+                           scalable to large N, >= rounding by construction
+
+plus the paper's rounding-loss lower bound J_bar(l*) (eq 41), giving the
+sandwich  J(l*) >= J(l_int_opt) >= J(l_int) >= J_bar(l*).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .objective import objective
+from .params import Problem
+from .queueing import service_moments
+
+Array = jnp.ndarray
+
+
+class IntegerResult(NamedTuple):
+    lengths: Array          # integer-valued allocation
+    value: Array            # J at the allocation
+    method: str
+
+
+def round_policy(problem: Problem, l_star: Array) -> IntegerResult:
+    """Componentwise rounding (eq 40), clipped to [0, l_max]."""
+    l_int = jnp.clip(jnp.round(l_star), 0.0, problem.server.l_max)
+    return IntegerResult(l_int, objective(problem, l_int), "round")
+
+
+def exhaustive_policy(problem: Problem, l_star: Array,
+                      max_tasks: int = 20) -> IntegerResult:
+    """Exact floor/ceil search (eq 39) over all 2^N combinations.
+
+    Vectorized: enumerate bit patterns, evaluate J for all candidates at
+    once, reject unstable ones (J = -inf there already), take the argmax.
+    """
+    n = problem.tasks.n_tasks
+    if n > max_tasks:
+        raise ValueError(
+            f"2^{n} exhaustive search refused (> 2^{max_tasks}); "
+            "use coordinate_policy for large N")
+    lo = jnp.clip(jnp.floor(l_star), 0.0, problem.server.l_max)
+    hi = jnp.clip(jnp.ceil(l_star), 0.0, problem.server.l_max)
+    bits = ((jnp.arange(2 ** n)[:, None] >> jnp.arange(n)[None, :]) & 1)
+    cand = jnp.where(bits == 1, hi[None, :], lo[None, :])     # [2^N, N]
+    vals = jax.vmap(lambda l: objective(problem, l))(cand)
+    best = jnp.argmax(vals)
+    return IntegerResult(cand[best], vals[best], "exhaustive")
+
+
+def coordinate_policy(problem: Problem, l_star: Array,
+                      sweeps: int = 4, radius: int = 2) -> IntegerResult:
+    """Beyond-paper integer refinement.
+
+    Starting from the rounded point, sweep coordinates and test integer
+    moves in {-radius..+radius}; J is concave in each coordinate so the
+    1-D integer optimum lies next to the continuous one, but coupling
+    through E[S], E[S^2] can shift neighbours — a few sweeps settle it.
+    Runs on host (numpy): N is small and this is control-plane code.
+    """
+    lmax = float(problem.server.l_max)
+    l = np.clip(np.round(np.asarray(l_star, dtype=np.float64)), 0, lmax)
+    n = l.shape[0]
+    jfun = jax.jit(lambda v: objective(problem, v))
+    best_val = float(jfun(jnp.asarray(l)))
+    deltas = [d for d in range(-radius, radius + 1) if d != 0]
+    for _ in range(sweeps):
+        improved = False
+        for k in range(n):
+            for d in deltas:
+                cand = l.copy()
+                cand[k] = np.clip(cand[k] + d, 0, lmax)
+                if cand[k] == l[k]:
+                    continue
+                v = float(jfun(jnp.asarray(cand)))
+                if v > best_val + 1e-12:
+                    l, best_val, improved = cand, v, True
+        if not improved:
+            break
+    return IntegerResult(jnp.asarray(l), jnp.asarray(best_val), "coordinate")
+
+
+def rounding_lower_bound(problem: Problem, l_star: Array) -> Array:
+    """J_bar(l*), eq (41): lower bound on the utility after rounding.
+
+    Valid under lam (E[S] + c_max) < 1. Accuracy is evaluated at l_k - 1
+    (worst case of rounding down), the wait term at the +c_max-inflated
+    moments (worst case of rounding up).
+    """
+    tasks, sp = problem.tasks, problem.server
+    lam = sp.lam
+    m = service_moments(tasks, l_star, lam)
+    c_max = jnp.max(tasks.c)
+    acc = jnp.sum(tasks.pi * (tasks.A * (1.0 - jnp.exp(-tasks.b * (l_star - 1.0)))
+                              + tasks.D))
+    denom = 1.0 - lam * (m.es + c_max)
+    jbar = (sp.alpha * acc
+            - (lam * m.es2 + 2.0 * c_max) / (2.0 * denom)
+            - m.es)
+    return jnp.where(denom > 0.0, jbar, -jnp.inf)
+
+
+def sandwich(problem: Problem, l_star: Array) -> dict:
+    """The ordering J(l*) >= J(l_int_exh) >= J(l_round) >= ... vs J_bar."""
+    j_star = objective(problem, l_star)
+    exh = exhaustive_policy(problem, l_star)
+    rnd = round_policy(problem, l_star)
+    coord = coordinate_policy(problem, l_star)
+    return {
+        "J_continuous": float(j_star),
+        "J_int_exhaustive": float(exh.value),
+        "J_int_coordinate": float(coord.value),
+        "J_int_round": float(rnd.value),
+        "J_bar_lower_bound": float(rounding_lower_bound(problem, l_star)),
+        "l_exhaustive": np.asarray(exh.lengths),
+        "l_round": np.asarray(rnd.lengths),
+        "l_coordinate": np.asarray(coord.lengths),
+    }

@@ -1,0 +1,64 @@
+"""Principal-branch Lambert-W in pure JAX.
+
+The fixed-point update (eq 22) needs W0(z) for z = b_k L_k exp(-b_k K_k) > 0.
+We implement W0 for z >= 0 (the only regime the solver touches, since
+L_k > 0 on the stability region) with a log-based initial guess followed by
+a fixed number of Halley iterations, which is jit/vmap/grad friendly.
+
+For very large z (the paper's instances produce z up to ~exp(b*|K|), easily
+1e100+), exp(w) overflows; we therefore iterate on the *residual in log
+space*: f(w) = w + log(w) - log(z), whose Newton step is
+    w <- w * (1 + (log(z) - w - log(w)) / (1 + w)),
+numerically stable for all z > 0 once w > 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_NEWTON_ITERS = 40
+
+
+@jax.custom_jvp
+def lambertw0(z: Array) -> Array:
+    """Principal branch W0(z) for z >= 0 (elementwise)."""
+    z = jnp.asarray(z)
+    if not jnp.issubdtype(z.dtype, jnp.floating):
+        z = z.astype(jnp.result_type(float))
+    eps = jnp.finfo(z.dtype).tiny
+    logz = jnp.log(jnp.maximum(z, eps))
+
+    # Initial guess: series for small z, log(1+z) mid-range (exact enough to
+    # seed Newton anywhere in [0.3, ~20]), asymptotic log z - log log z for
+    # large z (where log log z is well defined).
+    w_small = z * (1.0 - z)             # series around 0
+    w_mid = jnp.log1p(z)
+    w_big = logz - jnp.log(jnp.maximum(logz, 1.0))
+    w = jnp.where(z < 0.3, jnp.maximum(w_small, 0.0),
+                  jnp.where(z < 20.0, w_mid, w_big))
+
+    def body(w, _):
+        # Newton on f(w) = w + log w - log z (valid for w > 0).
+        # For w <= small, fall back to the direct form w e^w - z.
+        safe_w = jnp.maximum(w, eps)
+        step_log = safe_w * (logz - safe_w - jnp.log(safe_w)) / (1.0 + safe_w)
+        ew = jnp.exp(jnp.minimum(w, 50.0))
+        step_direct = -(w * ew - z) / jnp.maximum(ew * (1.0 + w), eps)
+        step = jnp.where(w > 1e-3, step_log, step_direct)
+        # W(z) > 0 for z > 0: clamp so a bad step can never exit the domain
+        return jnp.maximum(w + step, 0.0), None
+
+    w, _ = jax.lax.scan(body, w, None, length=_NEWTON_ITERS)
+    return jnp.where(z == 0.0, jnp.zeros_like(w), w)
+
+
+@lambertw0.defjvp
+def _lambertw0_jvp(primals, tangents):
+    (z,), (zdot,) = primals, tangents
+    w = lambertw0(z)
+    # W'(z) = W / (z (1 + W)); at z -> 0, W'(0) = 1.
+    deriv = jnp.where(z > 0.0, w / (jnp.asarray(z) * (1.0 + w)),
+                      jnp.ones_like(w))
+    return w, deriv * zdot

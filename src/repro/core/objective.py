@@ -1,0 +1,106 @@
+"""The system objective J(l) (eq 7), its analytic gradient and Hessian.
+
+J(l) = alpha * sum_k pi_k p_k(l_k)  -  lam E[S^2] / (2 (1 - lam E[S]))  -  E[S]
+
+On the stability region {l : lam E[S(l)] < 1} the objective is strictly
+concave (Lemma 1); outside it we return -inf so that line searches and
+rounding searches automatically reject unstable points.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .params import Problem
+from .queueing import service_moments, worst_case
+
+Array = jnp.ndarray
+
+
+def objective(problem: Problem, lengths: Array) -> Array:
+    """J(l), eq (7); -inf outside the stability region."""
+    tasks, sp = problem.tasks, problem.server
+    m = service_moments(tasks, lengths, sp.lam)
+    acc = jnp.sum(tasks.pi * tasks.accuracy(lengths))
+    wait = sp.lam * m.es2 / (2.0 * m.slack)
+    j = sp.alpha * acc - wait - m.es
+    return jnp.where(m.slack > 0.0, j, -jnp.inf)
+
+
+def mean_wait_grad(problem: Problem, lengths: Array) -> Array:
+    """dE[W]/dl_k, eq (10)."""
+    tasks, sp = problem.tasks, problem.server
+    m = service_moments(tasks, lengths, sp.lam)
+    t = tasks.service_time(lengths)
+    return sp.lam * tasks.pi * tasks.c * (
+        t / m.slack + sp.lam * m.es2 / (2.0 * m.slack ** 2)
+    )
+
+
+def grad(problem: Problem, lengths: Array) -> Array:
+    """Analytic gradient of J (accuracy term eq 15 minus eq 10 minus pi_k c_k)."""
+    tasks, sp = problem.tasks, problem.server
+    acc_grad = sp.alpha * tasks.pi * tasks.A * tasks.b * jnp.exp(-tasks.b * lengths)
+    return acc_grad - mean_wait_grad(problem, lengths) - tasks.pi * tasks.c
+
+
+def hessian(problem: Problem, lengths: Array) -> Array:
+    """Analytic Hessian of J: -(eq 34) plus the accuracy diagonal (eq 33)."""
+    tasks, sp = problem.tasks, problem.server
+    lam = sp.lam
+    m = service_moments(tasks, lengths, lam)
+    t = tasks.service_time(lengths)
+    pc = tasks.pi * tasks.c                      # [N]
+    d = m.slack
+    # System-time Hessian (eq 34): positive definite on the stability region.
+    sys_h = (
+        lam * jnp.diag(tasks.pi * tasks.c ** 2) / d
+        + lam ** 2 * jnp.outer(pc, pc) * (t[:, None] + t[None, :]) / d ** 2
+        + lam ** 3 * jnp.outer(pc, pc) * m.es2 / d ** 3
+    )
+    acc_h = jnp.diag(
+        -sp.alpha * tasks.pi * tasks.A * tasks.b ** 2 * jnp.exp(-tasks.b * lengths)
+    )
+    return acc_h - sys_h
+
+
+def hessian_bound_matrix(problem: Problem,
+                         stability_margin: float | None = None) -> Array:
+    """H_kj of Lemma 3 (eq 31): elementwise bound on |d2 J / dl_k dl_j|.
+
+    Paper-faithful form (``stability_margin=None``) requires rho_max < 1
+    over the whole box; otherwise returns +inf (assumption violated).
+    Pass a margin to bound over the feasible slab instead (see
+    :func:`repro.core.queueing.worst_case`).
+    """
+    tasks, sp = problem.tasks, problem.server
+    lam = sp.lam
+    wc = worst_case(tasks, lam, sp.l_max, stability_margin)
+    d = 1.0 - wc.rho_max
+    if stability_margin is None and float(wc.rho_max) >= 1.0:
+        return jnp.full((tasks.n_tasks, tasks.n_tasks), jnp.inf)
+    pc = tasks.pi * tasks.c
+    h = (
+        lam * jnp.diag(tasks.pi * tasks.c ** 2) / d
+        + lam ** 2 * jnp.outer(pc, pc)
+        * (wc.t_max_k[:, None] + wc.t_max_k[None, :]) / d ** 2
+        + lam ** 3 * jnp.outer(pc, pc) * wc.es2_max / d ** 3
+        + jnp.diag(sp.alpha * tasks.pi * tasks.A * tasks.b ** 2)
+    )
+    return h
+
+
+def lipschitz_grad_bound(problem: Problem,
+                         stability_margin: float | None = None) -> Array:
+    """L_J = max_k sum_j H_kj (eq 32): global Lipschitz constant of grad J.
+
+    +inf when the Lemma 3 assumption rho_max < 1 fails and no
+    ``stability_margin`` is supplied.
+    """
+    h = hessian_bound_matrix(problem, stability_margin)
+    return jnp.max(jnp.sum(h, axis=1))
+
+
+def grad_autodiff(problem: Problem, lengths: Array) -> Array:
+    """jax.grad of J -- used in tests to cross-check the analytic gradient."""
+    return jax.grad(lambda l: objective(problem, l))(lengths)

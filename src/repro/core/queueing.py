@@ -1,0 +1,124 @@
+"""M/G/1 queueing quantities for the token-allocation problem (Sec II-A).
+
+The service time S takes value t_k(l_k) with probability pi_k; the server is
+an M/G/1 FIFO queue. Mean waiting time is Pollaczek-Khinchine (eq 5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .params import Problem, TaskSet
+
+Array = jnp.ndarray
+
+
+class Moments(NamedTuple):
+    es: Array      # E[S]      (eq 3)
+    es2: Array     # E[S^2]    (eq 3)
+    rho: Array     # lam * E[S]
+    slack: Array   # D = 1 - lam * E[S]
+
+
+def service_moments(tasks: TaskSet, lengths: Array, lam: float) -> Moments:
+    t = tasks.service_time(lengths)
+    es = jnp.sum(tasks.pi * t)
+    es2 = jnp.sum(tasks.pi * t * t)
+    rho = lam * es
+    return Moments(es=es, es2=es2, rho=rho, slack=1.0 - rho)
+
+
+def mean_wait(m: Moments, lam: float) -> Array:
+    """Pollaczek-Khinchine mean queueing delay E[W] (eq 5)."""
+    return lam * m.es2 / (2.0 * m.slack)
+
+
+def mean_system_time(m: Moments, lam: float) -> Array:
+    """E[T_sys] = E[W] + E[S] (eq 6)."""
+    return mean_wait(m, lam) + m.es
+
+
+def is_stable(tasks: TaskSet, lengths: Array, lam: float,
+              margin: float = 0.0) -> Array:
+    return service_moments(tasks, lengths, lam).rho < 1.0 - margin
+
+
+class WorstCase(NamedTuple):
+    """Worst-case (l = l_max everywhere) quantities used by Lemmas 2-3."""
+
+    t_max_k: Array      # t_k^max = t0_k + c_k l_max, per task
+    t_max: Array        # max_k t_k^max
+    es_max: Array       # E[S]_max
+    es2_max: Array      # E[S^2]_max
+    rho_max: Array      # lam * E[S]_max
+
+
+def worst_case(tasks: TaskSet, lam: float, l_max: float,
+               stability_margin: float | None = None) -> WorstCase:
+    """Worst-case moments over the box [0, l_max]^N (Lemmas 2-3).
+
+    The paper's Lemmas 2-3 assume rho_max = lam E[S]_max < 1, i.e. the whole
+    box sits inside the stability region. When it does not (the paper's own
+    Table I instance violates it: rho_max ~ 43 at l_max = 32768), pass
+    ``stability_margin`` to restrict the box to the *feasible slab*
+    {l : lam E[S(l)] <= 1 - margin}, over which the same formulas hold with
+
+        t_k^max  <- t0_k + c_k min(l_max, lbar_k)   (all slack spent on k)
+        E[S]_max <- (1 - margin) / lam
+        E[S2]_max <- sum_k pi_k (t_k^max)^2
+
+    The projected solvers keep their iterates inside this slab
+    (``_stability_clip``), so the restricted constants certify them.
+    """
+    t_box_k = tasks.t0 + tasks.c * l_max
+    if stability_margin is None:
+        t_max_k = t_box_k
+        es_max = jnp.sum(tasks.pi * t_max_k)
+        es2_max = jnp.sum(tasks.pi * t_max_k * t_max_k)
+        rho_max = lam * es_max
+    else:
+        es0 = jnp.sum(tasks.pi * tasks.t0)
+        slack = (1.0 - stability_margin) / lam - es0  # budget for pi c l
+        # spending all slack on task k: pi_k c_k lbar_k = slack
+        lbar_k = jnp.maximum(slack, 0.0) / (tasks.pi * tasks.c)
+        t_max_k = tasks.t0 + tasks.c * jnp.minimum(l_max, lbar_k)
+        es_max = jnp.minimum(jnp.sum(tasks.pi * t_box_k),
+                             (1.0 - stability_margin) / lam)
+        es2_max = jnp.sum(tasks.pi * t_max_k * t_max_k)
+        rho_max = lam * es_max
+    return WorstCase(
+        t_max_k=t_max_k,
+        t_max=jnp.max(t_max_k),
+        es_max=es_max,
+        es2_max=es2_max,
+        rho_max=rho_max,
+    )
+
+
+def stability_clip(tasks: TaskSet, lam: float, lengths: Array,
+                   margin: float = 1e-6) -> Array:
+    """Scale l toward 0 so that lam E[S(l)] <= 1 - margin.
+
+    E[S] is affine in l, so scaling the vector by s in [0, 1] moves rho
+    affinely between rho(0) < 1 and rho(l); solve for the s achieving
+    rho = 1 - margin. Identity for already-stable points.
+    """
+    rho0 = lam * jnp.sum(tasks.pi * tasks.t0)
+    rho = service_moments(tasks, lengths, lam).rho
+    s = jnp.where(rho >= 1.0 - margin,
+                  (1.0 - margin - rho0) / jnp.maximum(rho - rho0, 1e-30),
+                  1.0)
+    return lengths * jnp.clip(s, 0.0, 1.0)
+
+
+def max_stable_budget(problem: Problem, margin: float = 1e-3) -> float:
+    """Largest uniform budget keeping the queue stable (diagnostic).
+
+    Solves lam * sum_k pi_k (t0_k + c_k l) = 1 - margin for l.
+    """
+    tasks, lam = problem.tasks, problem.server.lam
+    es0 = float(jnp.sum(tasks.pi * tasks.t0))
+    cbar = float(jnp.sum(tasks.pi * tasks.c))
+    l = ((1.0 - margin) / lam - es0) / cbar
+    return max(0.0, min(l, problem.server.l_max))

@@ -1,0 +1,6 @@
+"""Data pipeline: synthetic token streams shared with the serving workload."""
+from .synthetic import DataConfig, SyntheticTokens
+from .tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
+
+__all__ = ["DataConfig", "SyntheticTokens", "ByteTokenizer",
+           "PAD_ID", "BOS_ID", "EOS_ID"]

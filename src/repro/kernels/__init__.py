@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the serving hot spots, with jnp oracles.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a wrapper in ops.py,
+and an oracle in ref.py. On CPU the kernels execute in interpret mode.
+"""
+from .ops import (decode_attention, flash_attention, fused_ffn, rwkv6_scan,
+                  ssd_scan)
+
+__all__ = ["flash_attention", "decode_attention", "ssd_scan", "rwkv6_scan",
+           "fused_ffn"]

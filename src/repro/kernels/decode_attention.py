@@ -1,0 +1,95 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+The serving hot spot for decode_32k / long_500k: a single new token attends
+to a cache of C past positions. This is HBM-bandwidth-bound (the whole cache
+streams through once per step), so the kernel's job is to keep the VMEM
+working set small and the stream contiguous: the cache is blocked along C
+(innermost sequential grid dim) with online-softmax state in VMEM scratch,
+and all G query heads of a KV head share each cache block load (GQA fold —
+one cache read amortized over G heads, the key roofline lever when kv heads
+are few, e.g. starcoder2's kv=2).
+
+Layouts:
+    q:     [Bkv, G, hd]
+    k, v:  [Bkv, C, hd]
+    valid: [Bkv, C]  bool (masks ring-buffer slots / unfilled capacity)
+    out:   [Bkv, G, hd]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_C = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            n_blocks: int, sm_scale: float):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                   # [G, hd]
+    k = k_ref[0]                                   # [bc, hd]
+    v = v_ref[0]
+    ok = valid_ref[0]                              # [bc]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(ok[None, :], s, NEG_INF)         # [G, bc]
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(cj == n_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def decode_attention(q, k, v, valid, *, block_c: int = DEFAULT_BLOCK_C,
+                     interpret: bool = False):
+    """q [Bkv,G,hd]; k,v [Bkv,C,hd]; valid [Bkv,C] -> [Bkv,G,hd]."""
+    Bkv, G, hd = q.shape
+    C = k.shape[1]
+    block_c = min(block_c, C)
+    assert C % block_c == 0
+    nb = C // block_c
+    kernel = functools.partial(_kernel, n_blocks=nb,
+                               sm_scale=1.0 / (hd ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=(Bkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_c, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_c, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_c), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, valid)

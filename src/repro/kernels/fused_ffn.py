@@ -1,0 +1,81 @@
+"""Pallas TPU fused SwiGLU FFN, batched over experts.
+
+Computes y = (silu(x Wg) * (x Wu)) Wd in ONE pass: the [rows, d_ff]
+intermediate never round-trips to HBM (on TPU this saves 2 * rows * d_ff
+* bytes of HBM traffic per layer — the dominant cost of the unfused form
+at large d_ff). The d_ff dimension is the innermost sequential grid axis;
+partial down-projections accumulate in a VMEM f32 scratch.
+
+Used for MoE experts ([E, cap, d] capacity layout) and, with E = 1, the
+dense MLP.
+
+Layouts:
+    x  [E, T, d]
+    wg, wu [E, d, f]
+    wd [E, f, d]
+    y  [E, T, d]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_T = 128
+DEFAULT_BLOCK_F = 512
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, y_ref, acc_ref, *,
+            n_f_blocks: int):
+    fj = pl.program_id(2)
+
+    @pl.when(fj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # [bt, d]
+    g = jax.lax.dot_general(x, wg_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, wu_ref[0], (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)       # [bt, bf]
+    acc_ref[...] += jax.lax.dot_general(
+        h, wd_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(fj == n_f_blocks - 1)
+    def _final():
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f",
+                                             "interpret"))
+def fused_ffn(x, wg, wu, wd, *, block_t: int = DEFAULT_BLOCK_T,
+              block_f: int = DEFAULT_BLOCK_F, interpret: bool = False):
+    """x [E,T,d]; wg,wu [E,d,f]; wd [E,f,d] -> y [E,T,d]."""
+    E, T, d = x.shape
+    f = wg.shape[-1]
+    block_t = min(block_t, T)
+    block_f = min(block_f, f)
+    assert T % block_t == 0 and f % block_f == 0
+    nt, nf = T // block_t, f // block_f
+    kernel = functools.partial(_kernel, n_f_blocks=nf)
+    return pl.pallas_call(
+        kernel,
+        grid=(E, nt, nf),
+        in_specs=[
+            pl.BlockSpec((1, block_t, d), lambda e, i, j: (e, i, 0)),
+            pl.BlockSpec((1, d, block_f), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, d, block_f), lambda e, i, j: (e, 0, j)),
+            pl.BlockSpec((1, block_f, d), lambda e, i, j: (e, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, d), lambda e, i, j: (e, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, T, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, wg, wu, wd)

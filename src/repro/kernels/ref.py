@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Shapes use BH = batch * heads flattened leading dim unless noted.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array,
+                        causal: bool = True,
+                        window: int | None = None) -> Array:
+    """q,k,v [BH, S, hd] (kv already broadcast to query heads)."""
+    S = q.shape[1]
+    hd = q.shape[-1]
+    s = jnp.einsum("bqh,bkh->bqk", q, k).astype(jnp.float32) / (hd ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bqk,bkh->bqh", w, v)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array,
+                         valid: Array) -> Array:
+    """q [BH, G, hd]; k,v [BH, C, hd]; valid [BH, C] bool -> [BH, G, hd]."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bgh,bch->bgc", q, k).astype(jnp.float32) / (hd ** 0.5)
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgc,bch->bgh", w, v)
+
+
+def ssd_scan_ref(x: Array, dt: Array, a: Array, Bm: Array, Cm: Array,
+                 s0: Array | None = None):
+    """Sequential Mamba2 SSD oracle.
+
+    x [BH,S,hd], dt [BH,S], a [BH,S] log-decay (= A*dt, < 0),
+    Bm/Cm [BH,S,ds]. Returns (y [BH,S,hd], s_final [BH,hd,ds]).
+    """
+    BH, S, hd = x.shape
+    ds = Bm.shape[-1]
+    if s0 is None:
+        s0 = jnp.zeros((BH, hd, ds), jnp.float32)
+
+    def step(s, inp):
+        xt, dtt, at, bt, ct = inp
+        s = jnp.exp(at)[:, None, None] * s + \
+            dtt[:, None, None] * jnp.einsum("bh,bs->bhs", xt, bt)
+        y = jnp.einsum("bs,bhs->bh", ct, s)
+        return s, y
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2), dt.transpose(1, 0),
+          a.transpose(1, 0), Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2))
+    sf, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), sf
+
+
+def rwkv_scan_ref(r: Array, k: Array, v: Array, la: Array, u: Array,
+                  s0: Array | None = None):
+    """Sequential RWKV6 wkv oracle.
+
+    r,k,v,la [BH,S,hd] (la log decay < 0), u [BH,hd].
+    y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T); S_t = diag(w_t) S_{t-1} + k_t v_t^T.
+    Returns (y [BH,S,hd], s_final [BH,hd,hd]).
+    """
+    BH, S, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((BH, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, lat = inp
+        kv = jnp.einsum("bt,bu->btu", kt, vt)
+        y = jnp.einsum("bt,btu->bu", rt, s + u[:, :, None] * kv)
+        s = jnp.exp(lat)[:, :, None] * s + kv
+        return s, y
+
+    xs = tuple(t.astype(jnp.float32).transpose(1, 0, 2)
+               for t in (r, k, v, la))
+    sf, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(r.dtype), sf
+
+
+def fused_ffn_ref(x: Array, wg: Array, wu: Array, wd: Array) -> Array:
+    """Batched SwiGLU FFN oracle. x [E,T,d]; wg,wu [E,d,f]; wd [E,f,d]."""
+    g = jnp.einsum("etd,edf->etf", x, wg)
+    u = jnp.einsum("etd,edf->etf", x, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("etf,efd->etd", h, wd)
+
+
+def grouped_ffn_ref(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+                    group_sizes: Array) -> Array:
+    """Grouped (per-expert) SwiGLU FFN oracle for the MoE kernel.
+
+    x [T, d] sorted by expert; w_* [E, ...]; group_sizes [E] sums to T.
+    """
+    T, d = x.shape
+    E = w_gate.shape[0]
+    bounds = jnp.cumsum(group_sizes)
+    eid = jnp.searchsorted(bounds, jnp.arange(T), side="right")
+    g = jnp.einsum("td,tdf->tf", x, w_gate[eid])
+    uu = jnp.einsum("td,tdf->tf", x, w_up[eid])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * uu
+    return jnp.einsum("tf,tfd->td", h, w_down[eid])

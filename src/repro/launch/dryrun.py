@@ -1,0 +1,299 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count at first initialization, and the dry-run (and only
+the dry-run) needs 512 placeholder host devices for the production meshes.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k --mesh pod --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Emits one JSON per combo with memory_analysis, cost_analysis, collective
+bytes (parsed from the partitioned HLO), and the roofline terms.
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import dataclasses as _dc  # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                    # noqa: E402
+from repro.launch.mesh import make_production_mesh                # noqa: E402
+from repro.launch.shapes import (SHAPES, adapt_config, input_specs,  # noqa: E402
+                                 params_specs_for, train_state_specs)
+from repro.launch.steps import (make_prefill_step, make_serve_step,  # noqa: E402
+                                make_train_step_fn)
+from repro.roofline.analysis import analyze                       # noqa: E402
+from repro.sharding.context import use_mesh                       # noqa: E402
+from repro.sharding.partition import ShardingOptions              # noqa: E402
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                opts: ShardingOptions = ShardingOptions(),
+                want_hlo: bool = True, overrides: dict | None = None):
+    """Full-depth scanned lowering: proves the (arch x shape x mesh) combo
+    lowers, compiles, and fits per-device memory. (Roofline terms come from
+    roofline_combo — scanned loop bodies are cost-counted once by XLA.)"""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = adapt_config(cfg, shape)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cost, hlo, mem, (t_lower, t_compile) = _lower_and_cost(
+        cfg, shape, mesh, opts)
+    roof = analyze(cost, hlo if want_hlo else "", cfg, shape, mesh.size)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": mesh.size,
+        "mode": "full-scanned",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "collectives_scanned": roof.collectives,
+        "options": dataclasses.asdict(opts),
+        "ok": True,
+    }
+
+
+def _lower_and_cost(cfg, shape, mesh, opts, microbatch=None):
+    """Lower + compile one config variant; return (cost, hlo, mem, times)."""
+    t0 = time.time()
+    with use_mesh(mesh, opts), mesh:
+        if shape.kind == "train":
+            state_sds, _ = train_state_specs(cfg, mesh, opts)
+            spec = input_specs(cfg, shape, mesh, opts)
+            step = make_train_step_fn(cfg, microbatch=microbatch)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(
+                state_sds, spec["batch"])
+        elif shape.kind == "prefill":
+            p_sds, _ = params_specs_for(cfg, mesh, opts)
+            spec = input_specs(cfg, shape, mesh, opts)
+            step = make_prefill_step(cfg)
+            args = [p_sds, spec["tokens"]]
+            if "prefix_embeds" in spec:
+                args.append(spec["prefix_embeds"])
+            lowered = jax.jit(step).lower(*args)
+        else:
+            p_sds, _ = params_specs_for(cfg, mesh, opts)
+            spec = input_specs(cfg, shape, mesh, opts)
+            step = make_serve_step(cfg)
+            lowered = jax.jit(step, donate_argnums=(2,)).lower(
+                p_sds, spec["token"], spec["cache"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return cost, compiled.as_text(), _mem_dict(compiled), (t_lower, t_compile)
+
+
+def _depth_points(cfg):
+    """Two (or three) reduced depths for the affine cost extrapolation."""
+    if cfg.has_shared_attn:
+        g = cfg.attn_every
+        rem = cfg.n_layers % g
+        pts = [g, 2 * g]
+        if rem:
+            pts.append(g + rem)
+        return pts
+    return [2, 4]
+
+
+def roofline_combo(arch: str, shape_name: str,
+                   opts: ShardingOptions = ShardingOptions(),
+                   multi_pod: bool = False, overrides: dict | None = None,
+                   mesh_shape: tuple | None = None):
+    """Roofline terms via depth extrapolation.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE, so the scanned
+    full-depth lowering underreports FLOPs/bytes/collectives by ~n_layers.
+    Instead we lower shallow UNROLLED variants at two depths; every cost
+    component is exactly affine in depth (R + L*B: embeddings/head/optimizer
+    constants + per-layer body), so two points extrapolate exactly to the
+    production depth. Hybrid stacks use group-count points (+ a remainder
+    point).
+    """
+    from repro.roofline.analysis import (analyze, parse_collective_bytes)
+
+    base = get_config(arch)
+    shape = SHAPES[shape_name]
+    base = adapt_config(base, shape)
+    if overrides:
+        base = _dc.replace(base, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod,
+                                shape_override=mesh_shape)
+    pts = _depth_points(base)
+    t0 = time.time()
+
+    meas = {}
+    compile_s = 0.0
+    for L in pts:
+        cfg_l = _dc.replace(base, n_layers=L, unroll_layers=True)
+        cost, hlo, _, (tl, tc) = _lower_and_cost(cfg_l, shape, mesh, opts)
+        coll = parse_collective_bytes(hlo)
+        meas[L] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll["total"]),
+            "counts": coll["counts"],
+        }
+        compile_s += tl + tc
+
+    L1, L2 = pts[0], pts[1]
+    full = {}
+    if base.has_shared_attn:
+        g = base.attn_every
+        n_groups = base.n_layers // g
+        rem = base.n_layers % g
+        for key in ("flops", "bytes", "coll"):
+            body = (meas[L2][key] - meas[L1][key])        # per group
+            const = meas[L1][key] - body                   # embeds + head
+            total = const + n_groups * body
+            if rem:
+                rem_cost = meas[g + rem][key] - meas[g][key]
+                total += rem_cost
+            full[key] = total
+    else:
+        for key in ("flops", "bytes", "coll"):
+            body = (meas[L2][key] - meas[L1][key]) / (L2 - L1)
+            const = meas[L1][key] - L1 * body
+            full[key] = const + base.n_layers * body
+
+    cost_full = {"flops": full["flops"], "bytes accessed": full["bytes"]}
+    roof = analyze(cost_full, "", base, shape, mesh.size)
+    # patch in the extrapolated collective term (analyze parsed empty hlo)
+    from repro.roofline.analysis import ICI_BW
+    roof.collective_bytes_per_device = full["coll"]
+    roof.collective_s = full["coll"] / ICI_BW
+    terms = {"compute": roof.compute_s, "memory": roof.memory_s,
+             "collective": roof.collective_s}
+    roof.bottleneck = max(terms, key=terms.get)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": mesh.size,
+        "mode": "roofline-extrapolated",
+        "depth_points": pts,
+        "measurements": meas,
+        "roofline": roof.as_dict(),
+        "compile_s": round(compile_s, 2),
+        "options": dataclasses.asdict(opts),
+        "ok": True,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--seq-sharded-cache", action="store_true")
+    ap.add_argument("--zero-optimizer", action="store_true")
+    ap.add_argument("--roofline", action="store_true",
+                    help="depth-extrapolated roofline pass instead of the "
+                         "full-depth scanned lower+compile")
+    ap.add_argument("--kv-repeat", type=int, default=None,
+                    help="KV-head replication factor (perf variant)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="logical pod reshape, e.g. 32,8 (perf variant)")
+    ap.add_argument("--kv-cache-dtype", default=None,
+                    choices=("model", "int8"),
+                    help="decode cache storage dtype (perf variant)")
+    ap.add_argument("--microbatch", type=int, default=None,
+                    help="grad-accumulation microbatch (perf variant)")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    opts = ShardingOptions(expert_parallel=args.expert_parallel,
+                           seq_sharded_cache=args.seq_sharded_cache,
+                           zero_optimizer=args.zero_optimizer)
+
+    archs = ARCH_IDS if args.all or args.arch is None else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or args.shape is None \
+        else (args.shape,)
+    meshes = {"pod": (False,), "multipod": (True,),
+              "both": (False, True)}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mode = "roofline" if args.roofline else "dryrun"
+                tag = f"{arch}__{shape_name}__" \
+                      f"{'multipod' if multi_pod else 'pod'}__{mode}" \
+                      + (f"__{args.tag}" if args.tag else "")
+                path = outdir / f"{tag}.json"
+                if path.exists():
+                    print(f"[skip] {tag} (cached)")
+                    continue
+                print(f"[run ] {tag}", flush=True)
+                overrides = {}
+                if args.kv_repeat:
+                    overrides["kv_repeat"] = args.kv_repeat
+                if args.kv_cache_dtype:
+                    overrides["kv_cache_dtype"] = args.kv_cache_dtype
+                try:
+                    if args.roofline:
+                        ms = tuple(int(x) for x in args.mesh_shape.split(",")) \
+                            if args.mesh_shape else None
+                        res = roofline_combo(arch, shape_name, opts,
+                                             multi_pod=multi_pod,
+                                             overrides=overrides or None,
+                                             mesh_shape=ms)
+                        extra = f"bottleneck={res['roofline']['bottleneck']}"
+                    else:
+                        res = lower_combo(arch, shape_name, multi_pod, opts,
+                                          overrides=overrides or None)
+                        tgb = res["memory_analysis"].get(
+                            "temp_size_in_bytes", 0) / 1e9
+                        extra = f"temp={tgb:.1f}GB"
+                    print(f"[ ok ] {tag}: compile={res['compile_s']}s "
+                          f"{extra}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    failures += 1
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "ok": False, "error": repr(e),
+                           "traceback": traceback.format_exc(),
+                           "options": dataclasses.asdict(opts)}
+                    print(f"[FAIL] {tag}: {e!r}", flush=True)
+                path.write_text(json.dumps(res, indent=2))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Assigned input shapes and ShapeDtypeStruct factories for the dry-run.
+
+Four global shapes (assigned with the paper):
+
+    train_4k      seq=4,096    global_batch=256   train_step
+    prefill_32k   seq=32,768   global_batch=32    prefill_step
+    decode_32k    seq=32,768   global_batch=128   serve_step (1 new token)
+    long_500k     seq=524,288  global_batch=1     serve_step (1 new token)
+
+``long_500k`` policy: SSM / hybrid / linear-attention archs run natively
+(O(1) state or native window); full-attention archs run a sliding-window
+variant (window 8192) per the assignment carve-in. ``input_specs`` builds
+weak-type-correct ShapeDtypeStructs with NamedShardings attached — nothing
+is allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import init_decode_cache, init_params
+from ..models.config import ModelConfig
+from ..sharding.partition import (ShardingOptions, cache_shardings,
+                                  param_shardings, token_spec)
+from ..train.optimizer import init_opt_state
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-specific config adaptation (documented in DESIGN.md):
+    long_500k on a full-attention arch -> sliding-window variant."""
+    if shape.name == "long_500k" and cfg.sliding_window is None \
+            and cfg.backbone_kind in ("attn", "moe") and not cfg.has_shared_attn:
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def params_specs_for(cfg: ModelConfig, mesh,
+                     opts: ShardingOptions = ShardingOptions()):
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    shardings = param_shardings(cfg, shapes, mesh, opts)
+    return _sds(shapes, shardings), shardings
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh,
+                opts: ShardingOptions = ShardingOptions()) -> dict:
+    """ShapeDtypeStruct stand-ins (with shardings) for every model input of
+    the given step kind. Returns {"args": ..., "shardings": ...} keyed by
+    the step function's signature."""
+    cfg = adapt_config(cfg, shape)
+    tspec = NamedSharding(mesh, token_spec(mesh, shape.batch))
+    out: dict = {"cfg": cfg}
+    if shape.kind == "train":
+        text = shape.seq - cfg.n_prefix_embeds
+        tokens = jax.ShapeDtypeStruct((shape.batch, text + 1), jnp.int32,
+                                      sharding=tspec)
+        batch = {"tokens": tokens}
+        if cfg.n_prefix_embeds:
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (shape.batch, cfg.n_prefix_embeds, cfg.d_model), cfg.jdtype,
+                sharding=NamedSharding(mesh, token_spec(mesh, shape.batch)))
+        out["batch"] = batch
+    elif shape.kind == "prefill":
+        text = shape.seq - cfg.n_prefix_embeds
+        out["tokens"] = jax.ShapeDtypeStruct((shape.batch, text), jnp.int32,
+                                             sharding=tspec)
+        if cfg.n_prefix_embeds:
+            out["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (shape.batch, cfg.n_prefix_embeds, cfg.d_model), cfg.jdtype,
+                sharding=NamedSharding(mesh, token_spec(mesh, shape.batch)))
+    else:  # decode
+        out["token"] = jax.ShapeDtypeStruct((shape.batch, 1), jnp.int32,
+                                            sharding=tspec)
+        cache_shapes = jax.eval_shape(
+            lambda: init_decode_cache(cfg, shape.batch, shape.seq))
+        cshard = cache_shardings(cfg, cache_shapes, mesh, shape.batch, opts)
+        out["cache"] = _sds(cache_shapes, cshard)
+        out["cache_shardings"] = cshard
+    return out
+
+
+def train_state_specs(cfg: ModelConfig, mesh,
+                      opts: ShardingOptions = ShardingOptions()):
+    """(TrainState ShapeDtypeStructs, TrainState shardings)."""
+    from ..train.trainer import TrainState
+
+    p_sds, p_shard = params_specs_for(cfg, mesh, opts)
+    opt_shapes = jax.eval_shape(init_opt_state, p_sds)
+    if opts.zero_optimizer:
+        # ZeRO-style: shard the first divisible dim of each moment over data
+        def zero_shard(ps, leaf):
+            spec = list(ps.spec) + [None] * (len(leaf.shape) - len(ps.spec))
+            dsize = mesh.shape["data"]
+            for i, (s, dim) in enumerate(zip(spec, leaf.shape)):
+                if s is None and dim % dsize == 0:
+                    spec[i] = "data"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        m_shard = jax.tree.map(zero_shard, p_shard, opt_shapes.m)
+        v_shard = jax.tree.map(zero_shard, p_shard, opt_shapes.v)
+    else:
+        m_shard = p_shard
+        v_shard = jax.tree.map(lambda s: s, p_shard)
+    step_shard = NamedSharding(mesh, P())
+    from ..train.optimizer import OptState
+    opt_shard = OptState(m=m_shard, v=v_shard, step=step_shard)
+    state_sds = TrainState(
+        params=p_sds,
+        opt=OptState(m=_sds(opt_shapes.m, m_shard),
+                     v=_sds(opt_shapes.v, v_shard),
+                     step=jax.ShapeDtypeStruct((), jnp.int32,
+                                               sharding=step_shard)))
+    state_shard = TrainState(params=p_shard, opt=opt_shard)
+    return state_sds, state_shard

@@ -1,0 +1,36 @@
+"""Step functions lowered by the dry-run and used by the drivers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward
+from ..models.config import ModelConfig
+from ..train.optimizer import AdamWConfig
+from ..train.trainer import TrainState, make_train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, prefix_embeds=None):
+        capacity = tokens.shape[1] + (cfg.n_prefix_embeds or 0)
+        out = forward(cfg, params, tokens, prefix_embeds=prefix_embeds,
+                      return_cache=True, cache_capacity=capacity)
+        # serving returns only the next-token logits; the full [B,S,V]
+        # logits tensor is never materialized as an output
+        return out.logits[:, -1:, :], out.cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, token, cache):
+        out = decode_step(cfg, params, token, cache)
+        return out.logits, out.cache
+    return serve_step
+
+
+def make_train_step_fn(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None,
+                       microbatch: Optional[int] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    return make_train_step(cfg, opt_cfg, microbatch=microbatch)

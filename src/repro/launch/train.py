@@ -1,0 +1,78 @@
+"""Training driver.
+
+Runs real training on whatever devices exist (CPU debug mesh or TPU pod).
+For production meshes use the same flags as dryrun.py; on this CPU
+container use --debug-mesh or single-device with a reduced arch.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --reduced \
+        --steps 200 --batch 8 --seq 64 --ckpt /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokens
+from repro.models import reduced as reduce_cfg
+from repro.train import (AdamWConfig, checkpoint_step, init_train_state,
+                         make_train_step, restore_checkpoint,
+                         save_checkpoint)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config for CPU debug runs")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    cfg.validate()
+
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      batch_size=args.batch))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                          total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      microbatch=args.microbatch))
+
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    start_step = 0
+    if args.ckpt and checkpoint_step(args.ckpt) is not None:
+        start_step = checkpoint_step(args.ckpt)
+        state = restore_checkpoint(args.ckpt, state)
+        print(f"resumed from step {start_step}")
+
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {"tokens": jnp.asarray(data.batch(step)["tokens"])}
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} [{dt:.1f}s]", flush=True)
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, state, step=step + 1)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, state, step=args.steps)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

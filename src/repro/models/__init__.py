@@ -1,0 +1,9 @@
+"""Model zoo: dense GQA, fine-grained MoE, Mamba2, RWKV6, hybrid, VLM/audio."""
+from .config import ModelConfig, MoEConfig, RWKVConfig, SSMConfig, reduced
+from .transformer import (ModelOutput, decode_step, forward,
+                          init_decode_cache, init_params)
+from .sampling import sample
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "RWKVConfig", "reduced",
+           "init_params", "forward", "decode_step", "init_decode_cache",
+           "ModelOutput", "sample"]

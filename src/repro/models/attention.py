@@ -1,0 +1,255 @@
+"""GQA attention: RoPE, optional qk-norm, sliding window, KV cache decode.
+
+Three entry points:
+  * ``attn_forward``  — full-sequence causal attention (train / prefill);
+    returns the KV tensors so prefill can seed a decode cache.
+  * ``attn_decode``   — single-token step against a fixed-size KV cache
+    (dense cache for full attention; ring buffer when sliding_window is
+    set, which keeps long_500k memory O(window) instead of O(seq)).
+
+The pure-jnp path here is the reference and the dry-run/roofline path (XLA
+cost analysis reads it); the Pallas kernels in ``repro.kernels`` implement
+the same math for TPU execution and are validated against these.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _he, apply_rope, rope_freqs
+
+Array = jnp.ndarray
+
+
+class KVCache(NamedTuple):
+    k: Array          # [B, C, n_kv, hd]  (C = cache capacity)
+    v: Array          # [B, C, n_kv, hd]
+    length: Array     # scalar int32: number of valid positions (global pos)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache: symmetric absmax quantization per (position, head)."""
+
+    k: Array          # int8 [B, C, n_kv, hd]
+    v: Array          # int8 [B, C, n_kv, hd]
+    k_scale: Array    # f32  [B, C, n_kv]
+    v_scale: Array    # f32  [B, C, n_kv]
+    length: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def _quantize(t: Array):
+    """t [..., hd] -> (int8, scale[...])."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: Array, scale: Array, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)) \
+        .astype(dtype)
+
+
+def init_attn(cfg: ModelConfig, key) -> dict:
+    hd, nh, nkv, d = cfg.hd, cfg.n_heads, cfg.n_kv_eff, cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": _he(ks[0], (d, nh * hd), cfg.jdtype),
+        "wk": _he(ks[1], (d, nkv * hd), cfg.jdtype),
+        "wv": _he(ks[2], (d, nkv * hd), cfg.jdtype),
+        "wo": _he(ks[3], (nh * hd, d), cfg.jdtype),
+    }
+    if cfg.qk_norm:   # Qwen3-style per-head RMS norm on q and k
+        p["q_norm"] = jnp.ones((hd,), cfg.jdtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.jdtype)
+    return p
+
+
+def _qk_rms(x: Array, scale: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: Array, positions: Array):
+    B, S, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_eff
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, nh, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, nkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = _qk_rms(q, p["q_norm"])
+        k = _qk_rms(k, p["k_norm"])
+    cos, sin = rope_freqs(cfg, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array,
+          mask: Array) -> Array:
+    """q [B,S,nh,hd], k/v [B,T,nkv,hd], mask [B or 1, S, T] bool."""
+    B, S, nh, hd = q.shape
+    nkv = k.shape[2]
+    group = nh // nkv
+    qg = q.reshape(B, S, nkv, group, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / (hd ** 0.5)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v).reshape(B, S, nh, hd)
+    return out
+
+
+def causal_mask(cfg: ModelConfig, q_pos: Array, kv_pos: Array) -> Array:
+    """[1, S, T] bool: kv visible to query (causal + optional window)."""
+    m = kv_pos[None, :] <= q_pos[:, None]
+    if cfg.sliding_window is not None:
+        m &= kv_pos[None, :] > q_pos[:, None] - cfg.sliding_window
+    return m[None]
+
+
+def attn_forward(cfg: ModelConfig, p: dict, x: Array,
+                 positions: Optional[Array] = None):
+    """Full-sequence causal attention. x [B,S,d] -> (y [B,S,d], (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if cfg.use_kernels and S % 16 == 0:
+        from ..kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True,
+                                   window=cfg.sliding_window)
+    else:
+        mask = causal_mask(cfg, positions, positions)
+        out = _sdpa(cfg, q, k, v, mask)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), p["wo"])
+    return y, (k, v)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               dtype=None) -> KVCache:
+    """Dense cache for full attention; ring buffer (capacity = window) when
+    sliding_window is set."""
+    if cfg.sliding_window is not None:
+        capacity = min(capacity, cfg.sliding_window)
+    dtype = dtype or cfg.jdtype
+    shape = (batch, capacity, cfg.n_kv_eff, cfg.hd)
+    if cfg.kv_cache_dtype == "int8":
+        return QuantKVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32),
+            length=jnp.zeros((), jnp.int32))
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def cache_from_prefill(cfg: ModelConfig, k: Array, v: Array,
+                       capacity: int) -> KVCache:
+    """Seed a decode cache with prefill KV (keeps the trailing window when
+    sliding)."""
+    B, S = k.shape[:2]
+    if cfg.sliding_window is not None:
+        capacity = min(capacity, cfg.sliding_window)
+        w = capacity
+        # place the last w positions at ring slots pos % w
+        idx = (jnp.arange(S - w, S) % w) if S >= w else None
+        kc = jnp.zeros((B, w) + k.shape[2:], k.dtype)
+        vc = jnp.zeros((B, w) + v.shape[2:], v.dtype)
+        if idx is not None:
+            kc = kc.at[:, idx].set(k[:, -w:])
+            vc = vc.at[:, idx].set(v[:, -w:])
+        else:
+            kc = kc.at[:, :S].set(k)
+            vc = vc.at[:, :S].set(v)
+        return _maybe_quantize_cache(
+            cfg, KVCache(k=kc, v=vc, length=jnp.asarray(S, jnp.int32)))
+    pad = capacity - S
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return _maybe_quantize_cache(
+        cfg, KVCache(k=kc, v=vc, length=jnp.asarray(S, jnp.int32)))
+
+
+def _maybe_quantize_cache(cfg: ModelConfig, cache: KVCache):
+    if cfg.kv_cache_dtype != "int8":
+        return cache
+    kq, ks = _quantize(cache.k)
+    vq, vs = _quantize(cache.v)
+    return QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs,
+                        length=cache.length)
+
+
+def attn_decode(cfg: ModelConfig, p: dict, x: Array, cache):
+    """One-token step. x [B,1,d] -> (y [B,1,d], new cache).
+
+    ``cache.length`` may be a scalar (aligned batch; the M/G/1 serving
+    path and the dry-run) or a vector [B] (continuous batching: every slot
+    sits at its own position; writes become per-row scatters and the mask
+    goes per-row).
+    """
+    B = x.shape[0]
+    quant = isinstance(cache, QuantKVCache)
+    pos = cache.length                       # global position of the new token
+    per_row = pos.ndim == 1
+    rope_pos = pos[:, None] if per_row else pos[None]
+    q, k_new, v_new = _project_qkv(cfg, p, x, rope_pos.astype(jnp.int32))
+    C = cache.capacity
+    slot = (pos % C).astype(jnp.int32) if cfg.sliding_window is not None \
+        else pos
+
+    if per_row:
+        rows = jnp.arange(B)
+
+        def put(buf, val):                   # val [B, 1, ...] -> row scatter
+            return buf.at[rows, slot].set(val[:, 0])
+    else:
+        def put(buf, val):
+            start = (0, slot) + (0,) * (buf.ndim - 2)
+            return jax.lax.dynamic_update_slice(buf, val, start)
+
+    if quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        k_int = put(cache.k, kq)
+        v_int = put(cache.v, vq)
+        k_sc = put(cache.k_scale, ks)
+        v_sc = put(cache.v_scale, vs)
+        k = _dequantize(k_int, k_sc, x.dtype)
+        v = _dequantize(v_int, v_sc, x.dtype)
+    else:
+        k = put(cache.k, k_new)
+        v = put(cache.v, v_new)
+
+    slots = jnp.arange(C)
+    pos_b = pos[:, None] if per_row else pos[None, None]      # broadcastable
+    slot_b = slot[:, None] if per_row else slot[None, None]
+    if cfg.sliding_window is not None:
+        # ring buffer: reconstruct global positions per slot
+        kv_pos = jnp.where(slots[None] <= slot_b,
+                           pos_b - slot_b + slots[None],
+                           pos_b - slot_b + slots[None] - C)
+        valid = (kv_pos >= 0) & (kv_pos > pos_b - cfg.sliding_window)
+    else:
+        valid = slots[None] <= pos_b
+    valid = valid.reshape((B if per_row else 1), 1, C)
+    mask = jnp.broadcast_to(valid, (B, 1, C))
+    out = _sdpa(cfg, q, k, v, mask)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), p["wo"])
+    if quant:
+        return y, QuantKVCache(k=k_int, v=v_int, k_scale=k_sc,
+                               v_scale=v_sc, length=pos + 1)
+    return y, KVCache(k=k, v=v, length=pos + 1)

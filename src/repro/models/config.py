@@ -1,0 +1,248 @@
+"""Model configuration covering all assigned architecture families.
+
+One :class:`ModelConfig` describes any of: dense decoder (GQA), fine-grained
+MoE, Mamba2 SSM, RWKV6, hybrid (Mamba2 + periodic shared attention), and the
+VLM/audio variants (backbone + stubbed modality frontend that supplies
+pre-computed patch/frame embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax.numpy as jnp
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+BlockKind = Literal["attn", "moe", "mamba2", "rwkv6"]
+NormKind = Literal["rmsnorm", "layernorm", "nonparametric_ln"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0            # routed experts
+    top_k: int = 0
+    n_shared_experts: int = 0     # always-on experts (DeepSeek-MoE style)
+    d_expert: int = 0             # per-expert FFN hidden size (fine-grained)
+    router_aux_coef: float = 0.01  # load-balance loss coefficient
+    # dispatch implementation:
+    #   capacity -- sort + fixed-capacity [E, C, d] buffers (GShard/Switch
+    #               style, drops overflow tokens). Fixed shapes, clean
+    #               backward; the TPU-idiomatic default.
+    #   ragged   -- dropless grouped matmul via lax.ragged_dot (megablocks
+    #               analogue). Best for inference; its backward materializes
+    #               per-expert dense masks, so avoid for training.
+    #   dense    -- every expert on every token (oracle/fallback).
+    impl: Literal["capacity", "ragged", "dense"] = "capacity"
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64             # Mamba2 SSD state per head
+    d_conv: int = 4               # causal conv width
+    expand: int = 2               # d_inner = expand * d_model
+    head_dim: int = 64            # SSD head dim
+    chunk: int = 128              # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    decay_lora: int = 64          # rank of the data-dependent decay LoRA
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int                  # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+
+    # attention options
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # KV-head replication factor for tensor parallelism (vLLM-style): the
+    # K/V projections are expanded to n_kv_heads*kv_repeat heads so each
+    # model-parallel rank owns whole KV heads and the decode cache never
+    # needs resharding. Checkpoints tie the replicas; costs kv_repeat x KV
+    # cache memory. Set so n_kv_heads*kv_repeat divides the model axis.
+    kv_repeat: int = 1
+    # execute attention/FFN through the Pallas TPU kernels (repro.kernels)
+    # instead of the pure-jnp reference path. On CPU the kernels run in
+    # interpret mode (slow, exact); the jnp path stays the default because
+    # the dry-run/roofline needs XLA-analyzable HLO.
+    use_kernels: bool = False
+    # decode KV cache storage: "model" (= dtype, bf16) or "int8"
+    # (per-(position, head) absmax-scaled symmetric quantization; halves
+    # cache HBM traffic, the dominant decode cost)
+    kv_cache_dtype: str = "model"
+    sliding_window: Optional[int] = None    # None = full attention
+    attn_every: int = 1                     # hybrid: shared attn every k blocks
+
+    # normalization
+    norm: NormKind = "rmsnorm"
+    tie_embeddings: bool = False
+    gated_mlp: bool = True                  # SwiGLU vs GELU MLP
+
+    moe: MoEConfig = MoEConfig()
+    ssm: SSMConfig = SSMConfig()
+    rwkv: RWKVConfig = RWKVConfig()
+
+    # modality stub (vlm/audio): number of prefix embedding positions the
+    # frontend supplies (pre-projected to d_model); 0 = text-only.
+    n_prefix_embeds: int = 0
+
+    dtype: str = "bfloat16"
+    remat: bool = True                      # activation checkpoint per block
+    remat_group: bool = False               # hybrid: checkpoint whole groups
+                                            # (attn_every blocks) rather than
+                                            # single blocks -- fewer saved
+                                            # residuals, more recompute
+    unroll_layers: bool = False             # unroll layer scans (dry-run: XLA
+                                            # cost analysis counts a while
+                                            # body once, so honest roofline
+                                            # numbers need unrolled stacks)
+
+    # citation for where the architecture comes from
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_kv_eff(self) -> int:
+        return self.n_kv_heads * self.kv_repeat
+
+    @property
+    def padded_vocab(self) -> int:
+        """Computation vocab: padded up to a multiple of 128 so the logits
+        dim shards over any mesh axis (granite's 49155 -> 49280). Padded
+        rows are never valid targets; the loss and sampler mask them."""
+        return ((self.vocab_size + 127) // 128) * 128
+
+    @property
+    def block_kinds(self) -> tuple:
+        """Per-layer block kinds. Homogeneous stacks scan; the hybrid stack
+        is a scanned Mamba2 backbone plus ONE shared attention block applied
+        every ``attn_every`` layers (Zamba2-style weight sharing)."""
+        if self.family == "moe":
+            return ("moe",) * self.n_layers
+        if self.family == "ssm":
+            return ("rwkv6",) * self.n_layers if self.arch_id.startswith("rwkv") \
+                else ("mamba2",) * self.n_layers
+        if self.family == "hybrid":
+            return ("mamba2",) * self.n_layers
+        return ("attn",) * self.n_layers
+
+    @property
+    def backbone_kind(self) -> BlockKind:
+        return self.block_kinds[0]
+
+    @property
+    def has_shared_attn(self) -> bool:
+        return self.family == "hybrid"
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        n = 0
+        n += v * d                                    # embed
+        if not self.tie_embeddings:
+            n += v * d                                # lm head
+        kind = self.backbone_kind
+        hd = self.hd
+        if kind == "attn":
+            per = (self.n_heads * hd + 2 * self.n_kv_heads * hd) * d \
+                + self.n_heads * hd * d
+            per += d * self.d_ff * (3 if self.gated_mlp else 2)
+        elif kind == "moe":
+            per = (self.n_heads * hd + 2 * self.n_kv_heads * hd) * d \
+                + self.n_heads * hd * d
+            ne = self.moe.n_experts + self.moe.n_shared_experts
+            per += ne * d * self.moe.d_expert * 3 + d * self.moe.n_experts
+        elif kind == "mamba2":
+            d_in = self.ssm.expand * self.d_model
+            nh = d_in // self.ssm.head_dim
+            per = d * (2 * d_in + 2 * self.ssm.d_state + nh) \
+                + d_in * d + self.ssm.d_conv * (d_in + 2 * self.ssm.d_state)
+        else:  # rwkv6: wr,wk,wv,wg,wo + cr + channel-mix + decay LoRA
+            per = d * d * 6 + d * self.d_ff * 2 + d * self.rwkv.decay_lora * 2
+        n += per * self.n_layers
+        if self.has_shared_attn:
+            n += (self.n_heads * hd + 2 * self.n_kv_heads * hd) * d \
+                + self.n_heads * hd * d + d * self.d_ff * 3
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: shared + top_k routed)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        total = self.param_count()
+        ne, k, sh = self.moe.n_experts, self.moe.top_k, self.moe.n_shared_experts
+        all_expert = (ne + sh) * d * self.moe.d_expert * 3 * self.n_layers
+        active_expert = (k + sh) * d * self.moe.d_expert * 3 * self.n_layers
+        return total - all_expert + active_expert
+
+    def validate(self) -> None:
+        assert self.d_model > 0 and self.n_layers > 0 and self.vocab_size > 0
+        if self.backbone_kind in ("attn", "moe") or self.has_shared_attn:
+            assert self.n_heads > 0 and self.n_kv_heads > 0
+            assert self.n_heads % self.n_kv_heads == 0, "GQA grouping"
+            assert self.n_heads % self.n_kv_eff == 0, \
+                "kv_repeat must keep n_kv_eff a divisor of n_heads"
+        if self.family == "moe":
+            assert self.moe.n_experts > 0 and self.moe.top_k > 0
+            assert self.moe.top_k <= self.moe.n_experts
+        if self.family in ("vlm", "audio"):
+            assert self.n_prefix_embeds > 0, "modality stub needs prefix slots"
+
+
+def reduced(cfg: ModelConfig, n_layers: int = 2, d_model: int = 256,
+            n_experts: int = 4) -> ModelConfig:
+    """CPU-smoke-test variant of the same family (spec: 2 layers,
+    d_model <= 512, <= 4 experts)."""
+    scale = d_model / cfg.d_model
+    n_heads = max(1, min(cfg.n_heads, 4))
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads))
+    while n_heads % n_kv:
+        n_kv -= 1
+    moe = cfg.moe
+    if cfg.family == "moe":
+        moe = dataclasses.replace(
+            moe, n_experts=min(moe.n_experts, n_experts),
+            top_k=min(moe.top_k, 2),
+            n_shared_experts=min(moe.n_shared_experts, 1),
+            d_expert=max(32, int(moe.d_expert * scale)),
+            capacity_factor=8.0)   # smoke tests: effectively dropless
+    ssm = dataclasses.replace(cfg.ssm, d_state=min(cfg.ssm.d_state, 16),
+                              head_dim=32, chunk=32)
+    rwkv = dataclasses.replace(cfg.rwkv, head_dim=32, decay_lora=16)
+    return dataclasses.replace(
+        cfg,
+        arch_id=cfg.arch_id + "-smoke",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=d_model // n_heads,
+        d_ff=max(64, int(cfg.d_ff * scale)),
+        vocab_size=min(cfg.vocab_size, 512),
+        sliding_window=(64 if cfg.sliding_window else None),
+        n_prefix_embeds=min(cfg.n_prefix_embeds, 8),
+        moe=moe, ssm=ssm, rwkv=rwkv,
+        dtype="float32",
+        remat=False,
+    )

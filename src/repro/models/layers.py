@@ -1,0 +1,111 @@
+"""Shared layers: norms, embeddings, RoPE, MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Array = jnp.ndarray
+
+
+def _he(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = (2.0 / max(fan_in, 1)) ** 0.5 / 2.0
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, key) -> dict:
+    if cfg.norm == "nonparametric_ln":     # OLMo: no learned affine
+        return {}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), cfg.jdtype),
+                "bias": jnp.zeros((cfg.d_model,), cfg.jdtype)}
+    return {"scale": jnp.ones((cfg.d_model,), cfg.jdtype)}
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        if cfg.norm == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        # nonparametric_ln: no affine
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------- embedding
+def init_embed(cfg: ModelConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"tok": _he(k1, (cfg.padded_vocab, cfg.d_model), cfg.jdtype,
+                    fan_in=cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["head"] = _he(k2, (cfg.d_model, cfg.padded_vocab), cfg.jdtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: dict, tokens: Array) -> Array:
+    return p["tok"][tokens]
+
+
+def lm_head(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    """Logits over the padded vocab; entries >= vocab_size are masked to a
+    large negative so loss/sampling never select padding rows (masking
+    keeps the sharded logits layout; slicing would reshard)."""
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(cfg: ModelConfig, positions: Array) -> tuple:
+    """positions [..., S] -> (cos, sin) each [..., S, hd/2], f32."""
+    hd = cfg.hd
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x [..., S, H, hd]; cos/sin [..., S, hd/2] broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def init_mlp(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": _he(k1, (cfg.d_model, d_ff), cfg.jdtype),
+         "down": _he(k2, (d_ff, cfg.d_model), cfg.jdtype)}
+    if cfg.gated_mlp:
+        p["gate"] = _he(k3, (cfg.d_model, d_ff), cfg.jdtype)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: Array) -> Array:
+    if cfg.use_kernels and cfg.gated_mlp and x.ndim == 3 \
+            and x.shape[1] % 16 == 0:
+        from ..kernels import ops as kops
+        B, S, d = x.shape
+        y = kops.fused_ffn(x.reshape(1, B * S, d), p["gate"][None],
+                           p["up"][None], p["down"][None])
+        return y.reshape(B, S, d)
+    up = jnp.einsum("...d,df->...f", x, p["up"])
+    if cfg.gated_mlp:
+        gate = jnp.einsum("...d,df->...f", x, p["gate"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["down"])

@@ -1,0 +1,211 @@
+"""Mamba2 block with SSD chunked scan (TPU adaptation).
+
+GPU Mamba2 uses a fused selective-scan kernel; the TPU-idiomatic form is the
+SSD block decomposition: split the sequence into chunks, do dense MXU
+matmuls within chunks (decay-masked "attention" scores) and carry the
+recurrent state only across chunk boundaries with a short lax.scan. This
+keeps arithmetic intensity high and the sequential chain length S/Q.
+
+Recurrence (per head h, scalar decay a_t = exp(A * dt_t), A < 0):
+    S_t = a_t S_{t-1} + dt_t B_t (x) x_t        S in R^{hd x ds}
+    y_t = C_t . S_t + D x_t
+
+Decode is the single-step recurrence against a [B, nh, hd, ds] state cache,
+so long_500k decodes in O(1) state — no KV growth.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _he
+
+Array = jnp.ndarray
+
+
+class MambaCache(NamedTuple):
+    conv_x: Array   # [B, d_conv - 1, d_in]  trailing conv inputs (head-sharded)
+    conv_bc: Array  # [B, d_conv - 1, 2*ds]  trailing B/C conv inputs (replicated)
+    ssd: Array      # [B, nh, hd, ds] recurrent state
+    length: Array   # scalar int32
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm.expand * cfg.d_model
+    nh = d_in // cfg.ssm.head_dim
+    return d_in, nh, cfg.ssm.head_dim, cfg.ssm.d_state
+
+
+def init_mamba2(cfg: ModelConfig, key) -> dict:
+    """Projections are kept separate (z/x head-sharded over the model axis,
+    B/C/dt small and replicated) so tensor-parallel sharding never splits a
+    fused projection across semantically different segments."""
+    d = cfg.d_model
+    d_in, nh, hd, ds = dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "z_proj": _he(ks[0], (d, d_in), cfg.jdtype),
+        "x_proj": _he(ks[1], (d, d_in), cfg.jdtype),
+        "bc_proj": _he(ks[2], (d, 2 * ds), cfg.jdtype),
+        "dt_proj": _he(ks[3], (d, nh), cfg.jdtype),
+        "conv_x": _he(ks[4], (cfg.ssm.d_conv, d_in), cfg.jdtype,
+                      fan_in=cfg.ssm.d_conv),
+        "conv_bc": _he(ks[5], (cfg.ssm.d_conv, 2 * ds), cfg.jdtype,
+                       fan_in=cfg.ssm.d_conv),
+        "conv_b_x": jnp.zeros((d_in,), cfg.jdtype),
+        "conv_b_bc": jnp.zeros((2 * ds,), cfg.jdtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "norm": jnp.ones((d_in,), cfg.jdtype),
+        "out_proj": _he(ks[0], (d_in, d), cfg.jdtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, p: dict, x: Array):
+    d_in, nh, hd, ds = dims(cfg)
+    z = jnp.einsum("bsd,dk->bsk", x, p["z_proj"])
+    xi = jnp.einsum("bsd,dk->bsk", x, p["x_proj"])
+    bc = jnp.einsum("bsd,dk->bsk", x, p["bc_proj"])
+    dt = jnp.einsum("bsd,dk->bsk", x, p["dt_proj"])
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    return z, xi, Bc, Cc, dt
+
+
+def _conv_full(w: Array, b: Array, u: Array) -> Array:
+    """Causal depthwise conv over [B,S,C] with width K, then silu."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(u.dtype)
+
+
+def _gated_norm(cfg, p, y, z):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)) \
+        .astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    return (yf * p["norm"].astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba2_forward(cfg: ModelConfig, p: dict, x: Array):
+    """Full-sequence SSD. x [B,S,d] -> (y [B,S,d], final_state)."""
+    B, S, _ = x.shape
+    d_in, nh, hd, ds = dims(cfg)
+    Q = min(cfg.ssm.chunk, S)
+    while S % Q:           # ragged tail: fall back to a divisor of S
+        Q //= 2
+    z, xi, Bc, Cc, dt = _split_proj(cfg, p, x)
+    xi_raw, bc_raw = xi, jnp.concatenate([Bc, Cc], axis=-1)
+    xi = _conv_full(p["conv_x"], p["conv_b_x"], xi_raw)
+    bc = _conv_full(p["conv_bc"], p["conv_b_bc"], bc_raw)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,nh]
+    A = -jnp.exp(p["A_log"])                                      # [nh]
+    la = (dt * A).astype(jnp.float32)                             # log decay
+    xh = xi.reshape(B, S, nh, hd)
+    # chunk views
+    nC = S // Q
+    def r(t, shape):
+        return t.reshape((B, nC, Q) + shape)
+    laq = r(la, (nh,))
+    dtq = r(dt, (nh,))
+    # keep bulk tensors in the model dtype; accumulate dots in f32
+    xq = r(xh, (nh, hd))
+    Bq = r(Bc, (ds,))
+    Cq = r(Cc, (ds,))
+
+    cums = jnp.cumsum(laq, axis=2)                                # [B,nC,Q,nh]
+    # intra-chunk decay-masked scores: [B,nC,Qi,Qj,nh]. The O(S*Q*nh) score
+    # tensor is the memory hot spot of the SSD block (on TPU the Pallas
+    # ssd_scan kernel keeps it in VMEM); materialize it ONCE, in bf16, with
+    # f32 accumulation in the following dot.
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]        # [B,nC,Qi,Qj,nh]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    cb = jnp.einsum("bcis,bcjs->bcij", Cq, Bq,
+                    preferred_element_type=jnp.float32)           # [B,nC,Qi,Qj]
+    scores = jnp.where(
+        causal[None, None, :, :, None],
+        jnp.exp(diff) * cb[:, :, :, :, None] * dtq[:, :, None, :, :],
+        0.0).astype(x.dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores,
+                         xq.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+
+    # chunk summaries: state contribution of each chunk
+    tail = cums[:, :, -1:, :] - cums                              # decay to end
+    w = dtq * jnp.exp(tail)                                       # [B,nC,Q,nh]
+    chunk_state = jnp.einsum("bcjh,bcjs,bcjhp->bchps",
+                             w.astype(x.dtype), Bq, xq,
+                             preferred_element_type=jnp.float32)  # [B,nC,nh,hd,ds]
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                      # [B,nC,nh]
+
+    def scan_body(S_prev, inputs):
+        cstate, cdecay, cin, cC = inputs
+        # inter contribution: y_i += C_i . (exp(cums_i) * S_prev)
+        y_in = jnp.einsum("bis,bhps,bih->bihp", cC, S_prev,
+                          jnp.exp(cin),
+                          preferred_element_type=jnp.float32)
+        S_next = cdecay[:, :, None, None] * S_prev + cstate
+        return S_next, y_in
+
+    S0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+    xs = (chunk_state.transpose(1, 0, 2, 3, 4),
+          chunk_decay.transpose(1, 0, 2),
+          cums.transpose(1, 0, 2, 3),
+          Cq.transpose(1, 0, 2, 3))
+    S_final, y_inter = jax.lax.scan(scan_body, S0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                    # [B,nC,Q,nh,hd]
+
+    y = y_intra + y_inter
+    y = y + p["D"][None, None, :, None] * xq.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = _gated_norm(cfg, p, y, z)
+    out = jnp.einsum("bsd,dk->bsk", y, p["out_proj"])
+    K = cfg.ssm.d_conv
+    cache = MambaCache(conv_x=xi_raw[:, -(K - 1):, :],
+                       conv_bc=bc_raw[:, -(K - 1):, :],
+                       ssd=S_final, length=jnp.asarray(S, jnp.int32))
+    return out, cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> MambaCache:
+    d_in, nh, hd, ds = dims(cfg)
+    return MambaCache(
+        conv_x=jnp.zeros((batch, cfg.ssm.d_conv - 1, d_in), cfg.jdtype),
+        conv_bc=jnp.zeros((batch, cfg.ssm.d_conv - 1, 2 * ds), cfg.jdtype),
+        ssd=jnp.zeros((batch, nh, hd, ds), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, x: Array, cache: MambaCache):
+    """Single-token recurrence. x [B,1,d] -> (y [B,1,d], cache)."""
+    B = x.shape[0]
+    d_in, nh, hd, ds = dims(cfg)
+    z, xi, Bc, Cc, dt = _split_proj(cfg, p, x)
+    bc = jnp.concatenate([Bc, Cc], axis=-1)
+    win_x = jnp.concatenate([cache.conv_x, xi], axis=1)     # [B,K,d_in]
+    win_bc = jnp.concatenate([cache.conv_bc, bc], axis=1)   # [B,K,2ds]
+    cx = jnp.einsum("bkc,kc->bc", win_x, p["conv_x"]) + p["conv_b_x"]
+    cbc = jnp.einsum("bkc,kc->bc", win_bc, p["conv_bc"]) + p["conv_b_bc"]
+    xi = jax.nn.silu(cx.astype(jnp.float32)).astype(x.dtype)
+    bc_act = jax.nn.silu(cbc.astype(jnp.float32)).astype(x.dtype)
+    Bc, Cc = jnp.split(bc_act, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                # [B,nh]
+    xh = xi.reshape(B, nh, hd).astype(jnp.float32)
+    S_new = a[:, :, None, None] * cache.ssd + \
+        jnp.einsum("bh,bs,bhp->bhps", dt, Bc.astype(jnp.float32), xh)
+    y = jnp.einsum("bs,bhps->bhp", Cc.astype(jnp.float32), S_new)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = _gated_norm(cfg, p, y, z)
+    out = jnp.einsum("bsd,dk->bsk", y, p["out_proj"])
+    return out, MambaCache(conv_x=win_x[:, 1:, :], conv_bc=win_bc[:, 1:, :],
+                           ssd=S_new, length=cache.length + 1)

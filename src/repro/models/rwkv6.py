@@ -1,0 +1,214 @@
+"""RWKV6 ("Finch") block: data-dependent decay linear attention.
+
+Time-mix recurrence per head (hd-dim channels, state S in R^{hd x hd}):
+
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+
+with the data-dependent decay w_t = exp(-exp(w0 + LoRA(x_t))) in (0, 1)
+(the defining RWKV6 feature) and bonus u for the current token.
+
+TPU adaptation: like Mamba2's SSD we evaluate training/prefill in chunks —
+the decay is diagonal so the intra-chunk part is a decay-weighted
+"attention" (dense MXU matmuls) and the state is carried across chunks by
+a short scan. Decode is the O(1) per-token recurrence. Channel-mix is the
+squared-ReLU FFN with token shift.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import _he
+
+Array = jnp.ndarray
+
+
+class RWKVCache(NamedTuple):
+    shift_tm: Array   # [B, d] previous token (time mix)
+    shift_cm: Array   # [B, d] previous token (channel mix)
+    wkv: Array        # [B, nh, hd, hd] state
+    length: Array
+
+
+def dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    nh = cfg.d_model // hd
+    return nh, hd
+
+
+def init_rwkv6(cfg: ModelConfig, key) -> dict:
+    d = cfg.d_model
+    nh, hd = dims(cfg)
+    r = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        # time-mix interpolation coefficients for r,k,v,w,g
+        "mu": 0.5 * jnp.ones((5, d), cfg.jdtype),
+        "wr": _he(ks[0], (d, d), cfg.jdtype),
+        "wk": _he(ks[1], (d, d), cfg.jdtype),
+        "wv": _he(ks[2], (d, d), cfg.jdtype),
+        "wg": _he(ks[3], (d, d), cfg.jdtype),
+        "wo": _he(ks[4], (d, d), cfg.jdtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -4.0, jnp.float32),
+        "wA": _he(ks[5], (d, r), cfg.jdtype),
+        "wB": _he(ks[6], (r, d), cfg.jdtype),
+        "u": 0.1 * jnp.ones((nh, hd), jnp.float32),
+        "ln_x": jnp.ones((d,), cfg.jdtype),       # per-head group norm scale
+        # channel mix
+        "mu_cm": 0.5 * jnp.ones((2, d), cfg.jdtype),
+        "ck": _he(ks[7], (d, cfg.d_ff), cfg.jdtype),
+        "cv": _he(ks[8], (cfg.d_ff, d), cfg.jdtype),
+        "cr": _he(ks[9], (d, d), cfg.jdtype),
+    }
+
+
+def _mix(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def _decay(p, xw):
+    """log decay la = -exp(w0 + tanh(xw A) B), elementwise < 0."""
+    lora = jnp.einsum("...r,rd->...d",
+                      jnp.tanh(jnp.einsum("...d,dr->...r", xw, p["wA"])
+                               .astype(jnp.float32)).astype(xw.dtype),
+                      p["wB"]).astype(jnp.float32)
+    return -jnp.exp(jnp.clip(p["w0"] + lora, -20.0, 8.0))
+
+
+def _group_norm(p, y, nh, hd):
+    """Per-head RMS normalization of the wkv output."""
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, axis=-1, keepdims=True) + 1e-6)
+    yf = yf.reshape(yf.shape[:-2] + (nh * hd,))
+    return (yf * p["ln_x"].astype(jnp.float32))
+
+
+def rwkv6_time_mix(cfg: ModelConfig, p: dict, x: Array, prev: Array):
+    """x [B,S,d], prev [B,d] (token before the window).
+
+    Returns (y [B,S,d], last_state [B,nh,hd,hd], last_token [B,d]).
+    """
+    B, S, d = x.shape
+    nh, hd = dims(cfg)
+    xx = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    xr = _mix(x, xx, p["mu"][0])
+    xk = _mix(x, xx, p["mu"][1])
+    xv = _mix(x, xx, p["mu"][2])
+    xw = _mix(x, xx, p["mu"][3])
+    xg = _mix(x, xx, p["mu"][4])
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, nh, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, nh, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, nh, hd)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])
+    la = _decay(p, xw).reshape(B, S, nh, hd)          # log decay, f32
+
+    Q = min(128, S)
+    while S % Q:
+        Q //= 2
+    nC = S // Q
+    rq = r.astype(jnp.float32).reshape(B, nC, Q, nh, hd)
+    kq = k.astype(jnp.float32).reshape(B, nC, Q, nh, hd)
+    vq = v.astype(jnp.float32).reshape(B, nC, Q, nh, hd)
+    laq = la.reshape(B, nC, Q, nh, hd)
+    cs = jnp.cumsum(laq, axis=2)                      # inclusive
+
+    # intra-chunk, strictly lower triangular (state BEFORE current token):
+    # y_i += sum_{j<i} (r_i * exp(cs_{i} - la_i - cs_j) . k_j) v_j
+    ri = rq * jnp.exp(cs - laq)                       # [B,c,Q,nh,hd]
+    kj = kq * jnp.exp(-cs)
+    att = jnp.einsum("bciht,bcjht->bchij", ri, kj)    # [B,c,nh,Qi,Qj]
+    strict = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    att = jnp.where(strict[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bchij,bcjht->bciht", att, vq)
+    # diagonal bonus: y_i += (r_i . (u * k_i)) v_i
+    diag = jnp.einsum("bciht,ht,bciht->bcih", rq, p["u"], kq)
+    y_intra = y_intra + diag[..., None] * vq
+
+    # inter-chunk: y_i += r_i exp(cs_i - la_i) . S_prev ;
+    # S_next = diag(exp(cs_last)) S_prev + sum_j exp(cs_last - cs_j) k_j v_j
+    tail = cs[:, :, -1:, :, :] - cs                   # [B,c,Q,nh,hd]
+    kst = kq * jnp.exp(tail)
+    chunk_state = jnp.einsum("bcjht,bcjhu->bchtu", kst, vq)  # [B,c,nh,hd,hd]
+    chunk_decay = jnp.exp(cs[:, :, -1])               # [B,c,nh,hd]
+
+    def body(S_prev, inp):
+        cst, cdec, cri = inp
+        y_in = jnp.einsum("biht,bhtu->bihu", cri, S_prev)
+        S_next = cdec[..., None] * S_prev + cst
+        return S_next, y_in
+
+    S0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    Sf, y_inter = jax.lax.scan(
+        body, S0, (chunk_state.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2, 3),
+                   ri.transpose(1, 0, 2, 3, 4)))
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    y = _group_norm(p, y, nh, hd).reshape(B, S, d)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = jnp.einsum("bsd,de->bse", y.astype(x.dtype), p["wo"])
+    return out, Sf, x[:, -1, :]
+
+
+def rwkv6_channel_mix(cfg: ModelConfig, p: dict, x: Array, prev: Array):
+    xx = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    xk = _mix(x, xx, p["mu_cm"][0])
+    xr = _mix(x, xx, p["mu_cm"][1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["ck"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["cv"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    return rgate * kv, x[:, -1, :]
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int) -> RWKVCache:
+    nh, hd = dims(cfg)
+    return RWKVCache(
+        shift_tm=jnp.zeros((batch, cfg.d_model), cfg.jdtype),
+        shift_cm=jnp.zeros((batch, cfg.d_model), cfg.jdtype),
+        wkv=jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def rwkv6_time_mix_decode(cfg: ModelConfig, p: dict, x1: Array,
+                          state: Array, prev: Array):
+    """x1 [B,d] single token; state [B,nh,hd,hd]; prev [B,d]."""
+    B, d = x1.shape
+    nh, hd = dims(cfg)
+    xr = _mix(x1, prev, p["mu"][0])
+    xk = _mix(x1, prev, p["mu"][1])
+    xv = _mix(x1, prev, p["mu"][2])
+    xw = _mix(x1, prev, p["mu"][3])
+    xg = _mix(x1, prev, p["mu"][4])
+    r = jnp.einsum("bd,de->be", xr, p["wr"]).reshape(B, nh, hd)
+    k = jnp.einsum("bd,de->be", xk, p["wk"]).reshape(B, nh, hd)
+    v = jnp.einsum("bd,de->be", xv, p["wv"]).reshape(B, nh, hd)
+    g = jnp.einsum("bd,de->be", xg, p["wg"])
+    w = jnp.exp(_decay(p, xw).reshape(B, nh, hd))     # decay in (0,1)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    att = state + p["u"][None, :, :, None] * jnp.einsum(
+        "bht,bhu->bhtu", kf, vf)
+    y = jnp.einsum("bht,bhtu->bhu", rf, att)
+    S_next = w[..., None] * state + jnp.einsum("bht,bhu->bhtu", kf, vf)
+    y = _group_norm(p, y, nh, hd).reshape(B, d)
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = jnp.einsum("bd,de->be", y.astype(x1.dtype), p["wo"])
+    return out, S_next, x1
+
+
+def rwkv6_channel_mix_decode(cfg: ModelConfig, p: dict, x1: Array,
+                             prev: Array):
+    xk = _mix(x1, prev, p["mu_cm"][0])
+    xr = _mix(x1, prev, p["mu_cm"][1])
+    k = jnp.einsum("bd,df->bf", xk, p["ck"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x1.dtype)
+    kv = jnp.einsum("bf,fd->bd", k, p["cv"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bd,de->be", xr, p["cr"])
+                           .astype(jnp.float32)).astype(x1.dtype)
+    return rgate * kv, x1

@@ -1,0 +1,21 @@
+"""Token sampling for the decode loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def sample(logits: Array, key, temperature: float = 0.0,
+           top_k: int = 0) -> Array:
+    """logits [B, 1, V] -> tokens [B, 1] int32."""
+    logits = logits[:, -1, :].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    toks = jax.random.categorical(key, logits, axis=-1)
+    return toks.astype(jnp.int32)[:, None]

@@ -1,0 +1,339 @@
+"""Model assembly: scanned block stacks for every architecture family.
+
+Layer stacks are homogeneous and scanned (``jax.lax.scan`` over stacked
+params) to bound HLO size / compile time at 16-81 layers. The hybrid
+(Zamba2-style) stack is a nested scan: groups of ``attn_every`` Mamba2
+blocks followed by ONE application of a weight-shared attention+MLP block;
+each application has its own KV cache (weights shared, activations not).
+
+Entry points:
+    init_params(cfg, key)
+    forward(cfg, params, tokens, prefix_embeds=None, return_cache=False)
+    decode_step(cfg, params, token, cache)
+    init_decode_cache(cfg, batch, capacity)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, mamba2, moe, rwkv6
+from .attention import KVCache
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, embed_tokens, init_embed,
+                     init_mlp, init_norm, lm_head)
+
+Array = jnp.ndarray
+
+
+class ModelOutput(NamedTuple):
+    logits: Array
+    aux_loss: Array          # MoE load-balance aux (0 elsewhere)
+    cache: Any               # decode cache or None
+
+
+# --------------------------------------------------------------------------
+# per-block init / apply
+# --------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, kind: str, key) -> dict:
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        return {"ln1": init_norm(cfg, ks[0]),
+                "attn": attention.init_attn(cfg, ks[1]),
+                "ln2": init_norm(cfg, ks[2]),
+                "mlp": init_mlp(cfg, ks[3])}
+    if kind == "moe":
+        return {"ln1": init_norm(cfg, ks[0]),
+                "attn": attention.init_attn(cfg, ks[1]),
+                "ln2": init_norm(cfg, ks[2]),
+                "moe": moe.init_moe(cfg, ks[3])}
+    if kind == "mamba2":
+        return {"ln1": init_norm(cfg, ks[0]),
+                "mamba": mamba2.init_mamba2(cfg, ks[1])}
+    if kind == "rwkv6":
+        return {"ln1": init_norm(cfg, ks[0]),
+                "ln2": init_norm(cfg, ks[1]),
+                "rwkv": rwkv6.init_rwkv6(cfg, ks[2])}
+    raise ValueError(kind)
+
+
+def _block_forward(cfg: ModelConfig, kind: str, p: dict, x: Array,
+                   positions: Array):
+    """Full-seq block. Returns (x, aux, cache_seed)."""
+    zero = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "moe"):
+        h, kv = attention.attn_forward(cfg, p["attn"],
+                                       apply_norm(cfg, p["ln1"], x), positions)
+        x = x + h
+        if kind == "attn":
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+            return x, zero, kv
+        h, aux = moe.moe_forward(cfg, p["moe"], apply_norm(cfg, p["ln2"], x))
+        return x + h, aux, kv
+    if kind == "mamba2":
+        h, cache = mamba2.mamba2_forward(cfg, p["mamba"],
+                                         apply_norm(cfg, p["ln1"], x))
+        return x + h, zero, cache
+    if kind == "rwkv6":
+        B = x.shape[0]
+        zp = jnp.zeros((B, cfg.d_model), x.dtype)
+        h, st, last_tm = rwkv6.rwkv6_time_mix(cfg, p["rwkv"],
+                                              apply_norm(cfg, p["ln1"], x), zp)
+        x = x + h
+        h, last_cm = rwkv6.rwkv6_channel_mix(cfg, p["rwkv"],
+                                             apply_norm(cfg, p["ln2"], x), zp)
+        cache = rwkv6.RWKVCache(shift_tm=last_tm, shift_cm=last_cm, wkv=st,
+                                length=jnp.asarray(x.shape[1], jnp.int32))
+        return x + h, zero, cache
+    raise ValueError(kind)
+
+
+def _block_decode(cfg: ModelConfig, kind: str, p: dict, x: Array, cache):
+    """One-token block step. x [B,1,d]; returns (x, cache)."""
+    if kind in ("attn", "moe"):
+        h, cache = attention.attn_decode(cfg, p["attn"],
+                                         apply_norm(cfg, p["ln1"], x), cache)
+        x = x + h
+        if kind == "attn":
+            x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+        else:
+            h, _ = moe.moe_forward(cfg, p["moe"], apply_norm(cfg, p["ln2"], x))
+            x = x + h
+        return x, cache
+    if kind == "mamba2":
+        h, cache = mamba2.mamba2_decode(cfg, p["mamba"],
+                                        apply_norm(cfg, p["ln1"], x), cache)
+        return x + h, cache
+    if kind == "rwkv6":
+        x1 = x[:, 0, :]
+        h, st, tm = rwkv6.rwkv6_time_mix_decode(
+            cfg, p["rwkv"], apply_norm(cfg, p["ln1"], x)[:, 0, :],
+            cache.wkv, cache.shift_tm)
+        x1 = x1 + h
+        h, cm = rwkv6.rwkv6_channel_mix_decode(
+            cfg, p["rwkv"], apply_norm(cfg, p["ln2"], x1[:, None, :])[:, 0, :],
+            cache.shift_cm)
+        x1 = x1 + h
+        cache = rwkv6.RWKVCache(shift_tm=tm, shift_cm=cm, wkv=st,
+                                length=cache.length + 1)
+        return x1[:, None, :], cache
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def _stacked_init(cfg: ModelConfig, kind: str, n: int, key):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(cfg, kind, k))(keys)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    cfg.validate()
+    k_embed, k_blocks, k_shared, k_final = jax.random.split(key, 4)
+    params = {
+        "embed": init_embed(cfg, k_embed),
+        "blocks": _stacked_init(cfg, cfg.backbone_kind, cfg.n_layers,
+                                k_blocks),
+        "final_norm": init_norm(cfg, k_final),
+    }
+    if cfg.has_shared_attn:
+        params["shared_attn"] = _init_block(cfg, "attn", k_shared)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _hybrid_layout(cfg: ModelConfig):
+    g = cfg.n_layers // cfg.attn_every
+    rem = cfg.n_layers % cfg.attn_every
+    return g, rem
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: Array,
+            prefix_embeds: Optional[Array] = None,
+            return_cache: bool = False,
+            cache_capacity: Optional[int] = None) -> ModelOutput:
+    """tokens [B, S_t] int32; prefix_embeds [B, P, d] for vlm/audio stubs."""
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    kind = cfg.backbone_kind
+
+    block_fn = functools.partial(_block_forward, cfg, kind)
+    if cfg.remat:
+        block_fn = jax.checkpoint(block_fn)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if not cfg.has_shared_attn:
+        def scan_body(carry, layer_params):
+            x, aux = carry
+            x, a, cache = block_fn(layer_params, x, positions)
+            return (x, aux + a), (cache if return_cache else 0)
+
+        (x, aux_total), caches = jax.lax.scan(scan_body, (x, aux_total), params["blocks"], unroll=cfg.unroll_layers)
+        cache = {"layers": caches} if return_cache else None
+    else:
+        g, rem = _hybrid_layout(cfg)
+        shared_fn = functools.partial(_block_forward, cfg, "attn",
+                                      params["shared_attn"])
+        if cfg.remat and cfg.remat_group:
+            # group-granular remat: drop the per-block checkpoints and save
+            # only one residual per group (attn_every blocks + shared attn)
+            block_fn = functools.partial(_block_forward, cfg, kind)
+        elif cfg.remat:
+            shared_fn = jax.checkpoint(shared_fn)
+        grouped = jax.tree.map(
+            lambda t: t[:g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]), params["blocks"])
+        remainder = jax.tree.map(lambda t: t[g * cfg.attn_every:],
+                                 params["blocks"])
+
+        def group_body(carry, inputs):
+            x, aux = carry
+            group_params = inputs
+
+            def inner(c, lp):
+                xx, aa = c
+                xx, a, cache = block_fn(lp, xx, positions)
+                return (xx, aa + a), (cache if return_cache else 0)
+
+            (x, aux), mcaches = jax.lax.scan(inner, (x, aux), group_params, unroll=cfg.unroll_layers)
+            x, _, kv = shared_fn(x, positions)
+            return (x, aux), (mcaches if return_cache else 0,
+                              kv if return_cache else 0)
+
+        if cfg.remat and cfg.remat_group:
+            group_body = jax.checkpoint(group_body)
+        (x, aux_total), (mcaches, shared_caches) = jax.lax.scan(group_body, (x, aux_total), grouped, unroll=cfg.unroll_layers)
+
+        rem_caches = 0
+        if rem:
+            def inner(c, lp):
+                xx, aa = c
+                xx, a, cache = block_fn(lp, xx, positions)
+                return (xx, aa + a), (cache if return_cache else 0)
+            (x, aux_total), rem_caches = jax.lax.scan(inner, (x, aux_total), remainder, unroll=cfg.unroll_layers)
+        cache = ({"grouped": mcaches, "shared": shared_caches,
+                  "remainder": rem_caches} if return_cache else None)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    if return_cache and cache_capacity is not None:
+        cache = _seed_cache(cfg, cache, cache_capacity)
+    return ModelOutput(logits=logits, aux_loss=aux_total, cache=cache)
+
+
+def _seed_cache(cfg: ModelConfig, cache, capacity: int):
+    """Convert prefill cache seeds (raw KV [L,B,S,..]) into fixed-capacity
+    decode caches."""
+    def seed_kv(kv_stacked):
+        k, v = kv_stacked
+        return jax.vmap(lambda kk, vv: attention.cache_from_prefill(
+            cfg, kk, vv, capacity))(k, v)
+
+    kind = cfg.backbone_kind
+    if not cfg.has_shared_attn:
+        if kind in ("attn", "moe"):
+            return {"layers": seed_kv(cache["layers"])}
+        return cache
+    out = dict(cache)
+    out["shared"] = seed_kv(cache["shared"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int):
+    kind = cfg.backbone_kind
+    if not cfg.has_shared_attn:
+        if kind in ("attn", "moe"):
+            make = lambda _: attention.init_cache(cfg, batch, capacity)
+        elif kind == "mamba2":
+            make = lambda _: mamba2.init_mamba_cache(cfg, batch)
+        else:
+            make = lambda _: rwkv6.init_rwkv_cache(cfg, batch)
+        return {"layers": jax.vmap(make)(jnp.arange(cfg.n_layers))}
+    g, rem = _hybrid_layout(cfg)
+    mk_m = lambda _: mamba2.init_mamba_cache(cfg, batch)
+    mk_a = lambda _: attention.init_cache(cfg, batch, capacity)
+    return {
+        "grouped": jax.vmap(lambda _: jax.vmap(mk_m)(
+            jnp.arange(cfg.attn_every)))(jnp.arange(g)),
+        "shared": jax.vmap(mk_a)(jnp.arange(g)),
+        "remainder": jax.vmap(mk_m)(jnp.arange(rem)) if rem else None,
+    }
+
+
+def decode_step(cfg: ModelConfig, params: dict, token: Array,
+                cache) -> ModelOutput:
+    """token [B, 1] int32 -> next-token logits [B, 1, V]."""
+    x = embed_tokens(cfg, params["embed"], token)
+    kind = cfg.backbone_kind
+    block_fn = functools.partial(_block_decode, cfg, kind)
+
+    if not cfg.has_shared_attn:
+        def scan_body(x, inputs):
+            lp, c = inputs
+            x, c = block_fn(lp, x, c)
+            return x, c
+
+        x, caches = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], cache["layers"]),
+                                 unroll=cfg.unroll_layers)
+        new_cache = {"layers": caches}
+    else:
+        g, rem = _hybrid_layout(cfg)
+        grouped = jax.tree.map(
+            lambda t: t[:g * cfg.attn_every].reshape(
+                (g, cfg.attn_every) + t.shape[1:]), params["blocks"])
+        remainder = jax.tree.map(lambda t: t[g * cfg.attn_every:],
+                                 params["blocks"])
+
+        def group_body(x, inputs):
+            gp, mc, sc = inputs
+
+            def inner(xx, inp):
+                lp, c = inp
+                xx, c = block_fn(lp, xx, c)
+                return xx, c
+
+            x, mc = jax.lax.scan(inner, x, (gp, mc), unroll=cfg.unroll_layers)
+            x, sc = _block_decode(cfg, "attn", params["shared_attn"], x, sc)
+            return x, (mc, sc)
+
+        x, (mcaches, shared_caches) = jax.lax.scan(group_body, x, (grouped, cache["grouped"], cache["shared"]), unroll=cfg.unroll_layers)
+        rem_cache = cache.get("remainder")
+        if rem:
+            def inner(xx, inp):
+                lp, c = inp
+                xx, c = block_fn(lp, xx, c)
+                return xx, c
+            x, rem_cache = jax.lax.scan(inner, x, (remainder, rem_cache), unroll=cfg.unroll_layers)
+        new_cache = {"grouped": mcaches, "shared": shared_caches,
+                     "remainder": rem_cache}
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    return ModelOutput(logits=logits, aux_loss=jnp.zeros((), jnp.float32),
+                       cache=new_cache)

@@ -1,0 +1,6 @@
+"""Event-driven queueing simulation validating the paper's M/G/1 analysis."""
+from .mg1 import SimResult, pk_prediction, simulate
+from .workload import Query, Stream, empirical_mixture, generate_stream
+
+__all__ = ["SimResult", "simulate", "pk_prediction", "Stream", "Query",
+           "generate_stream", "empirical_mixture"]

@@ -1,0 +1,142 @@
+"""Event-driven M/G/1 simulation of the LLM server (paper Sec IV).
+
+Service times are deterministic per type, t_k(l_k); randomness enters via
+Poisson arrivals and type draws. FIFO is the paper's discipline; SJF and
+non-preemptive priority are beyond-paper ablations showing how much of the
+optimal allocation's gain is discipline-specific.
+
+The simulator also evaluates the realized objective: per-query accuracy is
+Bernoulli(p_k(l_k)) using the stream's pre-drawn uniforms so that policies
+are compared on common random numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable
+
+import numpy as np
+
+from ..core.params import Problem
+from .workload import Stream
+
+
+@dataclasses.dataclass
+class SimResult:
+    mean_wait: float
+    mean_system_time: float
+    mean_service: float
+    utilization: float
+    accuracy: float              # realized fraction correct
+    mean_accuracy_prob: float    # E[p_k(l_k)] under the realized mixture
+    objective: float             # alpha * acc_prob - mean_system_time
+    per_task_system_time: np.ndarray
+    per_task_count: np.ndarray
+    n: int
+
+
+def _service_times(problem: Problem, lengths: np.ndarray,
+                   stream: Stream) -> np.ndarray:
+    t0 = np.asarray(problem.tasks.t0)
+    c = np.asarray(problem.tasks.c)
+    types = np.array([q.task for q in stream.queries])
+    return t0[types] + c[types] * np.asarray(lengths)[types]
+
+
+def simulate(problem: Problem, lengths, stream: Stream,
+             discipline: str = "fifo",
+             service_time_fn: Callable | None = None) -> SimResult:
+    """Simulate the queue under integer budgets ``lengths``.
+
+    discipline: "fifo" (paper), "sjf" (shortest-job-first, non-preemptive),
+    "priority" (highest marginal utility per second first; beyond paper).
+    ``service_time_fn(query, lengths) -> float`` overrides the analytic
+    service model (used to couple the DES to the real decode engine).
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    n = len(stream.queries)
+    types = np.array([q.task for q in stream.queries])
+    arrivals = np.array([q.arrival for q in stream.queries])
+    if service_time_fn is None:
+        services = _service_times(problem, lengths, stream)
+    else:
+        services = np.array([service_time_fn(q, lengths)
+                             for q in stream.queries])
+
+    # priority keys (lower = served first)
+    if discipline == "fifo":
+        keys = arrivals
+    elif discipline == "sjf":
+        keys = services
+    elif discipline == "priority":
+        # marginal utility density: alpha pi_k p_k / t_k -- serve high first
+        p = np.asarray(problem.tasks.accuracy(lengths))
+        dens = p[types] / np.maximum(services, 1e-12)
+        keys = -dens
+    else:
+        raise ValueError(f"unknown discipline {discipline!r}")
+
+    # non-preemptive single server event loop
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    ready: list[tuple[float, int]] = []   # (key, qid) heap of waiting queries
+    t = 0.0
+    i = 0  # next arrival index
+    busy_until = 0.0
+    served = 0
+    busy_time = 0.0
+    while served < n:
+        # admit all arrivals up to the moment the server frees
+        while i < n and (arrivals[i] <= busy_until or not ready):
+            if arrivals[i] > busy_until and not ready:
+                # idle period: jump to next arrival
+                busy_until = arrivals[i]
+            heapq.heappush(ready, (float(keys[i]), i))
+            i += 1
+        _, qid = heapq.heappop(ready)
+        t = max(busy_until, arrivals[qid])
+        start[qid] = t
+        finish[qid] = t + services[qid]
+        busy_until = finish[qid]
+        busy_time += services[qid]
+        served += 1
+
+    waits = start - arrivals
+    sys_times = finish - arrivals
+    p = np.asarray(problem.tasks.accuracy(lengths))
+    us = np.array([q.correct_u for q in stream.queries])
+    correct = us < p[types]
+    acc_prob = float(np.mean(p[types]))
+    per_task_sys = np.zeros(problem.tasks.n_tasks)
+    per_task_cnt = np.bincount(types, minlength=problem.tasks.n_tasks)
+    for k in range(problem.tasks.n_tasks):
+        if per_task_cnt[k]:
+            per_task_sys[k] = sys_times[types == k].mean()
+    return SimResult(
+        mean_wait=float(waits.mean()),
+        mean_system_time=float(sys_times.mean()),
+        mean_service=float(services.mean()),
+        utilization=float(busy_time / max(finish.max(), 1e-12)),
+        accuracy=float(correct.mean()),
+        mean_accuracy_prob=acc_prob,
+        objective=float(problem.server.alpha * acc_prob - sys_times.mean()),
+        per_task_system_time=per_task_sys,
+        per_task_count=per_task_cnt,
+        n=n,
+    )
+
+
+def pk_prediction(problem: Problem, lengths) -> dict:
+    """Analytical P-K prediction for cross-checking the DES."""
+    import jax.numpy as jnp
+
+    from ..core.queueing import mean_system_time, mean_wait, service_moments
+
+    m = service_moments(problem.tasks, jnp.asarray(lengths),
+                        problem.server.lam)
+    return {
+        "mean_wait": float(mean_wait(m, problem.server.lam)),
+        "mean_system_time": float(mean_system_time(m, problem.server.lam)),
+        "mean_service": float(m.es),
+        "utilization": float(m.rho),
+    }

@@ -1,0 +1,134 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e target).
+
+Per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / ICI_link_bw
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the partitioned
+per-device module). Collective bytes are NOT in cost_analysis: we parse the
+post-SPMD HLO text and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (result-shape
+bytes ~= data crossing the links per op, a standard approximation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# ----------------------------------------------------------- TPU v5e constants
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link (~per-device effective)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result shapes appear between '=' and the op name
+        for kind in _COLLECTIVES:
+            # match ' = <shape-or-tuple> <kind>(' variants like
+            # '%ar = f32[128,1024] all-reduce(' / 'all-reduce-start('
+            marker = f" {kind}("
+            marker2 = f" {kind}-start("
+            if marker not in stripped and marker2 not in stripped:
+                continue
+            eq = stripped.find("=")
+            if eq < 0:
+                continue
+            pos = stripped.find(marker)
+            if pos < 0:
+                pos = stripped.find(marker2)
+            result_part = stripped[eq + 1:pos]
+            nbytes = sum(_shape_bytes(d, dims)
+                         for d, dims in _SHAPE_RE.findall(result_part))
+            out[kind] += nbytes
+            counts[kind] += 1
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_global: float
+    model_flops_ratio: float          # model_flops / (HLO flops * chips)
+    collectives: dict
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape, n_active_params: Optional[int] = None) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N·D inference (N = active)."""
+    n = n_active_params if n_active_params is not None \
+        else cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.batch * (shape.seq - cfg.n_prefix_embeds)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.batch      # decode: one token per sequence
+
+
+def analyze(cost: dict, hlo_text: str, cfg, shape, n_chips: int) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collective_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = nbytes / HBM_BW
+    collective_s = coll["total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    ratio = mf / (flops * n_chips) if flops > 0 else 0.0
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=nbytes,
+        collective_bytes_per_device=float(coll["total"]),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_global=mf,
+        model_flops_ratio=ratio,
+        collectives=coll,
+    )

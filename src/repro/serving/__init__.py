@@ -1,0 +1,11 @@
+"""Serving runtime: allocator-driven FIFO LLM server with budget enforcement."""
+from .continuous import ContinuousBatchingEngine
+from .engine import DecodeEngine
+from .metrics import ServingReport, summarize
+from .request import CompletedRequest, Phase, Request
+from .scheduler import Scheduler
+from .server import LLMServer, ServerConfig
+
+__all__ = ["DecodeEngine", "ContinuousBatchingEngine", "LLMServer", "ServerConfig", "Scheduler",
+           "Request", "CompletedRequest", "Phase", "ServingReport",
+           "summarize"]

@@ -1,0 +1,68 @@
+"""Serving metrics aggregation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from ..core.params import Problem
+from .request import CompletedRequest
+
+
+@dataclasses.dataclass
+class ServingReport:
+    n: int
+    mean_wait: float
+    mean_service: float
+    mean_system_time: float
+    p50_system_time: float
+    p99_system_time: float
+    utilization: float
+    accuracy: float
+    mean_accuracy_prob: float
+    objective: float
+    per_task_budget: dict
+    per_task_system_time: dict
+    tokens_generated: int
+    n_resolves: int
+
+
+def summarize(problem: Problem, completed: Sequence[CompletedRequest],
+              horizon: float, n_resolves: int = 0) -> ServingReport:
+    if not completed:
+        raise ValueError("no completed requests")
+    waits = np.array([c.wait_time for c in completed])
+    serv = np.array([c.service_time for c in completed])
+    syst = np.array([c.system_time for c in completed])
+    tasks = np.array([c.task_index for c in completed])
+    budgets = np.array([c.budget for c in completed])
+    correct = np.array([c.correct for c in completed])
+    # accuracy model evaluated per request row
+    A = np.asarray(problem.tasks.A)[tasks]
+    b = np.asarray(problem.tasks.b)[tasks]
+    D = np.asarray(problem.tasks.D)[tasks]
+    p_row = A * (1 - np.exp(-b * budgets)) + D
+    per_budget = {}
+    per_sys = {}
+    for k in range(problem.tasks.n_tasks):
+        sel = tasks == k
+        if sel.any():
+            per_budget[problem.tasks.names[k]] = float(budgets[sel].mean())
+            per_sys[problem.tasks.names[k]] = float(syst[sel].mean())
+    return ServingReport(
+        n=len(completed),
+        mean_wait=float(waits.mean()),
+        mean_service=float(serv.mean()),
+        mean_system_time=float(syst.mean()),
+        p50_system_time=float(np.percentile(syst, 50)),
+        p99_system_time=float(np.percentile(syst, 99)),
+        utilization=float(serv.sum() / max(horizon, 1e-9)),
+        accuracy=float(correct.mean()),
+        mean_accuracy_prob=float(p_row.mean()),
+        objective=float(problem.server.alpha * p_row.mean() - syst.mean()),
+        per_task_budget=per_budget,
+        per_task_system_time=per_sys,
+        tokens_generated=int(sum(c.n_tokens for c in completed)),
+        n_resolves=n_resolves,
+    )

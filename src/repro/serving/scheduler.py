@@ -1,0 +1,65 @@
+"""FIFO admission queue with allocator-assigned budgets.
+
+The paper's serving discipline: FIFO, one query in service at a time
+(M/G/1). At admission the scheduler stamps the request with the current
+optimal integer budget for its task type (the allocator re-solves online
+as lambda/pi drift). SJF/priority variants are exposed for the ablation
+benchmarks.
+"""
+from __future__ import annotations
+
+import collections
+import heapq
+from typing import Optional
+
+from ..core.allocator import TokenBudgetAllocator
+from .request import Phase, Request
+
+
+class Scheduler:
+    def __init__(self, allocator: TokenBudgetAllocator,
+                 discipline: str = "fifo"):
+        if discipline not in ("fifo", "sjf", "priority"):
+            raise ValueError(discipline)
+        self.allocator = allocator
+        self.discipline = discipline
+        self._fifo: collections.deque = collections.deque()
+        self._heap: list = []
+        self._seq = 0
+        self.n_admitted = 0
+
+    def admit(self, req: Request, now: float,
+              observe: bool = True) -> None:
+        """Stamp budget and enqueue."""
+        if observe:
+            self.allocator.observe_arrival(req.task_index, now)
+        req.budget = self.allocator.budget_for(req.task_index)
+        req.phase = Phase.QUEUED
+        self.n_admitted += 1
+        if self.discipline == "fifo":
+            self._fifo.append(req)
+            return
+        prob = self.allocator._base
+        t_service = float(prob.tasks.t0[req.task_index]
+                          + prob.tasks.c[req.task_index] * req.budget)
+        if self.discipline == "sjf":
+            key = t_service
+        else:  # priority: highest accuracy-per-second first
+            import numpy as np
+            k = req.task_index
+            p = float(prob.tasks.A[k]
+                      * (1 - np.exp(-prob.tasks.b[k] * req.budget))
+                      + prob.tasks.D[k])
+            key = -p / max(t_service, 1e-9)
+        self._seq += 1
+        heapq.heappush(self._heap, (key, self._seq, req))
+
+    def next_request(self) -> Optional[Request]:
+        if self.discipline == "fifo":
+            return self._fifo.popleft() if self._fifo else None
+        if self._heap:
+            return heapq.heappop(self._heap)[2]
+        return None
+
+    def __len__(self) -> int:
+        return len(self._fifo) + len(self._heap)

@@ -1,0 +1,34 @@
+"""Ambient mesh context.
+
+Model code is mesh-agnostic except where locality matters (MoE routing must
+happen per data shard — a global argsort/gather over the flattened token
+axis would turn into a catastrophic cross-shard gather under GSPMD).
+Drivers (dryrun / train / serve) install the mesh here; the MoE layer picks
+it up and wraps its dispatch in shard_map.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: list = []
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _CURRENT[-1][0] if _CURRENT else None
+
+
+def get_options():
+    """Distribution options installed alongside the mesh (or None)."""
+    return _CURRENT[-1][1] if _CURRENT else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], options=None):
+    _CURRENT.append((mesh, options))
+    try:
+        yield
+    finally:
+        _CURRENT.pop()

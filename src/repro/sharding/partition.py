@@ -1,0 +1,243 @@
+"""Partition rules: params, activations, and caches -> PartitionSpec.
+
+Baseline scheme (megatron-style tensor parallel over ``model`` + data
+parallel over ``data`` [+ ``pod``]):
+
+* attention:  wq/wk/wv column-parallel (heads on ``model``), wo row-parallel
+* MLP:        up/gate column-parallel, down row-parallel
+* MoE:        per-expert FFN hidden dim on ``model`` (works for any expert
+              count, incl. granite's 40); expert-parallel variant
+              (experts on ``model``) is the `expert_parallel` option
+* Mamba2:     z/x projections head-column-parallel, out row-parallel;
+              B/C/dt projections replicated (small)
+* RWKV6:      wr/wk/wv/wg column-parallel, wo row-parallel
+* embeddings: vocab-parallel (both token table and LM head)
+* KV caches:  kv-head-parallel when divisible, else head-dim-parallel,
+              else replicated; batch on ``data`` (+ ``pod``)
+
+Specs are keyed by param path (tree path of dict keys), applied with
+jax.tree_util path traversal — no framework dependencies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingOptions:
+    expert_parallel: bool = False     # experts over `model` (hillclimb)
+    seq_sharded_cache: bool = False   # long-context KV cache over `data`
+    zero_optimizer: bool = False      # shard opt state over `data` (ZeRO)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _msize(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+# --------------------------------------------------------------- param rules
+def _param_spec(cfg: ModelConfig, path: tuple, leaf,
+                opts: ShardingOptions, mesh: Mesh) -> P:
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = keys[-1]
+    parent = keys[-2] if len(keys) > 1 else None
+    ms = _msize(mesh)
+
+    def col(dim_size):  # column-parallel last dim if divisible
+        return P(None, "model") if dim_size % ms == 0 else P(None, None)
+
+    # embeddings: vocab-parallel, falling back to d-parallel for vocab
+    # sizes that don't divide the model axis (granite's 49155)
+    if name == "tok":
+        return P("model", None) if leaf.shape[0] % ms == 0 \
+            else P(None, "model")
+    if name == "head":
+        return P(None, "model") if leaf.shape[1] % ms == 0 \
+            else P("model", None)
+
+    # attention
+    if parent == "attn" or (parent == "shared_attn" and False):
+        if name in ("wq", "wk", "wv"):
+            return col(leaf.shape[-1])
+        if name == "wo":
+            return P("model", None) if leaf.shape[-2] % ms == 0 \
+                else P(None, None)
+        return P(None)                   # q_norm / k_norm [hd]
+    # dense MLP
+    if parent == "mlp":
+        if name in ("up", "gate"):
+            return col(leaf.shape[-1])
+        if name == "down":
+            return P("model", None)
+    # MoE
+    if parent == "moe" or name in ("w_gate", "w_up", "w_down", "router"):
+        if name == "router":
+            return P(None, None)
+        if opts.expert_parallel and leaf.shape[0] % ms == 0:
+            return P("model", None, None)       # experts on model
+        if name in ("w_gate", "w_up"):
+            return P(None, None, "model") if leaf.shape[-1] % ms == 0 \
+                else P(None, None, None)
+        if name == "w_down":
+            return P(None, "model", None) if leaf.shape[-2] % ms == 0 \
+                else P(None, None, None)
+    if parent == "shared":               # MoE shared experts = dense MLP
+        if name in ("gate", "up"):
+            return col(leaf.shape[-1])
+        if name == "down":
+            return P("model", None)
+    # Mamba2
+    if parent == "mamba":
+        if name in ("z_proj", "x_proj"):
+            return col(leaf.shape[-1])
+        if name == "out_proj":
+            return P("model", None) if leaf.shape[-2] % ms == 0 \
+                else P(None, None)
+        if name in ("conv_x", "conv_b_x", "norm"):
+            return P(None, "model") if leaf.ndim == 2 and leaf.shape[-1] % ms == 0 \
+                else (P("model") if leaf.ndim == 1 and leaf.shape[0] % ms == 0
+                      else P(None))
+        if name in ("A_log", "D", "dt_bias"):
+            return P("model") if leaf.shape[0] % ms == 0 else P(None)
+        return P(None) if leaf.ndim == 1 else P(*(None,) * leaf.ndim)
+    # RWKV6
+    if parent == "rwkv":
+        if name in ("wr", "wk", "wv", "wg"):
+            return col(leaf.shape[-1])
+        if name == "wo":
+            return P("model", None)
+        if name == "wB":
+            return col(leaf.shape[-1])
+        if name == "u":
+            return P("model", None) if leaf.shape[0] % ms == 0 else P(None, None)
+        if name == "ln_x":
+            return P("model") if leaf.shape[0] % ms == 0 else P(None)
+        if name == "ck":
+            return col(leaf.shape[-1])
+        if name == "cv":
+            return P("model", None)
+        return P(*(None,) * leaf.ndim)
+    # norms and everything else: replicated
+    return P(*(None,) * leaf.ndim)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                opts: ShardingOptions = ShardingOptions()) -> Any:
+    """Map a params pytree (of ShapeDtypeStruct or arrays) to PartitionSpecs.
+
+    Stacked block params have a leading layer axis: the rule is computed on
+    the per-layer shape and the layer axis is left unsharded.
+    """
+    def spec_for(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        stacked = "blocks" in keys
+        shape = leaf.shape
+        if stacked:
+            shape = shape[1:]
+        view = jax.ShapeDtypeStruct(shape, leaf.dtype)
+        spec = _param_spec(cfg, path, view, opts, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        # final divisibility guard: drop any axis that does not divide
+        fixed = []
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            fixed.append(ax if dim % n == 0 else None)
+        return P(*fixed)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_shardings(cfg: ModelConfig, params_shape, mesh: Mesh,
+                    opts: ShardingOptions = ShardingOptions()):
+    specs = param_specs(cfg, params_shape, mesh, opts)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- data rules
+def token_spec(mesh: Mesh, batch_size: int) -> P:
+    ba = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in ba]))
+    if batch_size % n == 0:
+        return P(ba, None)
+    return P(None, None)       # tiny batches (long_500k): replicate
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, batch_size: int,
+               opts: ShardingOptions = ShardingOptions()):
+    """PartitionSpec factory for KV / state caches (per-leaf, layer-stacked).
+
+    Returns a function path,leaf -> P for tree_map_with_path over the cache
+    pytree produced by init_decode_cache (leaves have a leading layer axis).
+    """
+    ms = _msize(mesh)
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba]))
+    bspec = ba if batch_size % nb == 0 else None
+
+    def leaf_spec(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", "?"))) for k in path]
+        shape = leaf.shape[1:] if leaf.ndim >= 1 else ()
+        # grouped hybrid caches carry two leading stack axes
+        lead = 1
+        if "grouped" in keys:
+            lead = 2
+            shape = leaf.shape[2:]
+        field = keys[-1] if keys else ""
+        pre = (None,) * lead
+        if field in ("k", "v"):            # [B, C, nkv, hd]
+            b, c, nkv, hd = shape
+            seq = "data" if (opts.seq_sharded_cache and bspec is None) else None
+            if nkv % ms == 0:
+                return P(*pre, bspec, seq, "model", None)
+            if hd % ms == 0:
+                return P(*pre, bspec, seq, None, "model")
+            return P(*pre, bspec, seq, None, None)
+        if field in ("k_scale", "v_scale"):   # [B, C, nkv] (int8 cache)
+            b, c, nkv = shape
+            seq = "data" if (opts.seq_sharded_cache and bspec is None) else None
+            return P(*pre, bspec, seq, "model" if nkv % ms == 0 else None)
+        if field == "ssd":                 # [B, nh, hd, ds]
+            b, nh, hd, ds = shape
+            return P(*pre, bspec, "model" if nh % ms == 0 else None,
+                     None, None)
+        if field == "wkv":                 # [B, nh, hd, hd]
+            b, nh, hd, _ = shape
+            return P(*pre, bspec, "model" if nh % ms == 0 else None,
+                     None, None)
+        if field == "conv_x":              # [B, K-1, d_in]
+            return P(*pre, bspec, None,
+                     "model" if shape[-1] % ms == 0 else None)
+        if field in ("shift_tm", "shift_cm"):
+            return P(*pre, bspec, None)
+        if field == "conv_bc":
+            return P(*pre, bspec, None, None)
+        if field == "length":
+            return P(*pre)
+        return P(*(None,) * leaf.ndim)
+
+    return leaf_spec
+
+
+def cache_shardings(cfg: ModelConfig, cache_shape, mesh: Mesh,
+                    batch_size: int,
+                    opts: ShardingOptions = ShardingOptions()):
+    fn = cache_spec(cfg, mesh, batch_size, opts)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, fn(p, l)), cache_shape)

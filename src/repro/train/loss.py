@@ -1,0 +1,24 @@
+"""Next-token cross-entropy, vocab-sharding friendly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def next_token_loss(logits: Array, tokens: Array,
+                    mask: Array | None = None) -> Array:
+    """logits [B, S, V] (positions 0..S-1 predict tokens 1..S);
+    tokens [B, S]. Computed in f32 via logsumexp (GSPMD reduces the
+    vocab-sharded axis with an all-reduce, never materializing a gathered
+    softmax)."""
+    logits = logits[:, :-1, :].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)

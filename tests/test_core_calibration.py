@@ -1,0 +1,82 @@
+"""Accuracy/latency curve calibration (Sec IV-A) and Lambert-W."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.special
+
+from repro.core import fit_accuracy, fit_latency, lambertw0, paper_tasks
+from repro.core.calibration import calibrate_taskset
+
+
+def test_lambertw_against_scipy():
+    with jax.enable_x64(True):
+        z = np.concatenate([[0.0], np.logspace(-12, 290, 300)])
+        ours = np.asarray(lambertw0(jnp.asarray(z)))
+        ref = np.real(scipy.special.lambertw(z))
+        np.testing.assert_allclose(ours, ref, rtol=1e-12, atol=1e-300)
+
+
+def test_lambertw_identity():
+    """w e^w = z on a moderate range (direct identity check)."""
+    with jax.enable_x64(True):
+        z = jnp.asarray(np.logspace(-6, 2, 50))
+        w = lambertw0(z)
+        np.testing.assert_allclose(np.asarray(w * jnp.exp(w)),
+                                   np.asarray(z), rtol=1e-10)
+
+
+def test_lambertw_derivative():
+    with jax.enable_x64(True):
+        for zv in (0.3, 1.0, 7.0, 1e4):
+            g = float(jax.grad(lambertw0)(zv))
+            w = float(np.real(scipy.special.lambertw(zv)))
+            np.testing.assert_allclose(g, w / (zv * (1 + w)), rtol=1e-8)
+
+
+def test_latency_fit_recovers_truth():
+    rng = np.random.default_rng(0)
+    budgets = np.array([0, 64, 128, 256, 512, 1024, 2048])
+    t0, c = 0.21, 0.0127
+    y = t0 + c * budgets + rng.normal(0, 1e-3, size=budgets.shape)
+    fit = fit_latency(budgets, y)
+    np.testing.assert_allclose([fit.t0, fit.c], [t0, c], rtol=2e-2)
+
+
+def test_accuracy_fit_recovers_truth():
+    rng = np.random.default_rng(1)
+    budgets = np.array([0, 32, 64, 128, 256, 512, 1024, 2048, 4096])
+    A, b, D = 0.71, 1.75e-3, 0.148
+    y = A * (1 - np.exp(-b * budgets)) + D + rng.normal(0, 5e-3, budgets.shape)
+    fit = fit_accuracy(budgets, y)
+    np.testing.assert_allclose([fit.A, fit.D], [A, D], atol=0.03)
+    np.testing.assert_allclose(fit.b, b, rtol=0.15)
+    assert fit.rmse < 0.02
+
+
+def test_calibrate_taskset_roundtrip_table1():
+    """Generate clean samples from Table I curves; refit; params recover."""
+    tasks = paper_tasks()
+    budgets = np.array([0, 16, 64, 128, 256, 512, 1024, 2048, 4096, 8192])
+    acc = np.asarray(tasks.A)[:, None] * (
+        1 - np.exp(-np.asarray(tasks.b)[:, None] * budgets[None, :])
+    ) + np.asarray(tasks.D)[:, None]
+    lat = np.asarray(tasks.t0)[:, None] + np.asarray(tasks.c)[:, None] * budgets[None, :]
+    refit = calibrate_taskset(tasks.names, budgets, acc, lat)
+    np.testing.assert_allclose(np.asarray(refit.t0), np.asarray(tasks.t0), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(refit.c), np.asarray(tasks.c), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(refit.A) + np.asarray(refit.D),
+                               np.asarray(tasks.A) + np.asarray(tasks.D), atol=5e-3)
+    # accuracy curves must agree pointwise even if (A, D) trade off slightly
+    refit_acc = np.asarray(refit.A)[:, None] * (
+        1 - np.exp(-np.asarray(refit.b)[:, None] * budgets[None, :])
+    ) + np.asarray(refit.D)[:, None]
+    np.testing.assert_allclose(refit_acc, acc, atol=5e-3)
+
+
+def test_fit_constraints_respected():
+    budgets = np.linspace(0, 4096, 12)
+    y = np.clip(1.2 * (1 - np.exp(-1e-3 * budgets)) + 0.2, 0, 2)  # violates A<=1
+    fit = fit_accuracy(budgets, y)
+    assert 0 < fit.A <= 1.0
+    assert 0 <= fit.D < 1.0
+    assert fit.A + fit.D <= 1.0 + 1e-9

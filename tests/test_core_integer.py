@@ -1,0 +1,76 @@
+"""Integer projection (Sec III-E, eqs 39-41)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (exhaustive_policy, objective, paper_problem,
+                        round_policy, rounding_lower_bound, sandwich, solve)
+from repro.core.integer import coordinate_policy
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+@pytest.fixture(scope="module")
+def lstar(prob):
+    return jnp.asarray(solve(prob).lengths_cont)
+
+
+def test_sandwich_ordering(prob, lstar):
+    """J(l*) >= J_exh >= J_round >= J_bar (the paper's eq-41 sandwich)."""
+    with jax.enable_x64(True):
+        s = sandwich(prob, lstar)
+    assert s["J_continuous"] >= s["J_int_exhaustive"] - 1e-12
+    assert s["J_int_exhaustive"] >= s["J_int_round"] - 1e-12
+    assert s["J_int_coordinate"] >= s["J_int_round"] - 1e-12
+    assert s["J_int_round"] >= s["J_bar_lower_bound"]
+    # gap is small: the paper reports rounding costs ~0 at Table I scale
+    assert s["J_continuous"] - s["J_int_exhaustive"] < 1e-3
+
+
+def test_exhaustive_beats_or_ties_round_everywhere(prob):
+    rng = np.random.default_rng(0)
+    with jax.enable_x64(True):
+        for _ in range(10):
+            l = jnp.asarray(rng.uniform(0, 400, size=6))
+            exh = exhaustive_policy(prob, l)
+            rnd = round_policy(prob, l)
+            assert float(exh.value) >= float(rnd.value) - 1e-12
+
+
+def test_integer_results_are_integers_in_box(prob, lstar):
+    with jax.enable_x64(True):
+        for pol in (exhaustive_policy, round_policy, coordinate_policy):
+            res = pol(prob, lstar)
+            v = np.asarray(res.lengths)
+            np.testing.assert_allclose(v, np.round(v))
+            assert np.all(v >= 0) and np.all(v <= prob.server.l_max)
+
+
+def test_lower_bound_below_true_value(prob):
+    rng = np.random.default_rng(1)
+    with jax.enable_x64(True):
+        for _ in range(20):
+            l = jnp.asarray(rng.uniform(1, 400, size=6))
+            jb = float(rounding_lower_bound(prob, l))
+            jv = float(objective(prob, l))
+            assert jb <= jv + 1e-12
+
+
+def test_exhaustive_refuses_huge_n(prob):
+    import repro.core.integer as integer
+    from repro.core import ServerParams, TaskSet, Problem
+    n = 25
+    tasks = TaskSet(names=tuple(f"t{i}" for i in range(n)),
+                    A=np.full(n, 0.5), b=np.full(n, 1e-3),
+                    D=np.zeros(n), t0=np.full(n, 0.1),
+                    c=np.full(n, 1e-3), pi=np.full(n, 1.0 / n))
+    big = Problem(tasks=tasks, server=ServerParams(0.1, 30.0, 1000.0))
+    with pytest.raises(ValueError):
+        integer.exhaustive_policy(big, jnp.full(n, 10.0))
+    # coordinate policy scales fine
+    res = coordinate_policy(big, jnp.full(n, 10.3))
+    assert np.all(np.asarray(res.lengths) == np.round(np.asarray(res.lengths)))

@@ -1,0 +1,123 @@
+"""Objective J(l), analytic derivatives, and Lemma 1 concavity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (grad, hessian, lipschitz_grad_bound, objective,
+                        paper_problem, service_moments)
+from repro.core.objective import grad_autodiff, hessian_bound_matrix
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+def rand_feasible(prob, rng, n=1):
+    """Random feasible points inside the stability region."""
+    out = []
+    while len(out) < n:
+        l = rng.uniform(0, 2000, size=prob.tasks.n_tasks)
+        m = service_moments(prob.tasks, jnp.asarray(l), prob.server.lam)
+        if float(m.rho) < 0.95:
+            out.append(l)
+    return np.array(out)
+
+
+def test_objective_matches_manual(prob):
+    with jax.enable_x64(True):
+        l = jnp.asarray([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
+        t = np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * np.asarray(l)
+        pi = np.asarray(prob.tasks.pi)
+        es, es2 = (pi * t).sum(), (pi * t * t).sum()
+        lam, alpha = prob.server.lam, prob.server.alpha
+        p = np.asarray(prob.tasks.A) * (1 - np.exp(-np.asarray(prob.tasks.b) * np.asarray(l))) + np.asarray(prob.tasks.D)
+        j_manual = alpha * (pi * p).sum() - lam * es2 / (2 * (1 - lam * es)) - es
+        assert np.isclose(float(objective(prob, l)), j_manual, rtol=1e-12)
+
+
+def test_objective_minus_inf_when_unstable(prob):
+    with jax.enable_x64(True):
+        l = jnp.full(6, prob.server.l_max)  # rho >> 1 at l_max under Table I
+        m = service_moments(prob.tasks, l, prob.server.lam)
+        assert float(m.rho) > 1.0
+        assert float(objective(prob, l)) == -np.inf
+
+
+def test_analytic_grad_matches_autodiff(prob):
+    rng = np.random.default_rng(0)
+    with jax.enable_x64(True):
+        for l in rand_feasible(prob, rng, 8):
+            g1 = np.asarray(grad(prob, jnp.asarray(l)))
+            g2 = np.asarray(grad_autodiff(prob, jnp.asarray(l)))
+            np.testing.assert_allclose(g1, g2, rtol=1e-9, atol=1e-12)
+
+
+def test_analytic_hessian_matches_autodiff(prob):
+    rng = np.random.default_rng(1)
+    with jax.enable_x64(True):
+        hess_fn = jax.hessian(lambda v: objective(prob, v))
+        for l in rand_feasible(prob, rng, 4):
+            h1 = np.asarray(hessian(prob, jnp.asarray(l)))
+            h2 = np.asarray(hess_fn(jnp.asarray(l)))
+            np.testing.assert_allclose(h1, h2, rtol=1e-8, atol=1e-10)
+
+
+def test_lemma1_hessian_negative_definite_on_stability_region(prob):
+    """Lemma 1: J strictly concave <=> Hessian negative definite."""
+    rng = np.random.default_rng(2)
+    with jax.enable_x64(True):
+        for l in rand_feasible(prob, rng, 8):
+            h = np.asarray(hessian(prob, jnp.asarray(l)))
+            eig = np.linalg.eigvalsh(h)
+            assert np.all(eig < 0), f"Hessian not ND at {l}: {eig}"
+
+
+def test_lemma3_hessian_bound_holds_pointwise(prob):
+    """|d2J/dlk dlj| <= H_kj (eq 31) over the stability slab.
+
+    The paper's whole-box constant assumes rho_max < 1, which Table I
+    violates (rho_max ~ 43 at l_max = 32768): the paper form must report
+    +inf, and the slab-restricted variant (lam E[S] <= 0.95) must dominate
+    the true Hessian at every point in the slab.
+    """
+    rng = np.random.default_rng(3)
+    with jax.enable_x64(True):
+        assert not np.isfinite(float(lipschitz_grad_bound(prob)))
+        hb = np.asarray(hessian_bound_matrix(prob, stability_margin=5e-2))
+        assert np.all(np.isfinite(hb))
+        for l in rand_feasible(prob, rng, 8):
+            h = np.abs(np.asarray(hessian(prob, jnp.asarray(l))))
+            assert np.all(h <= hb * (1 + 1e-9))
+        lj = float(lipschitz_grad_bound(prob, stability_margin=5e-2))
+        assert lj >= np.max(np.sum(np.abs(h), axis=1))
+
+
+def test_lemma3_paper_form_when_assumption_holds():
+    """On an instance with rho_max < 1 the paper's constants are finite and
+    dominate the Hessian over the whole box."""
+    from repro.core import ServerParams, Problem, TaskSet
+    tasks = TaskSet(names=("a", "b"), A=[0.5, 0.4], b=[1e-2, 2e-2],
+                    D=[0.1, 0.2], t0=[0.1, 0.2], c=[1e-3, 2e-3],
+                    pi=[0.5, 0.5])
+    prob = Problem(tasks=tasks, server=ServerParams(0.5, 10.0, 1000.0))
+    with jax.enable_x64(True):
+        from repro.core.queueing import worst_case
+        assert float(worst_case(tasks, 0.5, 1000.0).rho_max) < 1.0
+        hb = np.asarray(hessian_bound_matrix(prob))
+        assert np.all(np.isfinite(hb))
+        rng = np.random.default_rng(4)
+        for _ in range(8):
+            l = jnp.asarray(rng.uniform(0, 1000, size=2))
+            h = np.abs(np.asarray(hessian(prob, l)))
+            assert np.all(h <= hb * (1 + 1e-9))
+
+
+def test_grad_decreases_in_l(prob):
+    """Diminishing returns: each diagonal grad component decreases in l_k."""
+    with jax.enable_x64(True):
+        l0 = jnp.zeros(6)
+        l1 = jnp.full(6, 100.0)
+        g0, g1 = grad(prob, l0), grad(prob, l1)
+        assert np.all(np.asarray(g1) < np.asarray(g0))

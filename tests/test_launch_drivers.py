@@ -1,0 +1,50 @@
+"""Driver smoke tests: serve.py, train.py, and a single dry-run combo —
+the deliverable entry points exercised end-to-end inside the suite."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = dict(os.environ, PYTHONPATH="src")
+
+
+def _run(args, timeout=540):
+    return subprocess.run([sys.executable, "-m"] + args, env=ENV,
+                          capture_output=True, text=True, timeout=timeout,
+                          cwd=os.getcwd())
+
+
+def test_serve_driver_virtual():
+    proc = _run(["repro.launch.serve", "--queries", "300"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = proc.stdout.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.strip() == "{")
+    rep = json.loads("\n".join(lines[start:]))
+    assert rep["n"] == 300
+    assert rep["mean_system_time"] == pytest.approx(
+        rep["pk_predicted_system_time"], rel=0.5)
+    assert rep["per_task_budget"]["GSM8K"] > 300
+
+
+def test_train_driver_reduced(tmp_path):
+    proc = _run(["repro.launch.train", "--arch", "olmo-1b", "--reduced",
+                 "--steps", "8", "--batch", "2", "--seq", "32",
+                 "--ckpt", str(tmp_path / "ck"), "--ckpt-every", "4"])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "step     7" in proc.stdout or "step 7" in proc.stdout.replace(
+        "   ", " ")
+    assert (tmp_path / "ck" / "meta.json").exists()
+
+
+def test_dryrun_driver_single_combo(tmp_path):
+    """One real production-mesh combo through the CLI (512 host devices)."""
+    proc = _run(["repro.launch.dryrun", "--arch", "qwen3-0.6b",
+                 "--shape", "decode_32k", "--mesh", "pod",
+                 "--out", str(tmp_path)])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(
+        (tmp_path / "qwen3-0.6b__decode_32k__pod__dryrun.json").read_text())
+    assert out["ok"] and out["n_chips"] == 256
+    assert out["memory_analysis"]["temp_size_in_bytes"] > 0

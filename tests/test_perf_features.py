@@ -1,0 +1,143 @@
+"""Tests for the §Perf levers: kv_repeat, int8 KV cache, remat_group,
+and the roofline analysis tooling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import decode_step, forward, init_decode_cache, init_params, reduced
+
+
+@pytest.fixture(scope="module")
+def base_cfg():
+    return reduced(get_config("qwen3-0.6b"))
+
+
+def _decode_vs_forward(cfg, params, toks):
+    out = forward(cfg, params, toks, return_cache=True,
+                  cache_capacity=toks.shape[1] + 8)
+    tok = jnp.argmax(out.logits[:, -1:], -1).astype(jnp.int32)
+    dec = decode_step(cfg, params, tok, out.cache)
+    ref = forward(cfg, params, jnp.concatenate([toks, tok], 1))
+    return float(jnp.max(jnp.abs(dec.logits[:, 0] - ref.logits[:, -1])))
+
+
+def test_int8_kv_cache_close_to_exact(base_cfg):
+    cfg8 = dataclasses.replace(base_cfg, kv_cache_dtype="int8")
+    params = init_params(base_cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0,
+                              base_cfg.vocab_size)
+    exact = _decode_vs_forward(base_cfg, params, toks)
+    quant = _decode_vs_forward(cfg8, params, toks)
+    assert exact < 1e-4
+    assert quant < 0.1          # int8 noise, far below logit scale
+    # cache layout really is int8
+    cache = init_decode_cache(cfg8, 2, capacity=16)
+    leaf = jax.tree.leaves(cache["layers"])
+    assert any(l.dtype == jnp.int8 for l in leaf)
+    assert any(str(l.dtype) == "float32" and l.ndim == 4 for l in leaf)  # scales stacked
+
+
+def test_int8_cache_pure_decode(base_cfg):
+    cfg8 = dataclasses.replace(base_cfg, kv_cache_dtype="int8")
+    params = init_params(base_cfg, jax.random.PRNGKey(0))
+    cache = init_decode_cache(cfg8, 2, capacity=32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(4):
+        out = decode_step(cfg8, params, tok, cache)
+        cache, tok = out.cache, jnp.argmax(out.logits, -1).astype(jnp.int32)
+        assert bool(jnp.isfinite(out.logits.astype(jnp.float32)).all())
+
+
+def test_kv_repeat_consistency(base_cfg):
+    """kv_repeat expands the KV projections; the model still satisfies
+    decode == forward (it is a valid GQA model with more kv heads)."""
+    cfg2 = dataclasses.replace(base_cfg, n_kv_heads=1, kv_repeat=2)
+    cfg2.validate()
+    assert cfg2.n_kv_eff == 2
+    with pytest.raises(AssertionError):
+        # kv_eff must divide n_heads
+        dataclasses.replace(base_cfg, kv_repeat=8).validate()
+    params = init_params(cfg2, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg2.vocab_size)
+    assert _decode_vs_forward(cfg2, params, toks) < 1e-3
+    # param shapes expanded
+    wk = params["blocks"]["attn"]["wk"]
+    assert wk.shape[-1] == cfg2.n_kv_eff * cfg2.hd
+
+
+def test_remat_group_exact_equivalence():
+    cfg = reduced(get_config("zamba2-7b"))
+    cfg_g = dataclasses.replace(cfg, remat=True, remat_group=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    a = forward(cfg, params, toks).logits
+    b = forward(cfg_g, params, toks).logits
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roofline_collective_parser():
+    from repro.roofline.analysis import parse_collective_bytes
+
+    hlo = """
+      %ag = bf16[128,1024] all-gather(%x), dimensions={0}
+      %ar.1 = f32[256] all-reduce(%y), to_apply=%sum
+      %tup = (f32[16,16], f32[16,16]) all-to-all(%a, %b)
+      %cp = u8[512] collective-permute(%z)
+      %ars = f32[64] all-reduce-start(%w)
+      %notacoll = f32[999] add(%p, %q)
+    """
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4 + 64 * 4
+    assert out["all-to-all"] == 2 * 16 * 16 * 4
+    assert out["collective-permute"] == 512
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms_and_bottleneck():
+    from repro.launch.shapes import SHAPES
+    from repro.roofline.analysis import analyze
+
+    cfg = get_config("olmo-1b")
+    cost = {"flops": 1e15, "bytes accessed": 1e12}
+    hlo = "%ag = bf16[1024,1024] all-gather(%x)"
+    r = analyze(cost, hlo, cfg, SHAPES["train_4k"], 256)
+    assert r.compute_s == pytest.approx(1e15 / 197e12)
+    assert r.memory_s == pytest.approx(1e12 / 819e9)
+    assert r.collective_s == pytest.approx(1024 * 1024 * 2 / 50e9)
+    assert r.bottleneck == "compute"
+    assert r.model_flops_global == pytest.approx(
+        6 * cfg.active_param_count() * 256 * 4096)
+
+
+def test_mgc_erlang_c_sane():
+    from repro.core.mgc import erlang_c
+
+    # M/M/1: P(wait) = rho
+    assert float(erlang_c(1, jnp.asarray(0.5))) == pytest.approx(0.5, rel=1e-6)
+    # more servers at equal load -> lower waiting probability
+    p2 = float(erlang_c(2, jnp.asarray(1.0)))
+    p4 = float(erlang_c(4, jnp.asarray(2.0)))
+    assert p4 < p2 < 1.0
+
+
+def test_use_kernels_model_path_matches_jnp():
+    """The Pallas-kernel execution path (use_kernels=True; interpret mode on
+    CPU) reproduces the jnp reference path through the full model."""
+    for arch in ("stablelm-3b", "qwen3-0.6b"):
+        cfg = reduced(get_config(arch))
+        cfgk = dataclasses.replace(cfg, use_kernels=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                  cfg.vocab_size)
+        a = forward(cfg, params, toks).logits
+        b = forward(cfgk, params, toks).logits
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-4, arch

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) for the core system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ServerParams, Problem, TaskSet, grad, objective,
+                        service_moments, solve_fixed_point)
+from repro.core.integer import exhaustive_policy, round_policy
+from repro.core.lambertw import lambertw0
+from repro.core.queueing import stability_clip
+
+
+def _problem_strategy():
+    n = st.shared(st.integers(min_value=1, max_value=5), key="n")
+
+    def arrays(lo, hi):
+        return n.flatmap(lambda k: st.lists(
+            st.floats(lo, hi, allow_nan=False, allow_infinity=False),
+            min_size=k, max_size=k).map(np.array))
+
+    return st.builds(
+        lambda A, b, D, t0, c, w, lam, alpha, lmax: Problem(
+            tasks=TaskSet(
+                names=tuple(f"t{i}" for i in range(len(A))),
+                A=np.clip(A, 1e-3, 1.0),
+                b=b, D=np.minimum(D, 1.0 - np.clip(A, 1e-3, 1.0)),
+                t0=t0, c=c, pi=np.asarray(w) / np.sum(w)),
+            server=ServerParams(lam, alpha, lmax)),
+        arrays(1e-3, 0.9), arrays(1e-4, 0.5), arrays(0.0, 0.5),
+        arrays(1e-3, 1.0), arrays(1e-3, 0.1), arrays(0.1, 1.0),
+        st.floats(1e-3, 0.5), st.floats(0.1, 100.0), st.floats(10.0, 5000.0),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(_problem_strategy())
+def test_solver_output_feasible_and_stationary(prob):
+    """Whatever the instance, the solver's answer is feasible, stable, and
+    satisfies the projected-KKT conditions."""
+    try:
+        prob.validate()
+    except ValueError:
+        return  # infeasible instance generated; nothing to solve
+    with jax.enable_x64(True):
+        fp = solve_fixed_point(prob, tol=1e-9, max_iters=2000)
+        l = np.asarray(fp.lengths)
+        assert np.all(l >= 0) and np.all(l <= prob.server.l_max)
+        m = service_moments(prob.tasks, fp.lengths, prob.server.lam)
+        assert float(m.rho) < 1.0
+        if bool(fp.converged):
+            g = np.asarray(grad(prob, fp.lengths))
+            interior = (l > 1e-9) & (l < prob.server.l_max - 1e-9)
+            scale = 1.0 + np.max(np.abs(g))
+            assert np.all(np.abs(g[interior]) <= 1e-5 * scale)
+            assert np.all(g[l <= 1e-9] <= 1e-5 * scale)
+            assert np.all(g[l >= prob.server.l_max - 1e-9] >= -1e-5 * scale)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_problem_strategy(),
+       st.lists(st.floats(0, 5000), min_size=5, max_size=5))
+def test_objective_concavity_along_segments(prob, raw):
+    """J(midpoint) >= (J(a)+J(b))/2 for feasible a, b (concavity, Lemma 1)."""
+    try:
+        prob.validate()
+    except ValueError:
+        return
+    with jax.enable_x64(True):
+        n = prob.tasks.n_tasks
+        a = stability_clip(prob.tasks, prob.server.lam,
+                           jnp.asarray(raw[:n]) % prob.server.l_max, 0.05)
+        b = stability_clip(prob.tasks, prob.server.lam,
+                           jnp.asarray(raw[::-1][:n]) % prob.server.l_max, 0.05)
+        ja, jb = float(objective(prob, a)), float(objective(prob, b))
+        jm = float(objective(prob, (a + b) / 2.0))
+        assert jm >= (ja + jb) / 2.0 - 1e-9 * (1 + abs(ja) + abs(jb))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_problem_strategy(),
+       st.lists(st.floats(0, 3000), min_size=5, max_size=5))
+def test_integer_policies_feasible(prob, raw):
+    try:
+        prob.validate()
+    except ValueError:
+        return
+    with jax.enable_x64(True):
+        n = prob.tasks.n_tasks
+        l = stability_clip(prob.tasks, prob.server.lam,
+                           jnp.asarray(raw[:n]) % prob.server.l_max, 0.02)
+        for pol in (exhaustive_policy, round_policy):
+            res = pol(prob, l)
+            v = np.asarray(res.lengths)
+            assert np.all(v == np.round(v))
+            assert np.all((v >= 0) & (v <= prob.server.l_max))
+        assert float(exhaustive_policy(prob, l).value) >= \
+            float(round_policy(prob, l).value) - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.0, 1e12))
+def test_lambertw_identity_property(z):
+    with jax.enable_x64(True):
+        w = float(lambertw0(z))
+        assert w >= 0.0
+        if z > 0:
+            # identity in log space is stable at any magnitude
+            assert abs((w + np.log(max(w, 1e-300))) - np.log(z)) < 1e-6 or \
+                abs(w * np.exp(w) - z) <= 1e-8 * max(z, 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_problem_strategy(), st.lists(st.floats(0, 1e5), min_size=5, max_size=5))
+def test_stability_clip_property(prob, raw):
+    try:
+        prob.validate()
+    except ValueError:
+        return
+    with jax.enable_x64(True):
+        n = prob.tasks.n_tasks
+        l = jnp.asarray(raw[:n])
+        lc = stability_clip(prob.tasks, prob.server.lam, l, 1e-3)
+        m = service_moments(prob.tasks, lc, prob.server.lam)
+        assert float(m.rho) <= 1.0 - 1e-3 + 1e-9
+        assert np.all(np.asarray(lc) <= np.asarray(l) + 1e-12)
+        # idempotent on already-stable points (atol: XLA flushes subnormal
+        # inputs to zero, found by hypothesis with l ~ 1e-308)
+        m0 = service_moments(prob.tasks, l, prob.server.lam)
+        if float(m0.rho) < 1.0 - 1e-3:
+            np.testing.assert_allclose(np.asarray(lc), np.asarray(l),
+                                       atol=1e-300)

@@ -1,0 +1,103 @@
+"""DES validation of the M/G/1 analysis (paper Sec II-A / IV)."""
+import numpy as np
+import pytest
+
+from repro.core import ServerParams, Problem, TaskSet, paper_problem, solve
+from repro.queueing_sim import (empirical_mixture, generate_stream,
+                                pk_prediction, simulate)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+@pytest.fixture(scope="module")
+def lstar(prob):
+    return solve(prob).lengths_int
+
+
+@pytest.fixture(scope="module")
+def stream(prob):
+    return generate_stream(prob.tasks, prob.server.lam, 20_000, seed=7)
+
+
+def test_poisson_stream_statistics(prob, stream):
+    gaps = np.diff([0.0] + [q.arrival for q in stream.queries])
+    assert np.all(gaps > 0)
+    # exponential(1/lam): mean 1/lam, CV ~ 1
+    assert abs(gaps.mean() - 1.0 / prob.server.lam) < 0.5
+    assert abs(gaps.std() / gaps.mean() - 1.0) < 0.05
+    mix = empirical_mixture(stream, prob.tasks.n_tasks)
+    np.testing.assert_allclose(mix, np.asarray(prob.tasks.pi), atol=0.02)
+
+
+def test_des_matches_pollaczek_khinchine(prob, lstar, stream):
+    """The FIFO DES must agree with the P-K formula (eq 5-6) within MC noise."""
+    res = simulate(prob, lstar, stream)
+    pred = pk_prediction(prob, lstar)
+    assert res.mean_wait == pytest.approx(pred["mean_wait"], rel=0.10)
+    assert res.mean_system_time == pytest.approx(pred["mean_system_time"],
+                                                 rel=0.05)
+    assert res.mean_service == pytest.approx(pred["mean_service"], rel=0.02)
+    assert res.utilization == pytest.approx(pred["utilization"], rel=0.05)
+
+
+def test_des_matches_pk_across_loads(prob, stream):
+    """P-K agreement at several uniform operating points (incl. heavy load)."""
+    for uniform in (0.0, 100.0, 500.0):
+        l = np.full(6, uniform)
+        res = simulate(prob, l, stream)
+        pred = pk_prediction(prob, l)
+        tol = 0.05 if pred["utilization"] < 0.5 else 0.25  # heavy tail noise
+        assert res.mean_system_time == pytest.approx(
+            pred["mean_system_time"], rel=tol)
+
+
+def test_realized_accuracy_matches_model(prob, lstar, stream):
+    res = simulate(prob, lstar, stream)
+    assert res.accuracy == pytest.approx(res.mean_accuracy_prob, abs=0.015)
+
+
+def test_optimal_beats_uniform_policies(prob, lstar, stream):
+    """Paper Fig 3: J(l*) dominates uniform {0, 100, 500} allocations."""
+    res_opt = simulate(prob, lstar, stream)
+    for uniform in (0.0, 100.0, 500.0):
+        res_u = simulate(prob, np.full(6, uniform), stream)
+        assert res_opt.objective > res_u.objective
+
+
+def test_fifo_order_preserved(prob, lstar):
+    """Under FIFO, start times are ordered by arrival."""
+    s = generate_stream(prob.tasks, prob.server.lam, 500, seed=3)
+    res = simulate(prob, lstar, s)
+    assert res.n == 500
+
+
+def test_sjf_reduces_wait(prob, stream):
+    """Beyond-paper ablation: SJF <= FIFO in mean wait (classic result)."""
+    l = np.full(6, 300.0)
+    fifo = simulate(prob, l, stream)
+    sjf = simulate(prob, l, stream, discipline="sjf")
+    assert sjf.mean_wait <= fifo.mean_wait + 1e-9
+
+
+def test_unknown_discipline_raises(prob, lstar, stream):
+    with pytest.raises(ValueError):
+        simulate(prob, lstar, stream, discipline="lifo")
+
+
+def test_custom_service_fn(prob, lstar):
+    """The DES accepts an engine-backed service-time function."""
+    s = generate_stream(prob.tasks, prob.server.lam, 200, seed=1)
+    res = simulate(prob, lstar, s,
+                   service_time_fn=lambda q, l: 0.5)
+    assert res.mean_service == pytest.approx(0.5)
+
+
+def test_deterministic_given_seed(prob, lstar):
+    s1 = generate_stream(prob.tasks, prob.server.lam, 300, seed=42)
+    s2 = generate_stream(prob.tasks, prob.server.lam, 300, seed=42)
+    r1, r2 = simulate(prob, lstar, s1), simulate(prob, lstar, s2)
+    assert r1.mean_system_time == r2.mean_system_time
+    assert r1.accuracy == r2.accuracy
