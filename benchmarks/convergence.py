@@ -14,6 +14,7 @@ from repro.core import (ServerParams, Problem, contraction_certificate,
 from repro.core.fixed_point import empirical_contraction_estimate
 
 from .common import emit
+from repro.compat import enable_x64
 
 
 def main() -> None:
@@ -21,7 +22,7 @@ def main() -> None:
     for lam in (0.05, 0.1, 0.3):
         prob = Problem(tasks=base.tasks,
                        server=ServerParams(lam, 30.0, 32768.0))
-        with jax.enable_x64(True):
+        with enable_x64():
             fp = solve_fixed_point(prob, tol=1e-10)
             pgb = solve_pga_backtracking(prob, tol=1e-10)
             emit(f"conv.lam_{lam}.fp_iters", int(fp.iterations),
@@ -50,7 +51,7 @@ def main() -> None:
     # conservative, so measure the J-gap after a fixed budget, not residuals
     from repro.core import objective
     prob = paper_problem()
-    with jax.enable_x64(True):
+    with enable_x64():
         ref = solve_fixed_point(prob, tol=1e-12)
         pg = solve_pga(prob, tol=1e-7, max_iters=100_000)
         jgap = float(objective(prob, ref.lengths)

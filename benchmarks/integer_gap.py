@@ -9,6 +9,7 @@ from repro.core import (ServerParams, Problem, paper_problem, sandwich,
                         solve, solve_fixed_point)
 
 from .common import emit
+from repro.compat import enable_x64
 
 
 def main() -> None:
@@ -17,7 +18,7 @@ def main() -> None:
         prob = Problem(tasks=base.tasks,
                        server=ServerParams(lam, 30.0, 32768.0))
         sol = solve(prob)
-        with jax.enable_x64(True):
+        with enable_x64():
             s = sandwich(prob, jnp.asarray(sol.lengths_cont))
         gap_round = s["J_continuous"] - s["J_int_round"]
         gap_bound = s["J_continuous"] - s["J_bar_lower_bound"]

@@ -1,12 +1,16 @@
 """End-to-end serving benchmark: the real server (allocator + scheduler +
 virtual clock) under the paper workload, plus beyond-paper modes
-(SJF/priority disciplines, batched service, online adaptation, M/G/c)."""
+(SJF/priority disciplines, batched service, online adaptation, M/G/c).
+
+The FIFO row is cross-checked against two independent predictions: the
+Pollaczek-Khinchine formula and a seed-averaged batched Lindley DES
+(``queueing_sim.sweep``) at the allocator's integer budgets."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import paper_problem, solve_mgc
-from repro.queueing_sim import generate_stream, pk_prediction
+from repro.queueing_sim import generate_stream, pk_prediction, sweep
 from repro.serving import LLMServer, ServerConfig
 
 from .common import emit, timed
@@ -21,9 +25,14 @@ def main() -> None:
         return srv.run(stream), srv
 
     (fifo, srv), us = timed(lambda: run(), repeat=1)
-    pred = pk_prediction(prob, list(srv.allocator.solution.lengths_int))
+    budgets = np.asarray(srv.allocator.solution.lengths_int, dtype=float)
+    pred = pk_prediction(prob, list(budgets))
+    des = sweep(prob, {"opt": budgets}, lams=[prob.server.lam], n_seeds=8,
+                n_queries=5000, seed=3, clip_unstable=False)
     emit("serve.fifo.mean_system_time", f"{fifo.mean_system_time:.4f}",
-         f"pk={pred['mean_system_time']:.4f}")
+         f"pk={pred['mean_system_time']:.4f}, "
+         f"des={des.mean_system_time[0, 0]:.4f}"
+         f"+-{des.ci_system_time[0, 0]:.4f}")
     emit("serve.fifo.p99_system_time", f"{fifo.p99_system_time:.4f}", "")
     emit("serve.fifo.objective", f"{fifo.objective:.4f}", "")
     emit("serve.fifo.utilization", f"{fifo.utilization:.4f}", "")

@@ -8,6 +8,7 @@ from repro.core import (PAPER_TABLE1_LSTAR, paper_problem, solve,
                         solve_fixed_point, solve_pga_backtracking)
 
 from .common import emit, timed
+from repro.compat import enable_x64
 
 
 def main() -> None:
@@ -27,7 +28,7 @@ def main() -> None:
     emit("table1.method", sol.method, f"iters={sol.iterations}")
 
     import jax
-    with jax.enable_x64(True):
+    with enable_x64():
         _, us_fp = timed(lambda: solve_fixed_point(prob).lengths.block_until_ready())
         _, us_pga = timed(lambda: solve_pga_backtracking(prob)
                           .lengths.block_until_ready())

@@ -2,7 +2,9 @@
 
 Sweeps arrival rate and replica count: how the optimal budgets shrink under
 load (the accuracy-latency tradeoff tightening) and how M/G/c replication
-buys utility back.
+buys utility back. Every operating point on the load sweep is validated by
+Monte-Carlo: one batched Lindley call simulates the whole (lambda x policy
+x seed) grid and reports the realized objective next to the analytic one.
 
     PYTHONPATH=src python examples/capacity_planning.py
 """
@@ -10,23 +12,45 @@ import numpy as np
 
 from repro.core import (ServerParams, Problem, paper_problem, solve,
                         solve_mgc)
+from repro.queueing_sim import sweep
 
 
 def main():
     base = paper_problem()
+    lams = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5)
     print("=== load sweep (single server) ===")
-    print(f"{'lam':>6} {'J':>9} {'rho':>6}  budgets")
-    for lam in (0.05, 0.1, 0.2, 0.3, 0.4, 0.5):
+    sols = {}
+    for lam in lams:
         prob = Problem(tasks=base.tasks,
                        server=ServerParams(lam, 30.0, 32768.0))
-        sol = solve(prob)
-        from repro.core import service_moments
-        import jax.numpy as jnp
-        rho = float(service_moments(prob.tasks,
-                                    jnp.asarray(sol.lengths_cont),
-                                    lam).rho)
-        print(f"{lam:6.2f} {sol.value_cont:9.4f} {rho:6.3f}  "
-              f"{np.round(sol.lengths_cont).astype(int)}")
+        sols[lam] = solve(prob)
+
+    # DES validation: the full (lambda x policy) grid in one vectorized
+    # call — every lambda's traffic against every lambda's optimal budgets
+    # (6 x 6 x 8 seeds x 10k queries). The diagonal validates each solve;
+    # the off-diagonal cells measure how much a load-mismatched allocation
+    # costs, i.e. why the allocation must be queueing-aware at all.
+    policies = {f"lam_{lam}": np.asarray(sols[lam].lengths_int)
+                for lam in lams}
+    des = sweep(base, policies, lams=list(lams), n_seeds=8,
+                n_queries=10_000, seed=0, clip_unstable=False)
+    print(f"{'lam':>6} {'J':>9} {'J_des':>9} {'+-':>7} {'rho':>6} "
+          f"{'util':>6} {'mismatch':>9}  budgets")
+    for i, lam in enumerate(lams):
+        sol = sols[lam]
+        p = list(des.policy_names).index(f"lam_{lam}")
+        # worst regret from serving this traffic with another load's budgets
+        mismatch = float(des.objective[i, p] - des.objective[i].min())
+        print(f"{lam:6.2f} {sol.value_cont:9.4f} "
+              f"{des.objective[i, p]:9.4f} {des.ci_objective[i, p]:7.4f} "
+              f"{des.rho_analytic[i, p]:6.3f} {des.utilization[i, p]:6.3f} "
+              f"{mismatch:9.4f}  {np.round(sol.lengths_cont).astype(int)}")
+    matched_best = all(
+        des.objective[i, list(des.policy_names).index(f'lam_{lam}')]
+        >= des.objective[i].max() - 2 * des.ci_objective[i].max()
+        for i, lam in enumerate(lams))
+    print(f"load-matched budgets best at every lambda (within 2 CI): "
+          f"{matched_best}")
 
     print("\n=== replica sweep at lam=0.5 (M/G/c approximation) ===")
     prob = Problem(tasks=base.tasks, server=ServerParams(0.5, 30.0, 32768.0))

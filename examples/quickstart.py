@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core import (objective, paper_problem, sandwich, solve)
 from repro.queueing_sim import generate_stream, pk_prediction, simulate
+from repro.compat import enable_x64
 
 
 def main():
@@ -26,7 +27,7 @@ def main():
 
     # 3. The eq-41 sandwich: continuous >= integer >= lower bound
     import jax
-    with jax.enable_x64(True):
+    with enable_x64():
         s = sandwich(prob, jnp.asarray(sol.lengths_cont))
     print(f"\nsandwich: J_cont={s['J_continuous']:.6f} >= "
           f"J_int={s['J_int_exhaustive']:.6f} >= "

@@ -1,0 +1,35 @@
+"""Compatibility helpers papering over JAX API drift.
+
+``jax.enable_x64`` (the context-manager form) was removed in JAX 0.4.37;
+``jax.experimental.enable_x64`` is the supported spelling on both older and
+newer releases. Everything in the repo that needs double precision for the
+control-plane solvers goes through :func:`enable_x64` so the next rename is
+a one-line fix.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # pragma: no cover - depends on installed JAX version
+    _enable_x64 = jax.enable_x64  # type: ignore[attr-defined]
+except AttributeError:
+    from jax.experimental import enable_x64 as _enable_x64
+
+
+def enable_x64(enabled: bool = True):
+    """Context manager enabling 64-bit JAX computation within its scope."""
+    return _enable_x64(enabled)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the CompilerParams rename.
+
+    Newer JAX exposes ``pltpu.CompilerParams``; the 0.4.x line this repo is
+    pinned against only has ``pltpu.TPUCompilerParams``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -50,9 +50,9 @@ def solve(problem: Problem, tol: float = 1e-8,
 
     Runs under x64 (control-plane precision; N ~ 10 scalars, cost is nil).
     """
-    import jax
+    from ..compat import enable_x64
 
-    with jax.enable_x64(True):
+    with enable_x64():
         return _solve_x64(problem, tol, integer_method)
 
 

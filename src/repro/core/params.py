@@ -35,7 +35,7 @@ class TaskSet:
     def __post_init__(self):
         # Stored as host numpy float64: task parameters are control-plane
         # constants. jnp ops promote them at trace time, so solvers run in
-        # f64 under `jax.enable_x64(True)` and f32 otherwise.
+        # f64 under `repro.compat.enable_x64()` and f32 otherwise.
         for f in ("A", "b", "D", "t0", "c", "pi"):
             object.__setattr__(self, f, np.asarray(getattr(self, f),
                                                    dtype=np.float64))

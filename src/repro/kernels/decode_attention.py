@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from ..compat import pallas_tpu_compiler_params
 
 DEFAULT_BLOCK_C = 512
 NEG_INF = -1e30
@@ -89,7 +90,7 @@ def decode_attention(q, k, v, valid, *, block_c: int = DEFAULT_BLOCK_C,
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, valid)

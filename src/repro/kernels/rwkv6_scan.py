@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from ..compat import pallas_tpu_compiler_params
 
 DEFAULT_CHUNK = 64
 
@@ -91,7 +92,7 @@ def rwkv6_scan(r, k, v, la, u, *, chunk: int = DEFAULT_CHUNK,
             jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, la, u)

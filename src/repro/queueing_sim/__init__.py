@@ -1,6 +1,21 @@
-"""Event-driven queueing simulation validating the paper's M/G/1 analysis."""
+"""Queueing simulation validating the paper's M/G/1 analysis.
+
+Two simulator paths share one workload model:
+
+* ``mg1.simulate`` — scalar heapq event loop; reference path, and the only
+  path supporting the beyond-paper SJF/priority disciplines.
+* ``batched`` — vectorized Lindley-recursion FIFO fast path (NumPy
+  cumulative pass or vmapped JAX ``lax.scan``), batched across
+  (seeds x policies x arrival rates) via :func:`generate_streams`,
+  :func:`simulate_fifo_batch`, and :func:`sweep`.
+"""
+from .batched import (BatchStats, SweepResult, lindley_jax, lindley_numpy,
+                      simulate_fifo, simulate_fifo_batch, sweep)
 from .mg1 import SimResult, pk_prediction, simulate
-from .workload import Query, Stream, empirical_mixture, generate_stream
+from .workload import (Query, Stream, StreamBatch, empirical_mixture,
+                       generate_stream, generate_streams)
 
 __all__ = ["SimResult", "simulate", "pk_prediction", "Stream", "Query",
-           "generate_stream", "empirical_mixture"]
+           "generate_stream", "empirical_mixture", "StreamBatch",
+           "generate_streams", "BatchStats", "SweepResult", "lindley_numpy",
+           "lindley_jax", "simulate_fifo", "simulate_fifo_batch", "sweep"]

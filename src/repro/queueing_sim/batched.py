@@ -1,0 +1,381 @@
+"""Batched, vmappable M/G/1 FIFO simulation via the Lindley recursion.
+
+The legacy simulator (``mg1.simulate``) is a scalar Python heapq event loop.
+That generality is only needed for the beyond-paper SJF/priority disciplines;
+under FIFO — the paper's discipline — a non-preemptive single server obeys
+the Lindley recursion
+
+    start_i  = max(arrival_i, finish_{i-1})
+    finish_i = start_i + service_i
+
+which unrolls into the max-plus closed form
+
+    finish_i = CS_i + max_{j<=i} (arrival_j - CS_{j-1}),   CS_i = sum_{k<=i} S_k
+
+i.e. one cumulative sum plus one running maximum. This module implements
+that two ways:
+
+* **NumPy cumulative pass** (:func:`lindley_numpy`): ``cumsum`` +
+  ``maximum.accumulate`` over the trailing query axis, vectorized over
+  arbitrary leading batch axes — an entire (lambda-grid x policy x seed)
+  sweep is a handful of O(total) array ops.
+* **JAX scan** (:func:`lindley_jax`): ``lax.scan`` over queries, ``vmap``-ed
+  across flattened batch axes and jit-compiled in float64, replicating the
+  event loop's exact operation order (useful when the sweep should live
+  on-device next to the allocator's solvers).
+
+Layered on top:
+
+* :func:`simulate_fifo` — drop-in scalar replacement for
+  ``mg1.simulate(..., discipline="fifo")`` (same :class:`SimResult`).
+* :func:`simulate_fifo_batch` — a policy stack ``[P, N]`` against a
+  :class:`StreamBatch` ``[S, n]`` in one call, returning ``[P, S]`` stats.
+* :func:`sweep` / :class:`SweepResult` — the fig3/fig4 grid: policies x
+  arrival rates x seeds with per-cell means, 95% confidence intervals, the
+  analytic rho from ``core.queueing.service_moments``, and optional
+  ``core.queueing.stability_clip`` projection of unstable cells.
+
+SJF and priority disciplines intentionally stay on the heapq reference path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..core.params import Problem
+from ..core.queueing import service_moments, stability_clip
+from .mg1 import SimResult, accuracy_np
+from .workload import Stream, StreamBatch, generate_streams
+
+__all__ = [
+    "lindley_numpy", "lindley_jax", "simulate_fifo", "simulate_fifo_batch",
+    "sweep", "BatchStats", "SweepResult",
+]
+
+
+# --------------------------------------------------------------------------
+# Lindley kernels
+# --------------------------------------------------------------------------
+
+def lindley_numpy(arrivals, services):
+    """Vectorized FIFO start/finish times, ``[..., n] -> ([..., n], [..., n])``.
+
+    One cumulative pass: O(n) work per stream, no Python loop over queries.
+    Leading axes are independent streams (seeds, policies, arrival rates...).
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    services = np.asarray(services, dtype=np.float64)
+    arrivals, services = np.broadcast_arrays(arrivals, services)
+    cs = np.cumsum(services, axis=-1)
+    # slack_j = arrival_j - CS_{j-1}; computed in place to keep the pass at
+    # three large temporaries (cs, finish, start) for the whole grid
+    finish = arrivals - cs
+    finish += services
+    np.maximum.accumulate(finish, axis=-1, out=finish)
+    finish += cs
+    start = finish - services
+    return start, finish
+
+
+def lindley_jax(arrivals, services):
+    """``lax.scan`` Lindley recursion, vmapped over flattened leading axes.
+
+    Runs in float64 (via the compat x64 context) and reproduces the heapq
+    event loop's operation order exactly, so it is bitwise-comparable to the
+    reference DES. Returns host numpy arrays shaped like the inputs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..compat import enable_x64
+
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    services = np.asarray(services, dtype=np.float64)
+    arrivals, services = np.broadcast_arrays(arrivals, services)
+    shape = arrivals.shape
+    n = shape[-1]
+    if n == 0:
+        return np.zeros(shape), np.zeros(shape)
+
+    with enable_x64():
+        a = jnp.asarray(arrivals).reshape(-1, n)
+        s = jnp.asarray(services).reshape(-1, n)
+
+        def one_stream(ai, si):
+            def step(prev_finish, xs):
+                arr, svc = xs
+                start = jnp.maximum(arr, prev_finish)
+                fin = start + svc
+                return fin, (start, fin)
+
+            _, (st, fin) = jax.lax.scan(step, jnp.float64(0.0), (ai, si))
+            return st, fin
+
+        st, fin = jax.jit(jax.vmap(one_stream))(a, s)
+        return (np.asarray(st).reshape(shape), np.asarray(fin).reshape(shape))
+
+
+def _lindley(arrivals, services, backend: str):
+    if backend == "numpy":
+        return lindley_numpy(arrivals, services)
+    if backend == "jax":
+        return lindley_jax(arrivals, services)
+    raise ValueError(f"unknown backend {backend!r} (expected 'numpy'|'jax')")
+
+
+# --------------------------------------------------------------------------
+# Stats layers
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchStats:
+    """Per-cell statistics over leading batch axes (query axis reduced)."""
+
+    mean_wait: np.ndarray
+    mean_system_time: np.ndarray
+    mean_service: np.ndarray
+    utilization: np.ndarray
+    accuracy: np.ndarray
+    mean_accuracy_prob: np.ndarray
+    objective: np.ndarray
+
+
+def _service_table(problem: Problem, lengths: np.ndarray) -> np.ndarray:
+    """t_k(l_k) for a stack of allocations, ``[..., N] -> [..., N]``."""
+    t0 = np.asarray(problem.tasks.t0)
+    c = np.asarray(problem.tasks.c)
+    return t0 + c * np.asarray(lengths, dtype=np.float64)
+
+
+def _accuracy_table(problem: Problem, lengths: np.ndarray) -> np.ndarray:
+    """p_k(l_k) for a stack of allocations (shared f64 mirror of eq 2)."""
+    return accuracy_np(problem.tasks, lengths)
+
+
+def _batch_stats(problem: Problem, arrivals, services, start, finish,
+                 p_query, correct_us) -> BatchStats:
+    """Reduce per-query trajectories to per-cell statistics.
+
+    ``arrivals``/``correct_us`` may have fewer leading axes than
+    ``start``/``finish`` (streams shared across a policy stack); means are
+    taken before broadcasting so no ``[P, S, n]`` temporaries materialize.
+    """
+    mean_arrival = np.asarray(arrivals).mean(axis=-1)
+    mean_wait = start.mean(axis=-1) - mean_arrival
+    mean_sys = finish.mean(axis=-1) - mean_arrival
+    busy = services.sum(axis=-1)
+    makespan = np.maximum(finish[..., -1], 1e-12)
+    acc_prob = p_query.mean(axis=-1)
+    shape = np.broadcast_shapes(mean_wait.shape, acc_prob.shape)
+    return BatchStats(
+        mean_wait=np.broadcast_to(mean_wait, shape),
+        mean_system_time=np.broadcast_to(mean_sys, shape),
+        mean_service=np.broadcast_to(services.mean(axis=-1), shape),
+        utilization=np.broadcast_to(busy / makespan, shape),
+        accuracy=(correct_us < p_query).mean(axis=-1),
+        mean_accuracy_prob=acc_prob,
+        objective=problem.server.alpha * acc_prob - np.broadcast_to(
+            mean_sys, shape),
+    )
+
+
+def simulate_fifo(problem: Problem, lengths, stream: Stream,
+                  backend: str = "numpy") -> SimResult:
+    """Drop-in fast path for ``mg1.simulate(problem, lengths, stream)``.
+
+    FIFO only. Agrees with the heapq reference within ~1e-10 on identical
+    streams (see ``tests/test_batched_sim.py``).
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    n = len(stream.queries)
+    n_tasks = problem.tasks.n_tasks
+    if n == 0:
+        return SimResult(mean_wait=0.0, mean_system_time=0.0,
+                         mean_service=0.0, utilization=0.0, accuracy=0.0,
+                         mean_accuracy_prob=0.0, objective=0.0,
+                         per_task_system_time=np.zeros(n_tasks),
+                         per_task_count=np.zeros(n_tasks, dtype=np.int64),
+                         n=0)
+    types = np.array([q.task for q in stream.queries])
+    arrivals = np.array([q.arrival for q in stream.queries])
+    us = np.array([q.correct_u for q in stream.queries])
+    services = _service_table(problem, lengths)[types]
+    start, finish = _lindley(arrivals, services, backend)
+    p_query = _accuracy_table(problem, lengths)[types]
+    stats = _batch_stats(problem, arrivals, services, start, finish,
+                         p_query, us)
+    sys_times = finish - arrivals
+    per_task_sys = np.zeros(n_tasks)
+    per_task_cnt = np.bincount(types, minlength=n_tasks)
+    for k in range(n_tasks):
+        if per_task_cnt[k]:
+            per_task_sys[k] = sys_times[types == k].mean()
+    return SimResult(
+        mean_wait=float(stats.mean_wait),
+        mean_system_time=float(stats.mean_system_time),
+        mean_service=float(stats.mean_service),
+        utilization=float(stats.utilization),
+        accuracy=float(stats.accuracy),
+        mean_accuracy_prob=float(stats.mean_accuracy_prob),
+        objective=float(stats.objective),
+        per_task_system_time=per_task_sys,
+        per_task_count=per_task_cnt,
+        n=n,
+    )
+
+
+def simulate_fifo_batch(problem: Problem, lengths, batch: StreamBatch,
+                        backend: str = "numpy") -> BatchStats:
+    """Simulate a policy stack against a seed batch in one call.
+
+    ``lengths``: ``[N]`` or ``[P, N]`` token budgets; ``batch``: ``[S, n]``
+    streams. Returns :class:`BatchStats` with shape ``[S]`` or ``[P, S]``.
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    single = lengths.ndim == 1
+    L = lengths[None, :] if single else lengths          # [P, N]
+    t_table = _service_table(problem, L)                 # [P, N]
+    p_table = _accuracy_table(problem, L)                # [P, N]
+    services = t_table[:, batch.types]                   # [P, S, n]
+    p_query = p_table[:, batch.types]                    # [P, S, n]
+    start, finish = _lindley(batch.arrivals, services, backend)
+    stats = _batch_stats(problem, batch.arrivals, services, start, finish,
+                         p_query, batch.correct_us)
+    if single:
+        stats = BatchStats(**{f.name: getattr(stats, f.name)[0]
+                              for f in dataclasses.fields(BatchStats)})
+    return stats
+
+
+# --------------------------------------------------------------------------
+# Sweep layer: (arrival rate x policy x seed) grids in one batched call
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Aggregated (lambda x policy) grid; all per-cell arrays are ``[L, P]``.
+
+    ``mean_*``/``utilization``/``accuracy``/``objective`` are means over the
+    seed axis; ``ci_*`` are 95% normal-approximation half-widths over seeds.
+    ``rho_analytic`` is the Pollaczek-Khinchine utilization from
+    ``service_moments`` at the (possibly stability-clipped) budgets actually
+    simulated, recorded in ``lengths`` ``[L, P, N]``.
+    """
+
+    lams: np.ndarray
+    policy_names: tuple
+    lengths: np.ndarray
+    rho_analytic: np.ndarray
+    mean_wait: np.ndarray
+    mean_system_time: np.ndarray
+    utilization: np.ndarray
+    accuracy: np.ndarray
+    mean_accuracy_prob: np.ndarray
+    objective: np.ndarray
+    ci_wait: np.ndarray
+    ci_system_time: np.ndarray
+    ci_objective: np.ndarray
+    n_seeds: int
+    n_queries: int
+
+    def objective_at(self, alpha: float) -> np.ndarray:
+        """Re-weight the realized objective post-hoc for an alpha sweep.
+
+        J = alpha * E[p] - E[T_sys] is affine in alpha given the simulated
+        accuracy and delay, so a whole alpha grid costs no extra simulation.
+        """
+        return alpha * self.mean_accuracy_prob - self.mean_system_time
+
+    def cell(self, lam_idx: int, policy: str) -> dict:
+        p = self.policy_names.index(policy)
+        return {
+            "lam": float(self.lams[lam_idx]),
+            "lengths": self.lengths[lam_idx, p],
+            "rho_analytic": float(self.rho_analytic[lam_idx, p]),
+            "mean_wait": float(self.mean_wait[lam_idx, p]),
+            "mean_system_time": float(self.mean_system_time[lam_idx, p]),
+            "utilization": float(self.utilization[lam_idx, p]),
+            "accuracy": float(self.accuracy[lam_idx, p]),
+            "objective": float(self.objective[lam_idx, p]),
+            "ci_system_time": float(self.ci_system_time[lam_idx, p]),
+        }
+
+
+def _ci95(x: np.ndarray) -> np.ndarray:
+    """95% half-width over the trailing (seed) axis; 0 for a single seed."""
+    s = x.shape[-1]
+    if s < 2:
+        return np.zeros(x.shape[:-1])
+    return 1.96 * x.std(axis=-1, ddof=1) / np.sqrt(s)
+
+
+def sweep(problem: Problem, policies: Mapping[str, Sequence[float]],
+          lams: Sequence[float], n_seeds: int = 16,
+          n_queries: int = 10_000, seed: int = 0, backend: str = "numpy",
+          clip_unstable: bool = True, margin: float = 1e-3,
+          prompt_len_range=(16, 128)) -> SweepResult:
+    """Monte-Carlo (lambda x policy x seed) grid in one batched Lindley call.
+
+    For every arrival rate, the same master ``seed`` regenerates the batch,
+    so cells are common random numbers across both policies and rates (the
+    exponential gaps at different rates are exact scalings of one another).
+    Budgets that would destabilize a cell (rho >= 1) are projected onto the
+    stability slab with ``stability_clip`` when ``clip_unstable`` is set —
+    mirroring what the projected solvers guarantee for their own iterates.
+    """
+    import jax.numpy as jnp
+
+    names = tuple(policies.keys())
+    P = len(names)
+    Lg = len(lams)
+    N = problem.tasks.n_tasks
+    base = np.stack([np.asarray(policies[k], dtype=np.float64)
+                     for k in names])                      # [P, N]
+
+    lengths = np.empty((Lg, P, N))
+    rho = np.empty((Lg, P))
+    services = np.empty((Lg, P, n_seeds, n_queries))
+    arrivals = np.empty((Lg, 1, n_seeds, n_queries))
+    p_query = np.empty((Lg, P, n_seeds, n_queries))
+    us = np.empty((Lg, 1, n_seeds, n_queries))
+    for i, lam in enumerate(lams):
+        for p in range(P):
+            lp = base[p]
+            if clip_unstable:
+                lp = np.asarray(stability_clip(problem.tasks, float(lam),
+                                               jnp.asarray(lp), margin))
+            lengths[i, p] = lp
+            rho[i, p] = float(service_moments(problem.tasks,
+                                              jnp.asarray(lp),
+                                              float(lam)).rho)
+        batch = generate_streams(problem.tasks, float(lam), n_seeds,
+                                 n_queries, seed=seed,
+                                 prompt_len_range=prompt_len_range)
+        services[i] = _service_table(problem, lengths[i])[:, batch.types]
+        p_query[i] = _accuracy_table(problem, lengths[i])[:, batch.types]
+        arrivals[i, 0] = batch.arrivals
+        us[i, 0] = batch.correct_us
+
+    start, finish = _lindley(arrivals, services, backend)
+    stats = _batch_stats(problem, arrivals, services, start, finish,
+                         p_query, us)
+
+    return SweepResult(
+        lams=np.asarray(lams, dtype=np.float64),
+        policy_names=names,
+        lengths=lengths,
+        rho_analytic=rho,
+        mean_wait=stats.mean_wait.mean(axis=-1),
+        mean_system_time=stats.mean_system_time.mean(axis=-1),
+        utilization=stats.utilization.mean(axis=-1),
+        accuracy=stats.accuracy.mean(axis=-1),
+        mean_accuracy_prob=stats.mean_accuracy_prob.mean(axis=-1),
+        objective=stats.objective.mean(axis=-1),
+        ci_wait=_ci95(stats.mean_wait),
+        ci_system_time=_ci95(stats.mean_system_time),
+        ci_objective=_ci95(stats.objective),
+        n_seeds=n_seeds,
+        n_queries=n_queries,
+    )

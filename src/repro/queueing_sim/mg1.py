@@ -5,6 +5,13 @@ Poisson arrivals and type draws. FIFO is the paper's discipline; SJF and
 non-preemptive priority are beyond-paper ablations showing how much of the
 optimal allocation's gain is discipline-specific.
 
+This heapq event loop is the *reference* path: it handles every discipline
+but simulates one scalar stream per Python call. FIFO workloads should use
+the vectorized Lindley fast path in ``queueing_sim.batched``
+(``simulate_fifo`` / ``simulate_fifo_batch`` / ``sweep``), which agrees with
+this loop to ~1e-10 and batches whole (seed x policy x rate) grids into one
+array pass; the equivalence is pinned by ``tests/test_batched_sim.py``.
+
 The simulator also evaluates the realized objective: per-query accuracy is
 Bernoulli(p_k(l_k)) using the stream's pre-drawn uniforms so that policies
 are compared on common random numbers.
@@ -43,6 +50,17 @@ def _service_times(problem: Problem, lengths: np.ndarray,
     return t0[types] + c[types] * np.asarray(lengths)[types]
 
 
+def accuracy_np(tasks, lengths) -> np.ndarray:
+    """p_k(l_k) (eq 2) in host float64.
+
+    ``TaskSet.accuracy`` traces through jnp, which rounds to f32 unless x64
+    is enabled; both simulator paths score correctness through this numpy
+    mirror so they agree to ~1e-15 rather than ~1e-7.
+    """
+    A, b, D = (np.asarray(x) for x in (tasks.A, tasks.b, tasks.D))
+    return A * (1.0 - np.exp(-b * np.asarray(lengths, dtype=np.float64))) + D
+
+
 def simulate(problem: Problem, lengths, stream: Stream,
              discipline: str = "fifo",
              service_time_fn: Callable | None = None) -> SimResult:
@@ -55,6 +73,18 @@ def simulate(problem: Problem, lengths, stream: Stream,
     """
     lengths = np.asarray(lengths, dtype=np.float64)
     n = len(stream.queries)
+    if n == 0:
+        # Empty stream: every statistic is a mean over zero queries; return a
+        # well-defined zeroed result instead of crashing on .max()/.mean().
+        n_tasks = problem.tasks.n_tasks
+        return SimResult(
+            mean_wait=0.0, mean_system_time=0.0, mean_service=0.0,
+            utilization=0.0, accuracy=0.0, mean_accuracy_prob=0.0,
+            objective=0.0,
+            per_task_system_time=np.zeros(n_tasks),
+            per_task_count=np.zeros(n_tasks, dtype=np.int64),
+            n=0,
+        )
     types = np.array([q.task for q in stream.queries])
     arrivals = np.array([q.arrival for q in stream.queries])
     if service_time_fn is None:
@@ -70,7 +100,7 @@ def simulate(problem: Problem, lengths, stream: Stream,
         keys = services
     elif discipline == "priority":
         # marginal utility density: alpha pi_k p_k / t_k -- serve high first
-        p = np.asarray(problem.tasks.accuracy(lengths))
+        p = accuracy_np(problem.tasks, lengths)
         dens = p[types] / np.maximum(services, 1e-12)
         keys = -dens
     else:
@@ -103,7 +133,7 @@ def simulate(problem: Problem, lengths, stream: Stream,
 
     waits = start - arrivals
     sys_times = finish - arrivals
-    p = np.asarray(problem.tasks.accuracy(lengths))
+    p = accuracy_np(problem.tasks, lengths)
     us = np.array([q.correct_u for q in stream.queries])
     correct = us < p[types]
     acc_prob = float(np.mean(p[types]))

@@ -5,6 +5,18 @@ Poisson process with rate lambda; each query is type k w.p. pi_k,
 independently. The same stream object drives both the analytical DES
 (service time = t_k(l_k)) and the end-to-end serving engine (service =
 actual prefill+decode of l_k tokens).
+
+Two representations:
+
+* :class:`Stream` — a tuple of :class:`Query` objects, consumed by the
+  legacy event-driven simulator (``mg1.simulate``) and the serving engine.
+* :class:`StreamBatch` — ``[n_seeds, n_queries]`` arrays from a single RNG
+  (:func:`generate_streams`), consumed by the vectorized Lindley simulator
+  (``batched``). Replicates share nothing across rows, but identical master
+  seeds reproduce the whole batch bit-for-bit, and because the exponential
+  gaps are a fixed scale factor of the underlying standard draws, batches
+  generated at different arrival rates from the same seed are common random
+  numbers (variance reduction across a lambda sweep).
 """
 from __future__ import annotations
 
@@ -55,3 +67,65 @@ def generate_stream(tasks: TaskSet, lam: float, n_queries: int,
 def empirical_mixture(stream: Stream, n_tasks: int) -> np.ndarray:
     counts = np.bincount([q.task for q in stream.queries], minlength=n_tasks)
     return counts / counts.sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamBatch:
+    """``[n_seeds, n_queries]`` query streams for the batched simulator."""
+
+    arrivals: np.ndarray      # [S, n] float64, per-replicate arrival times
+    types: np.ndarray         # [S, n] int, task-type index k
+    prompt_lens: np.ndarray   # [S, n] int, prompt tokens
+    correct_us: np.ndarray    # [S, n] float64, uniforms for Bernoulli(p_k)
+    lam: float
+    seed: int
+
+    @property
+    def n_seeds(self) -> int:
+        return int(self.arrivals.shape[0])
+
+    @property
+    def n_queries(self) -> int:
+        return int(self.arrivals.shape[1])
+
+    @property
+    def horizon(self) -> np.ndarray:
+        """Last arrival time per replicate, shape ``[S]``."""
+        if self.n_queries == 0:
+            return np.zeros(self.n_seeds)
+        return self.arrivals[:, -1]
+
+    def stream(self, i: int) -> Stream:
+        """Materialize replicate ``i`` as a legacy :class:`Stream` (for the
+        heapq reference path / equivalence tests)."""
+        queries = tuple(
+            Query(qid=j, task=int(self.types[i, j]),
+                  arrival=float(self.arrivals[i, j]),
+                  prompt_len=int(self.prompt_lens[i, j]),
+                  correct_u=float(self.correct_us[i, j]))
+            for j in range(self.n_queries)
+        )
+        horizon = float(self.arrivals[i, -1]) if self.n_queries else 0.0
+        return Stream(queries=queries, lam=self.lam, horizon=horizon)
+
+
+def generate_streams(tasks: TaskSet, lam: float, n_seeds: int,
+                     n_queries: int, seed: int = 0,
+                     prompt_len_range=(16, 128)) -> StreamBatch:
+    """``n_seeds`` independent replicates of the Sec IV workload, one RNG.
+
+    All ``[n_seeds, n_queries]`` blocks are drawn in a single pass from one
+    ``default_rng(seed)``, in the same field order as :func:`generate_stream`
+    (gaps, types, prompt lengths, correctness uniforms), so the batch is a
+    pure function of ``(seed, lam, shapes)``.
+    """
+    rng = np.random.default_rng(seed)
+    shape = (n_seeds, n_queries)
+    gaps = rng.exponential(1.0 / lam, size=shape)
+    arrivals = np.cumsum(gaps, axis=1)
+    types = rng.choice(tasks.n_tasks, size=shape, p=np.asarray(tasks.pi))
+    plens = rng.integers(prompt_len_range[0], prompt_len_range[1] + 1,
+                         size=shape)
+    us = rng.uniform(size=shape)
+    return StreamBatch(arrivals=arrivals, types=types, prompt_lens=plens,
+                       correct_us=us, lam=lam, seed=seed)

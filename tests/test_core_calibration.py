@@ -6,10 +6,11 @@ import scipy.special
 
 from repro.core import fit_accuracy, fit_latency, lambertw0, paper_tasks
 from repro.core.calibration import calibrate_taskset
+from repro.compat import enable_x64
 
 
 def test_lambertw_against_scipy():
-    with jax.enable_x64(True):
+    with enable_x64():
         z = np.concatenate([[0.0], np.logspace(-12, 290, 300)])
         ours = np.asarray(lambertw0(jnp.asarray(z)))
         ref = np.real(scipy.special.lambertw(z))
@@ -18,7 +19,7 @@ def test_lambertw_against_scipy():
 
 def test_lambertw_identity():
     """w e^w = z on a moderate range (direct identity check)."""
-    with jax.enable_x64(True):
+    with enable_x64():
         z = jnp.asarray(np.logspace(-6, 2, 50))
         w = lambertw0(z)
         np.testing.assert_allclose(np.asarray(w * jnp.exp(w)),
@@ -26,7 +27,7 @@ def test_lambertw_identity():
 
 
 def test_lambertw_derivative():
-    with jax.enable_x64(True):
+    with enable_x64():
         for zv in (0.3, 1.0, 7.0, 1e4):
             g = float(jax.grad(lambertw0)(zv))
             w = float(np.real(scipy.special.lambertw(zv)))

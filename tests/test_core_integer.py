@@ -7,6 +7,7 @@ import pytest
 from repro.core import (exhaustive_policy, objective, paper_problem,
                         round_policy, rounding_lower_bound, sandwich, solve)
 from repro.core.integer import coordinate_policy
+from repro.compat import enable_x64
 
 
 @pytest.fixture(scope="module")
@@ -21,7 +22,7 @@ def lstar(prob):
 
 def test_sandwich_ordering(prob, lstar):
     """J(l*) >= J_exh >= J_round >= J_bar (the paper's eq-41 sandwich)."""
-    with jax.enable_x64(True):
+    with enable_x64():
         s = sandwich(prob, lstar)
     assert s["J_continuous"] >= s["J_int_exhaustive"] - 1e-12
     assert s["J_int_exhaustive"] >= s["J_int_round"] - 1e-12
@@ -33,7 +34,7 @@ def test_sandwich_ordering(prob, lstar):
 
 def test_exhaustive_beats_or_ties_round_everywhere(prob):
     rng = np.random.default_rng(0)
-    with jax.enable_x64(True):
+    with enable_x64():
         for _ in range(10):
             l = jnp.asarray(rng.uniform(0, 400, size=6))
             exh = exhaustive_policy(prob, l)
@@ -42,7 +43,7 @@ def test_exhaustive_beats_or_ties_round_everywhere(prob):
 
 
 def test_integer_results_are_integers_in_box(prob, lstar):
-    with jax.enable_x64(True):
+    with enable_x64():
         for pol in (exhaustive_policy, round_policy, coordinate_policy):
             res = pol(prob, lstar)
             v = np.asarray(res.lengths)
@@ -52,7 +53,7 @@ def test_integer_results_are_integers_in_box(prob, lstar):
 
 def test_lower_bound_below_true_value(prob):
     rng = np.random.default_rng(1)
-    with jax.enable_x64(True):
+    with enable_x64():
         for _ in range(20):
             l = jnp.asarray(rng.uniform(1, 400, size=6))
             jb = float(rounding_lower_bound(prob, l))

@@ -7,6 +7,7 @@ import pytest
 from repro.core import (grad, hessian, lipschitz_grad_bound, objective,
                         paper_problem, service_moments)
 from repro.core.objective import grad_autodiff, hessian_bound_matrix
+from repro.compat import enable_x64
 
 
 @pytest.fixture(scope="module")
@@ -26,7 +27,7 @@ def rand_feasible(prob, rng, n=1):
 
 
 def test_objective_matches_manual(prob):
-    with jax.enable_x64(True):
+    with enable_x64():
         l = jnp.asarray([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
         t = np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * np.asarray(l)
         pi = np.asarray(prob.tasks.pi)
@@ -38,7 +39,7 @@ def test_objective_matches_manual(prob):
 
 
 def test_objective_minus_inf_when_unstable(prob):
-    with jax.enable_x64(True):
+    with enable_x64():
         l = jnp.full(6, prob.server.l_max)  # rho >> 1 at l_max under Table I
         m = service_moments(prob.tasks, l, prob.server.lam)
         assert float(m.rho) > 1.0
@@ -47,7 +48,7 @@ def test_objective_minus_inf_when_unstable(prob):
 
 def test_analytic_grad_matches_autodiff(prob):
     rng = np.random.default_rng(0)
-    with jax.enable_x64(True):
+    with enable_x64():
         for l in rand_feasible(prob, rng, 8):
             g1 = np.asarray(grad(prob, jnp.asarray(l)))
             g2 = np.asarray(grad_autodiff(prob, jnp.asarray(l)))
@@ -56,7 +57,7 @@ def test_analytic_grad_matches_autodiff(prob):
 
 def test_analytic_hessian_matches_autodiff(prob):
     rng = np.random.default_rng(1)
-    with jax.enable_x64(True):
+    with enable_x64():
         hess_fn = jax.hessian(lambda v: objective(prob, v))
         for l in rand_feasible(prob, rng, 4):
             h1 = np.asarray(hessian(prob, jnp.asarray(l)))
@@ -67,7 +68,7 @@ def test_analytic_hessian_matches_autodiff(prob):
 def test_lemma1_hessian_negative_definite_on_stability_region(prob):
     """Lemma 1: J strictly concave <=> Hessian negative definite."""
     rng = np.random.default_rng(2)
-    with jax.enable_x64(True):
+    with enable_x64():
         for l in rand_feasible(prob, rng, 8):
             h = np.asarray(hessian(prob, jnp.asarray(l)))
             eig = np.linalg.eigvalsh(h)
@@ -83,7 +84,7 @@ def test_lemma3_hessian_bound_holds_pointwise(prob):
     the true Hessian at every point in the slab.
     """
     rng = np.random.default_rng(3)
-    with jax.enable_x64(True):
+    with enable_x64():
         assert not np.isfinite(float(lipschitz_grad_bound(prob)))
         hb = np.asarray(hessian_bound_matrix(prob, stability_margin=5e-2))
         assert np.all(np.isfinite(hb))
@@ -102,7 +103,7 @@ def test_lemma3_paper_form_when_assumption_holds():
                     D=[0.1, 0.2], t0=[0.1, 0.2], c=[1e-3, 2e-3],
                     pi=[0.5, 0.5])
     prob = Problem(tasks=tasks, server=ServerParams(0.5, 10.0, 1000.0))
-    with jax.enable_x64(True):
+    with enable_x64():
         from repro.core.queueing import worst_case
         assert float(worst_case(tasks, 0.5, 1000.0).rho_max) < 1.0
         hb = np.asarray(hessian_bound_matrix(prob))
@@ -116,7 +117,7 @@ def test_lemma3_paper_form_when_assumption_holds():
 
 def test_grad_decreases_in_l(prob):
     """Diminishing returns: each diagonal grad component decreases in l_k."""
-    with jax.enable_x64(True):
+    with enable_x64():
         l0 = jnp.zeros(6)
         l1 = jnp.full(6, 100.0)
         g0, g1 = grad(prob, l0), grad(prob, l1)

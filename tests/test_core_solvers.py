@@ -10,6 +10,7 @@ from repro.core import (PAPER_TABLE1_LSTAR, ServerParams, Problem, TaskSet,
                         solve_fixed_point, solve_pga,
                         solve_pga_backtracking)
 from repro.core.fixed_point import fixed_point_map, jacobian_bound_matrix
+from repro.compat import enable_x64
 
 
 @pytest.fixture(scope="module")
@@ -34,7 +35,7 @@ def test_table1_reproduction(prob):
 
 
 def test_fp_and_pga_agree(prob):
-    with jax.enable_x64(True):
+    with enable_x64():
         fp = solve_fixed_point(prob, tol=1e-10)
         pg = solve_pga_backtracking(prob, tol=1e-10)
         assert bool(fp.converged) and bool(pg.converged)
@@ -44,7 +45,7 @@ def test_fp_and_pga_agree(prob):
 
 def test_fixed_point_is_kkt_point(prob):
     """At l*, interior coordinates satisfy l = l_hat(l) and grad = 0."""
-    with jax.enable_x64(True):
+    with enable_x64():
         fp = solve_fixed_point(prob, tol=1e-12)
         l = fp.lengths
         lhat = fixed_point_map(prob, l)
@@ -69,7 +70,7 @@ def test_contraction_certificate_table1(prob):
     assert not np.isfinite(float(contraction_certificate(prob)))
     linf_slab = float(contraction_certificate(prob, stability_margin=5e-2))
     assert np.isfinite(linf_slab)
-    with jax.enable_x64(True):
+    with enable_x64():
         jac = jax.jacfwd(lambda v: fixed_point_map(prob, v))(
             jnp.asarray([10.0, 300.0, 10.0, 10.0, 300.0, 30.0]))
         bound = np.asarray(jacobian_bound_matrix(prob, stability_margin=5e-2))
@@ -95,7 +96,7 @@ def test_contraction_certificate_is_vacuous_but_bound_valid():
     prob = Problem(tasks=tasks, server=ServerParams(0.5, 10.0, 500.0))
     linf = float(contraction_certificate(prob))
     assert np.isfinite(linf) and linf > 1.0   # finite (assumption holds), vacuous
-    with jax.enable_x64(True):
+    with enable_x64():
         emp = float(empirical_contraction_estimate(prob, n_samples=16))
         assert emp < 1.0                       # the map actually contracts
         assert emp <= linf
@@ -105,7 +106,7 @@ def test_contraction_certificate_is_vacuous_but_bound_valid():
 
 def test_fp_converges_from_many_starts(prob):
     rng = np.random.default_rng(0)
-    with jax.enable_x64(True):
+    with enable_x64():
         ref = np.asarray(solve_fixed_point(prob, tol=1e-10).lengths)
         for _ in range(5):
             l0 = rng.uniform(0, 500, size=6)
@@ -116,7 +117,7 @@ def test_fp_converges_from_many_starts(prob):
 
 def test_pga_global_step_bound_converges(prob):
     """Plain PGA with eta < 2/L_J (the paper's guarantee, eq 38)."""
-    with jax.enable_x64(True):
+    with enable_x64():
         eta = float(safe_step_size(prob, safety=0.9))
         assert eta > 0
         pg = solve_pga(prob, eta=eta, tol=1e-6, max_iters=500_000)
@@ -131,7 +132,7 @@ def test_pga_global_step_bound_converges(prob):
 
 def test_monotone_ascent(prob):
     """J increases along the backtracking PGA trajectory."""
-    with jax.enable_x64(True):
+    with enable_x64():
         l = jnp.zeros(6)
         j_prev = float(objective(prob, l))
         eta = 100.0 * float(safe_step_size(prob))
@@ -160,7 +161,7 @@ def test_non_contractive_instance_pga_still_solves():
     prob = _two_task_problem(lam=1.5, alpha=20.0)
     prob.validate()
     sol = solve(prob)
-    with jax.enable_x64(True):
+    with enable_x64():
         # dense grid verification of global optimality (2 tasks only)
         grid = np.linspace(0, prob.server.l_max, 201)
         xx, yy = np.meshgrid(grid, grid, indexing="ij")

@@ -1,8 +1,14 @@
-"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles."""
+"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles.
+
+``hypothesis`` is an optional dev dependency: when it is not installed this
+module is skipped at collection time rather than erroring.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dependency")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
