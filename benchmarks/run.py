@@ -15,6 +15,7 @@ MODULES = (
     "fig4_sensitivity",  # Fig 4: GSM8K budget sweep + eq-41 bound
     "integer_gap",       # Sec III-E sandwich across loads
     "convergence",       # Sec III-C/D solver behaviour + certificates
+    "solver_grid_bench",  # vmapped grid solver vs scalar loop (100 cells)
     "serving_bench",     # end-to-end server + ablations + M/G/c
     "engine_bench",      # CPU decode microbench (reduced archs)
     "calibration_bridge",  # roofline -> (t0,c) -> re-solve loop

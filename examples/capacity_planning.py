@@ -2,55 +2,82 @@
 
 Sweeps arrival rate and replica count: how the optimal budgets shrink under
 load (the accuracy-latency tradeoff tightening) and how M/G/c replication
-buys utility back. Every operating point on the load sweep is validated by
-Monte-Carlo: one batched Lindley call simulates the whole (lambda x policy
-x seed) grid and reports the realized objective next to the analytic one.
+buys utility back. The whole load sweep is now solved in ONE vmapped grid
+call (``repro.sweeps.solve_grid``; the scalar facade is cross-checked at
+one operating point), every operating point is validated by Monte-Carlo in
+one batched Lindley call, and the solved grid answers the capacity
+questions directly: Pareto frontier, heavy-traffic (rho_0 -> 1) behaviour,
+and "max sustainable lambda at target accuracy".
 
     PYTHONPATH=src python examples/capacity_planning.py
 """
 import numpy as np
 
-from repro.core import (ServerParams, Problem, paper_problem, solve,
-                        solve_mgc)
+from repro.core import ServerParams, Problem, paper_problem, solve_mgc
 from repro.queueing_sim import sweep
+from repro.sweeps import (heavy_traffic_slice, max_sustainable_lambda,
+                          pareto_front, reference_check, solve_grid)
 
 
 def main():
     base = paper_problem()
     lams = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5)
-    print("=== load sweep (single server) ===")
-    sols = {}
-    for lam in lams:
-        prob = Problem(tasks=base.tasks,
-                       server=ServerParams(lam, 30.0, 32768.0))
-        sols[lam] = solve(prob)
+    print("=== load sweep (single server, one grid solve) ===")
+    grid = solve_grid(base.tasks, np.asarray(lams), base.server.alpha,
+                      base.server.l_max)
+    # scalar reference: the facade the serving stack uses must agree
+    reference_check(base.tasks, grid, cells=[1])
 
     # DES validation: the full (lambda x policy) grid in one vectorized
     # call — every lambda's traffic against every lambda's optimal budgets
     # (6 x 6 x 8 seeds x 10k queries). The diagonal validates each solve;
     # the off-diagonal cells measure how much a load-mismatched allocation
     # costs, i.e. why the allocation must be queueing-aware at all.
-    policies = {f"lam_{lam}": np.asarray(sols[lam].lengths_int)
-                for lam in lams}
+    policies = {f"lam_{lam}": np.asarray(grid.lengths_int[i])
+                for i, lam in enumerate(lams)}
     des = sweep(base, policies, lams=list(lams), n_seeds=8,
                 n_queries=10_000, seed=0, clip_unstable=False)
     print(f"{'lam':>6} {'J':>9} {'J_des':>9} {'+-':>7} {'rho':>6} "
           f"{'util':>6} {'mismatch':>9}  budgets")
     for i, lam in enumerate(lams):
-        sol = sols[lam]
         p = list(des.policy_names).index(f"lam_{lam}")
         # worst regret from serving this traffic with another load's budgets
         mismatch = float(des.objective[i, p] - des.objective[i].min())
-        print(f"{lam:6.2f} {sol.value_cont:9.4f} "
+        print(f"{lam:6.2f} {grid.value_cont[i]:9.4f} "
               f"{des.objective[i, p]:9.4f} {des.ci_objective[i, p]:7.4f} "
               f"{des.rho_analytic[i, p]:6.3f} {des.utilization[i, p]:6.3f} "
-              f"{mismatch:9.4f}  {np.round(sol.lengths_cont).astype(int)}")
+              f"{mismatch:9.4f}  "
+              f"{np.round(grid.lengths_cont[i]).astype(int)}")
     matched_best = all(
         des.objective[i, list(des.policy_names).index(f'lam_{lam}')]
         >= des.objective[i].max() - 2 * des.ci_objective[i].max()
         for i, lam in enumerate(lams))
     print(f"load-matched budgets best at every lambda (within 2 CI): "
           f"{matched_best}")
+
+    print("\n=== capacity queries on the solved grid ===")
+    pf = pareto_front(grid)
+    print("accuracy/E[T_sys] Pareto frontier (undominated load points):")
+    for a, t, lam in zip(pf["accuracy"], pf["system_time"], pf["lam"]):
+        print(f"  lam={lam:5.2f}  accuracy={a:.4f}  E[T_sys]={t:7.3f}s")
+    for target in (0.40, 0.30):
+        q = max_sustainable_lambda(base.tasks, base.server.alpha,
+                                   base.server.l_max, min_accuracy=target,
+                                   n_grid=17, refine=1)
+        print(f"max sustainable lambda at accuracy >= {target}: "
+              f"{q['lam']:.3f} q/s (accuracy {q['accuracy']:.4f}, "
+              f"E[T_sys] {q['system_time']:.3f}s)")
+
+    print("\n=== heavy traffic: rho_0 -> 1 slice ===")
+    ht = heavy_traffic_slice(base.tasks, base.server.alpha,
+                             base.server.l_max, [0.5, 0.9, 0.95, 0.98])
+    for i in range(ht.n_cells):
+        print(f"rho_0={ht.lam[i] * np.sum(np.asarray(base.tasks.pi) * np.asarray(base.tasks.t0)):.3f} "
+              f"lam={ht.lam[i]:6.3f}  rho*={ht.rho_int[i]:.3f}  "
+              f"budgets={ht.lengths_int[i].astype(int)}  "
+              f"J={ht.value_int[i]:8.4f}")
+    print("reading: approaching saturation the allocator sheds thinking "
+          "tokens entirely — stability eats the whole accuracy budget.")
 
     print("\n=== replica sweep at lam=0.5 (M/G/c approximation) ===")
     prob = Problem(tasks=base.tasks, server=ServerParams(0.5, 30.0, 32768.0))

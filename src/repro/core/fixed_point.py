@@ -26,14 +26,15 @@ Array = jnp.ndarray
 
 
 def coefficients(problem: Problem, lengths: Array):
-    """L_k(l) (eq 20) and K_k(l) (eq 21)."""
+    """L_k(l) (eq 20) and K_k(l) (eq 21); batched over leading axes."""
     tasks, sp = problem.tasks, problem.server
     m = service_moments(tasks, lengths, sp.lam)
-    L = sp.alpha * tasks.A * tasks.b * m.slack / (sp.lam * tasks.c ** 2)
+    slack, es2 = m.slack[..., None], m.es2[..., None]
+    L = sp.alpha * tasks.A * tasks.b * slack / (sp.lam * tasks.c ** 2)
     K = (
         -tasks.t0 / tasks.c
-        - m.slack / (sp.lam * tasks.c)
-        - sp.lam * m.es2 / (2.0 * tasks.c * m.slack)
+        - slack / (sp.lam * tasks.c)
+        - sp.lam * es2 / (2.0 * tasks.c * slack)
     )
     return L, K
 
@@ -75,7 +76,14 @@ class FPResult(NamedTuple):
 
 def solve_fixed_point(problem: Problem, l0: Array | None = None,
                       tol: float = 1e-8, max_iters: int = 500) -> FPResult:
-    """Projected fixed-point iteration (eq 24) via lax.while_loop."""
+    """Projected fixed-point iteration (eq 24) via lax.while_loop.
+
+    ``l0`` may carry leading batch axes (``[..., N]``): every cell iterates
+    its own sequence, lanes that reach ``residual <= tol`` are frozen (their
+    state no longer updates), and ``residual``/``converged`` come back with
+    the leading shape ``[...]``. ``iterations`` is the shared loop counter —
+    the max iteration count over the batch.
+    """
     sp = problem.server
     tasks = problem.tasks
     if l0 is None:
@@ -87,18 +95,20 @@ def solve_fixed_point(problem: Problem, l0: Array | None = None,
 
     def cond(state):
         _, it, res = state
-        return jnp.logical_and(it < max_iters, res > tol)
+        return jnp.logical_and(it < max_iters, jnp.any(res > tol))
 
     def body(state):
-        l, it, _ = state
-        l_new = stability_clip(tasks, sp.lam,
-                               project(fixed_point_map(problem, l), sp.l_max))
-        res = jnp.max(jnp.abs(l_new - l))
-        return l_new, it + 1, res
+        l, it, res = state
+        active = res > tol
+        l_cand = stability_clip(tasks, sp.lam,
+                                project(fixed_point_map(problem, l), sp.l_max))
+        l_new = jnp.where(active[..., None], l_cand, l)
+        res_new = jnp.where(active, jnp.max(jnp.abs(l_cand - l), axis=-1),
+                            res)
+        return l_new, it + 1, res_new
 
-    l, iters, res = jax.lax.while_loop(
-        cond, body, (l0, jnp.asarray(0), jnp.asarray(jnp.inf, dtype=l0.dtype))
-    )
+    res0 = jnp.full(l0.shape[:-1], jnp.inf, dtype=l0.dtype)
+    l, iters, res = jax.lax.while_loop(cond, body, (l0, jnp.asarray(0), res0))
     return FPResult(lengths=l, iterations=iters, residual=res,
                     converged=res <= tol)
 
@@ -119,12 +129,15 @@ def contraction_certificate(problem: Problem,
     tasks, sp = problem.tasks, problem.server
     lam = sp.lam
     wc = worst_case(tasks, lam, sp.l_max, stability_margin)
-    if stability_margin is None and float(wc.rho_max) >= 1.0:
-        return jnp.asarray(jnp.inf)
     d = 1.0 - wc.rho_max
     bracket = 1.0 + lam * (wc.t_max / d + lam * wc.es2_max / (2.0 * d ** 2))
     per_k = bracket / tasks.c + lam / (tasks.b * d)
-    return jnp.max(per_k) * jnp.sum(tasks.pi * tasks.c)
+    linf = jnp.max(per_k) * jnp.sum(tasks.pi * tasks.c)
+    if stability_margin is None:
+        # rho_max >= 1 -> certificate inapplicable; jnp.where keeps the
+        # check traceable under jit/vmap (no float() densification).
+        linf = jnp.where(wc.rho_max >= 1.0, jnp.inf, linf)
+    return linf
 
 
 def empirical_contraction_estimate(problem: Problem, n_samples: int = 64,
@@ -161,11 +174,12 @@ def jacobian_bound_matrix(problem: Problem,
     tasks, sp = problem.tasks, problem.server
     lam = sp.lam
     wc = worst_case(tasks, lam, sp.l_max, stability_margin)
-    if stability_margin is None and float(wc.rho_max) >= 1.0:
-        return jnp.full((tasks.n_tasks, tasks.n_tasks), jnp.inf)
     d = 1.0 - wc.rho_max
     pjcj = tasks.pi * tasks.c                       # [N] over j
     bracket = 1.0 + lam * wc.t_max / d + lam ** 2 * wc.es2_max / (2.0 * d ** 2)
     term1 = (pjcj[None, :] / tasks.c[:, None]) * bracket
     term2 = lam * pjcj[None, :] / (tasks.b[:, None] * d)
-    return term1 + term2
+    bound = term1 + term2
+    if stability_margin is None:
+        bound = jnp.where(wc.rho_max >= 1.0, jnp.inf, bound)
+    return bound

@@ -103,7 +103,7 @@ def rounding_lower_bound(problem: Problem, l_star: Array) -> Array:
     m = service_moments(tasks, l_star, lam)
     c_max = jnp.max(tasks.c)
     acc = jnp.sum(tasks.pi * (tasks.A * (1.0 - jnp.exp(-tasks.b * (l_star - 1.0)))
-                              + tasks.D))
+                              + tasks.D), axis=-1)
     denom = 1.0 - lam * (m.es + c_max)
     jbar = (sp.alpha * acc
             - (lam * m.es2 + 2.0 * c_max) / (2.0 * denom)

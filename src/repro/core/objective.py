@@ -18,22 +18,27 @@ Array = jnp.ndarray
 
 
 def objective(problem: Problem, lengths: Array) -> Array:
-    """J(l), eq (7); -inf outside the stability region."""
+    """J(l), eq (7); -inf outside the stability region.
+
+    ``lengths`` may carry leading batch axes ``[..., N]``; the result then has
+    shape ``[...]`` (one objective per allocation in the batch).
+    """
     tasks, sp = problem.tasks, problem.server
     m = service_moments(tasks, lengths, sp.lam)
-    acc = jnp.sum(tasks.pi * tasks.accuracy(lengths))
+    acc = jnp.sum(tasks.pi * tasks.accuracy(lengths), axis=-1)
     wait = sp.lam * m.es2 / (2.0 * m.slack)
     j = sp.alpha * acc - wait - m.es
     return jnp.where(m.slack > 0.0, j, -jnp.inf)
 
 
 def mean_wait_grad(problem: Problem, lengths: Array) -> Array:
-    """dE[W]/dl_k, eq (10)."""
+    """dE[W]/dl_k, eq (10); batched over leading axes of ``lengths``."""
     tasks, sp = problem.tasks, problem.server
     m = service_moments(tasks, lengths, sp.lam)
     t = tasks.service_time(lengths)
+    slack = m.slack[..., None]
     return sp.lam * tasks.pi * tasks.c * (
-        t / m.slack + sp.lam * m.es2 / (2.0 * m.slack ** 2)
+        t / slack + sp.lam * m.es2[..., None] / (2.0 * slack ** 2)
     )
 
 
@@ -77,8 +82,6 @@ def hessian_bound_matrix(problem: Problem,
     lam = sp.lam
     wc = worst_case(tasks, lam, sp.l_max, stability_margin)
     d = 1.0 - wc.rho_max
-    if stability_margin is None and float(wc.rho_max) >= 1.0:
-        return jnp.full((tasks.n_tasks, tasks.n_tasks), jnp.inf)
     pc = tasks.pi * tasks.c
     h = (
         lam * jnp.diag(tasks.pi * tasks.c ** 2) / d
@@ -87,6 +90,10 @@ def hessian_bound_matrix(problem: Problem,
         + lam ** 3 * jnp.outer(pc, pc) * wc.es2_max / d ** 3
         + jnp.diag(sp.alpha * tasks.pi * tasks.A * tasks.b ** 2)
     )
+    if stability_margin is None:
+        # Lemma 3 assumption violated -> +inf; expressed with jnp.where so
+        # the check stays traceable under jit/vmap (no host densification).
+        h = jnp.where(wc.rho_max >= 1.0, jnp.inf, h)
     return h
 
 

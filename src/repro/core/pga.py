@@ -66,6 +66,10 @@ def solve_pga(problem: Problem, l0: Array | None = None,
     slab the iterates are kept in; if the optimum is suspected to sit at
     utilization above 1 - margin, reduce it (the guaranteed step shrinks
     accordingly -- L_J grows like 1/margin^3).
+
+    ``l0`` may carry leading batch axes (``[..., N]``): each cell runs its
+    own projected ascent, converged lanes are frozen, and
+    ``grad_norm``/``converged`` come back with the leading shape ``[...]``.
     """
     sp = problem.server
     dtype = jnp.result_type(float)
@@ -78,19 +82,22 @@ def solve_pga(problem: Problem, l0: Array | None = None,
 
     def cond(state):
         _, it, res = state
-        return jnp.logical_and(it < max_iters, res > tol)
+        return jnp.logical_and(it < max_iters, jnp.any(res > tol))
 
     def body(state):
-        l, it, _ = state
+        l, it, res = state
+        active = res > tol
         g = grad(problem, l)
-        l_new = _stability_clip(problem, project(l + eta_v * g, sp.l_max),
-                                margin)
-        res = jnp.max(jnp.abs(l_new - l)) / eta_v
-        return l_new, it + 1, res
+        l_cand = _stability_clip(problem, project(l + eta_v * g, sp.l_max),
+                                 margin)
+        l_new = jnp.where(active[..., None], l_cand, l)
+        res_new = jnp.where(active,
+                            jnp.max(jnp.abs(l_cand - l), axis=-1) / eta_v,
+                            res)
+        return l_new, it + 1, res_new
 
-    l, iters, res = jax.lax.while_loop(
-        cond, body, (l0, jnp.asarray(0), jnp.asarray(jnp.inf, dtype=dtype))
-    )
+    res0 = jnp.full(l0.shape[:-1], jnp.inf, dtype=dtype)
+    l, iters, res = jax.lax.while_loop(cond, body, (l0, jnp.asarray(0), res0))
     return PGAResult(lengths=l, iterations=iters, grad_norm=res,
                      converged=res <= tol, eta=eta_v)
 
@@ -106,6 +113,11 @@ def solve_pga_backtracking(problem: Problem, l0: Array | None = None,
     worst-case moments (l = l_max everywhere) are far from the optimum; the
     adaptive step typically converges orders of magnitude faster while
     retaining the monotone-ascent guarantee.
+
+    The per-lane adaptive step makes this solver scalar-per-cell: batch it
+    with ``jax.vmap`` (see ``repro.sweeps.solver_grid``) rather than leading
+    axes. ``max_iters`` may be a traced 0-d integer, so a vmapped caller can
+    gate the solve per cell (0 iterations returns ``l0`` untouched).
     """
     sp = problem.server
     dtype = jnp.result_type(float)

@@ -22,9 +22,12 @@ class Moments(NamedTuple):
 
 
 def service_moments(tasks: TaskSet, lengths: Array, lam: float) -> Moments:
+    """Mixture moments of S (eq 3). ``lengths`` may carry leading batch axes
+    (``[..., N]``); the task axis is always the trailing one and the returned
+    moments have the leading shape ``[...]``."""
     t = tasks.service_time(lengths)
-    es = jnp.sum(tasks.pi * t)
-    es2 = jnp.sum(tasks.pi * t * t)
+    es = jnp.sum(tasks.pi * t, axis=-1)
+    es2 = jnp.sum(tasks.pi * t * t, axis=-1)
     rho = lam * es
     return Moments(es=es, es2=es2, rho=rho, slack=1.0 - rho)
 
@@ -104,12 +107,12 @@ def stability_clip(tasks: TaskSet, lam: float, lengths: Array,
     affinely between rho(0) < 1 and rho(l); solve for the s achieving
     rho = 1 - margin. Identity for already-stable points.
     """
-    rho0 = lam * jnp.sum(tasks.pi * tasks.t0)
+    rho0 = lam * jnp.sum(tasks.pi * tasks.t0, axis=-1)
     rho = service_moments(tasks, lengths, lam).rho
     s = jnp.where(rho >= 1.0 - margin,
                   (1.0 - margin - rho0) / jnp.maximum(rho - rho0, 1e-30),
                   1.0)
-    return lengths * jnp.clip(s, 0.0, 1.0)
+    return lengths * jnp.clip(s, 0.0, 1.0)[..., None]
 
 
 def max_stable_budget(problem: Problem, margin: float = 1e-3) -> float:

@@ -12,6 +12,8 @@ import collections
 import heapq
 from typing import Optional
 
+import numpy as np
+
 from ..core.allocator import TokenBudgetAllocator
 from .request import Phase, Request
 
@@ -45,7 +47,6 @@ class Scheduler:
         if self.discipline == "sjf":
             key = t_service
         else:  # priority: highest accuracy-per-second first
-            import numpy as np
             k = req.task_index
             p = float(prob.tasks.A[k]
                       * (1 - np.exp(-prob.tasks.b[k] * req.budget))

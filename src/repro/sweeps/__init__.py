@@ -1,0 +1,57 @@
+"""Device-resident design-space exploration for the token-allocation paper.
+
+Where ``repro.core`` solves ONE operating point and ``repro.queueing_sim``
+simulates batches of streams, this package solves and evaluates *entire
+operating grids* — ``(lambda, alpha, l_max, calibration)`` meshes — in
+single vmapped + jitted device passes, then asks capacity-planning
+questions of the result.
+
+API -> paper map
+================
+
+``solver_grid.solve_grid`` / ``solve_grid_flat``
+    Batched projected fixed-point iteration (eqs 19-24: Lambert-W closed
+    form of the KKT stationarity, eq 17) with per-cell convergence flags
+    and KKT residuals; per-cell PGA-backtracking fallback (eq 29 with the
+    eq 38 step-size bound) gated by a traced iteration budget; the Lemma 2
+    contraction certificate L_inf (eq 26) computed in batch (paper box
+    form and feasible-slab variant); floor/ceil integer search (eq 39) or
+    rounding (eq 40) with the eq 41 lower bound.
+
+``solver_grid.GridSolution``
+    Container for continuous optima l* , integer budgets, objective values
+    J(l*) / J(l_int) (eq 7), the eq 41 sandwich bound, stability masks
+    (lam E[S] < 1, eq 4), and per-cell P-K accuracy / mean system time
+    (eqs 5-6) for frontier extraction.
+
+``evaluate.evaluate_cells`` / ``evaluate_solution``
+    Couples every solved cell to the Pollaczek-Khinchine prediction
+    (eqs 5-6) AND the batched Lindley DES (PR 1, ``queueing_sim.batched``)
+    over one common-random-number ``StreamBatch``; returns per-cell
+    analytic-vs-DES gaps and 95% CIs (paper Sec IV validation, grid-wide).
+
+``frontier.pareto_front`` / ``heavy_traffic_slice`` /
+``max_sustainable_lambda``
+    Accuracy-vs-E[T_sys] Pareto extraction over solved grids; rho_0 -> 1
+    slices along the arrival axis with automatic stability clipping
+    (eq 4's boundary at l = 0); and "max sustainable lambda at target
+    accuracy" capacity queries by grid refinement.
+
+The scalar path (``core.allocator.solve``) remains the reference
+implementation; ``tests/test_solver_grid.py`` pins per-cell agreement
+(continuous optima to 1e-6, identical integer budgets).
+"""
+from .evaluate import GridEvaluation, evaluate_cells, evaluate_solution
+from .frontier import (heavy_traffic_lams, heavy_traffic_slice,
+                       max_sustainable_lambda, pareto_front, pareto_mask,
+                       saturation_rate)
+from .solver_grid import (GridSolution, TaskArrays, reference_check,
+                          solve_grid, solve_grid_flat)
+
+__all__ = [
+    "GridSolution", "TaskArrays", "solve_grid", "solve_grid_flat",
+    "reference_check",
+    "GridEvaluation", "evaluate_cells", "evaluate_solution",
+    "pareto_mask", "pareto_front", "saturation_rate", "heavy_traffic_lams",
+    "heavy_traffic_slice", "max_sustainable_lambda",
+]

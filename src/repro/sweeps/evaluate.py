@@ -1,0 +1,170 @@
+"""Couple solved grid cells to the analytic P-K curve and the batched DES.
+
+For every cell ``(lam_c, l_c)`` of a solved operating grid this module
+computes
+
+* the Pollaczek-Khinchine steady-state prediction (eqs 5-6) at the cell's
+  budgets, and
+* a Monte-Carlo estimate from the PR 1 batched Lindley simulator
+  (``queueing_sim.batched``), with 95% confidence half-widths over seeds,
+
+and reports the analytic-vs-DES gap per cell. All cells share one
+common-random-number :class:`~repro.queueing_sim.workload.StreamBatch`:
+the batch is generated once at unit rate and each cell's arrival times are
+the same underlying exponential draws scaled by ``1/lam_c`` (numpy's
+``exponential(scale)`` is ``scale *`` the standard draw, so this matches
+``generate_streams(lam_c)`` up to cumsum round-off) — gaps between cells
+are therefore differences in *operating point*, not in sampling noise.
+
+Near saturation the finite-horizon DES mean is biased low (the queue has
+not mixed); ``warmup_frac`` discards the head of every stream before
+averaging, which is what the heavy-traffic validation grids use.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.params import TaskSet
+from ..queueing_sim.batched import _lindley
+from ..queueing_sim.mg1 import accuracy_np
+from ..queueing_sim.workload import StreamBatch, generate_streams
+
+__all__ = ["GridEvaluation", "evaluate_cells", "evaluate_solution"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GridEvaluation:
+    """Per-cell analytic-vs-DES comparison; all arrays are ``[C]``."""
+
+    lam: np.ndarray
+    lengths: np.ndarray             # [C, N] budgets actually simulated
+    # Pollaczek-Khinchine steady state (eqs 5-6)
+    pk_wait: np.ndarray
+    pk_system_time: np.ndarray
+    pk_rho: np.ndarray
+    pk_accuracy: np.ndarray         # E[p] = sum_k pi_k p_k(l_k)
+    # batched-DES estimates (seed means) + 95% half-widths over seeds
+    des_wait: np.ndarray
+    des_system_time: np.ndarray
+    des_accuracy: np.ndarray        # realized fraction correct (Bernoulli)
+    des_accuracy_prob: np.ndarray   # mean p over simulated queries
+    des_utilization: np.ndarray
+    ci_wait: np.ndarray
+    ci_system_time: np.ndarray
+    # coupling
+    gap_system_time: np.ndarray     # des - pk
+    covered: np.ndarray             # |gap| <= ci_system_time
+    n_seeds: int
+    n_queries: int
+    warmup: int                     # queries discarded per stream
+
+    def objective(self, alpha) -> np.ndarray:
+        """Realized J = alpha E[p] - E[T_sys] per cell (affine in alpha).
+
+        Same convention as ``SweepResult.objective_at``: the accuracy term
+        is the mean success probability over the *simulated* queries
+        (realized type mixture), the delay term the simulated mean system
+        time — so a whole alpha grid costs no extra simulation.
+        """
+        return np.asarray(alpha) * self.des_accuracy_prob \
+            - self.des_system_time
+
+
+def _ci95(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    s = x.shape[axis]
+    if s < 2:
+        return np.zeros(np.delete(x.shape, axis))
+    return 1.96 * x.std(axis=axis, ddof=1) / np.sqrt(s)
+
+
+def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
+                   n_queries: int = 10_000, seed: int = 0,
+                   backend: str = "numpy", warmup_frac: float = 0.0,
+                   base: StreamBatch | None = None,
+                   max_chunk_elems: int = 2 ** 24) -> GridEvaluation:
+    """Evaluate ``[C]`` cells of ``(lam, lengths[C, N])`` against P-K + DES.
+
+    ``base`` may supply a pre-generated unit-rate (``lam=1``) stream batch
+    to share across calls; otherwise one is drawn from ``seed``. Cells are
+    processed in chunks of at most ``max_chunk_elems`` array elements so a
+    large grid never materializes a ``[C, S, n]`` tensor at once.
+    """
+    lam = np.atleast_1d(np.asarray(lam, dtype=np.float64))
+    lengths = np.asarray(lengths, dtype=np.float64)
+    if lengths.ndim == 1:
+        lengths = np.broadcast_to(lengths[None], (lam.shape[0],) +
+                                  lengths.shape)
+    C = lam.shape[0]
+    if base is None:
+        base = generate_streams(tasks, 1.0, n_seeds, n_queries, seed=seed)
+    S, n = base.n_seeds, base.n_queries
+    w = int(round(np.clip(warmup_frac, 0.0, 0.9) * n))
+
+    t0 = np.asarray(tasks.t0)
+    c = np.asarray(tasks.c)
+    pi = np.asarray(tasks.pi)
+    t_table = t0 + c * lengths                      # [C, N]
+    p_table = accuracy_np(tasks, lengths)           # [C, N]
+
+    # analytic P-K per cell (eqs 3, 5, 6), f64 on host
+    es = np.sum(pi * t_table, axis=-1)
+    es2 = np.sum(pi * t_table * t_table, axis=-1)
+    rho = lam * es
+    with np.errstate(divide="ignore", invalid="ignore"):
+        pk_wait = np.where(rho < 1.0, lam * es2 / (2.0 * (1.0 - rho)), np.inf)
+    pk_sys = pk_wait + es
+    pk_acc = np.sum(pi * p_table, axis=-1)
+
+    chunk = max(1, int(max_chunk_elems // max(S * n, 1)))
+    des_wait = np.empty((C, S))
+    des_sys = np.empty((C, S))
+    des_acc = np.empty((C, S))
+    des_acc_prob = np.empty((C, S))
+    des_util = np.empty((C, S))
+    for lo in range(0, C, chunk):
+        hi = min(lo + chunk, C)
+        sl = slice(lo, hi)
+        # CRN: unit-rate arrivals rescaled per cell
+        arr = base.arrivals[None] / lam[sl, None, None]        # [c, S, n]
+        services = t_table[sl][:, base.types]                  # [c, S, n]
+        start, finish = _lindley(arr, services, backend)
+        tail = slice(w, None)
+        des_wait[sl] = (start - arr)[..., tail].mean(axis=-1)
+        des_sys[sl] = (finish - arr)[..., tail].mean(axis=-1)
+        p_query = p_table[sl][:, base.types]                   # [c, S, n]
+        des_acc[sl] = (base.correct_us[None] <
+                       p_query)[..., tail].mean(axis=-1)
+        des_acc_prob[sl] = p_query[..., tail].mean(axis=-1)
+        busy = services[..., tail].sum(axis=-1)
+        span = finish[..., -1] - (arr[..., w] if w else 0.0)
+        des_util[sl] = busy / np.maximum(span, 1e-12)
+
+    gap = des_sys.mean(axis=-1) - pk_sys
+    ci_sys = _ci95(des_sys)
+    return GridEvaluation(
+        lam=lam, lengths=lengths,
+        pk_wait=pk_wait, pk_system_time=pk_sys, pk_rho=rho,
+        pk_accuracy=pk_acc,
+        des_wait=des_wait.mean(axis=-1), des_system_time=des_sys.mean(axis=-1),
+        des_accuracy=des_acc.mean(axis=-1),
+        des_accuracy_prob=des_acc_prob.mean(axis=-1),
+        des_utilization=des_util.mean(axis=-1),
+        ci_wait=_ci95(des_wait), ci_system_time=ci_sys,
+        gap_system_time=gap, covered=np.abs(gap) <= ci_sys,
+        n_seeds=S, n_queries=n, warmup=w,
+    )
+
+
+def evaluate_solution(tasks: TaskSet, sol, *, use: str = "int",
+                      **kwargs) -> GridEvaluation:
+    """Evaluate every cell of a :class:`~repro.sweeps.solver_grid.GridSolution`.
+
+    ``use`` selects the integer (``"int"``, default — what a server would
+    deploy) or continuous (``"cont"``) optimum. Unstable/infeasible cells
+    pass through: their P-K prediction is ``inf`` and ``covered`` is False.
+    """
+    flat = sol.ravel()
+    lengths = flat.lengths_int if use == "int" else flat.lengths_cont
+    return evaluate_cells(tasks, flat.lam, lengths, **kwargs)

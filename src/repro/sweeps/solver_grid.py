@@ -1,0 +1,340 @@
+"""Device-resident solver grids: the paper's optimum over whole operating grids.
+
+The scalar facade (``core.allocator.solve``) re-traces and re-solves one
+``(lambda, alpha, l_max)`` cell per Python call — fine for one operating
+point, hopeless for design-space exploration. This module vmaps the *same*
+per-cell pipeline (projected fixed point, eq 24 -> KKT check, eq 17 ->
+PGA-backtracking fallback, eq 29 -> floor/ceil integer search, eq 39) over
+flattened grid axes and jits the whole thing, so a 100-cell grid costs one
+compile plus one device pass instead of 100 Python solves.
+
+Per-cell agreement with the scalar path is exact by construction: each vmap
+lane traces the identical op sequence (``lax.while_loop`` batching freezes
+finished lanes), so continuous optima match ``core.allocator.solve`` to
+float64 round-off and the integer budgets are identical.
+
+Grid axes: ``lam`` / ``alpha`` / ``l_max`` (broadcast against each other,
+any shape) plus optional multiplicative *calibration perturbations* of the
+``TaskSet`` fields (A, b, D, t0, c) — e.g. stress the allocation against
++-10% miscalibration of the latency slope c without re-fitting anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Mapping, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compat import enable_x64
+from ..core import fixed_point, integer, pga
+from ..core.objective import grad, objective
+from ..core.params import Problem, ServerParams, TaskSet
+from ..core.queueing import mean_system_time, service_moments
+
+__all__ = ["GridSolution", "TaskArrays", "solve_grid", "solve_grid_flat",
+           "reference_check"]
+
+# Calibration-perturbation fields accepted by ``solve_grid(calib=...)``.
+_CALIB_FIELDS = ("A", "b", "D", "t0", "c")
+
+
+class TaskArrays(NamedTuple):
+    """Traced-safe mirror of :class:`~repro.core.params.TaskSet`.
+
+    ``TaskSet.__post_init__`` coerces every field to host numpy float64,
+    which would densify tracers; this NamedTuple keeps the same attribute
+    API the solvers consume (``A``/``b``/``D``/``t0``/``c``/``pi``,
+    ``n_tasks``, ``accuracy``, ``service_time``) but holds jnp leaves, so a
+    whole perturbed task set can live under jit/vmap.
+    """
+
+    A: jnp.ndarray
+    b: jnp.ndarray
+    D: jnp.ndarray
+    t0: jnp.ndarray
+    c: jnp.ndarray
+    pi: jnp.ndarray
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.A.shape[-1])
+
+    def accuracy(self, lengths):
+        """p_k(l_k), eq (2)."""
+        return self.A * (1.0 - jnp.exp(-self.b * lengths)) + self.D
+
+    def service_time(self, lengths):
+        """t_k(l_k), eq (1)."""
+        return self.t0 + self.c * lengths
+
+    @classmethod
+    def from_taskset(cls, tasks: TaskSet) -> "TaskArrays":
+        return cls(*(jnp.asarray(getattr(tasks, f))
+                     for f in ("A", "b", "D", "t0", "c", "pi")))
+
+
+class _CalibScales(NamedTuple):
+    """Per-cell multiplicative perturbations of the TaskSet fields."""
+
+    A: jnp.ndarray
+    b: jnp.ndarray
+    D: jnp.ndarray
+    t0: jnp.ndarray
+    c: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSolution:
+    """Solved operating grid; every array is shaped ``grid_shape`` (+ ``[N]``
+    for per-task fields). Host numpy float64 once the device pass returns."""
+
+    # operating grid (broadcast)
+    lam: np.ndarray
+    alpha: np.ndarray
+    l_max: np.ndarray
+    # continuous optimum (eq 24 / eq 29)
+    lengths_cont: np.ndarray        # [..., N]
+    value_cont: np.ndarray
+    # integer projection (eq 39 / eq 40) + eq 41 sandwich bound
+    lengths_int: np.ndarray         # [..., N]
+    value_int: np.ndarray
+    value_lower_bound: np.ndarray
+    # solver diagnostics, per cell
+    fp_iterations: np.ndarray
+    fp_converged: np.ndarray
+    fp_residual: np.ndarray
+    kkt_residual: np.ndarray
+    used_pga: np.ndarray
+    pga_iterations: np.ndarray
+    # Lemma 2 certificate (eq 26), paper box form + feasible-slab variant
+    contraction_Linf: np.ndarray
+    contraction_Linf_slab: np.ndarray
+    # stability / feasibility
+    rho_cont: np.ndarray            # lam E[S(l*)]
+    rho_int: np.ndarray             # lam E[S(l_int)]
+    feasible: np.ndarray            # lam E[S(0)] < 1 (problem well-posed)
+    stable: np.ndarray              # feasible & rho_int < 1 & finite J
+    # analytic operating curves at the optimum (for frontiers)
+    accuracy_cont: np.ndarray       # sum_k pi_k p_k(l*_k)
+    accuracy_int: np.ndarray
+    system_time_cont: np.ndarray    # P-K E[T_sys] (eq 6) at l*
+    system_time_int: np.ndarray
+
+    @property
+    def shape(self) -> tuple:
+        return self.lam.shape
+
+    @property
+    def n_cells(self) -> int:
+        return int(np.prod(self.lam.shape, dtype=np.int64)) if self.lam.shape \
+            else 1
+
+    def ravel(self) -> "GridSolution":
+        """Flatten all grid axes to one cell axis (per-task axis kept)."""
+        def _flat(x: np.ndarray) -> np.ndarray:
+            extra = x.shape[len(self.shape):]
+            return x.reshape((-1,) + extra)
+        return GridSolution(**{f.name: _flat(getattr(self, f.name))
+                               for f in dataclasses.fields(self)})
+
+    def cell(self, idx) -> dict:
+        """One grid cell as a plain dict (host scalars / [N] arrays)."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)[idx]
+            out[f.name] = v if isinstance(v, np.ndarray) and v.ndim else \
+                v.item() if isinstance(v, np.ndarray) else v
+        return out
+
+
+def _solve_cell(base: TaskArrays, lam, alpha, l_max, scales: _CalibScales,
+                tol: float, max_fp_iters: int, max_pga_iters: int,
+                integer_method: str):
+    """One grid cell: the exact pipeline of ``core.allocator._solve_x64``,
+    expressed traceably so vmap can batch it."""
+    ta = base._replace(A=base.A * scales.A, b=base.b * scales.b,
+                       D=base.D * scales.D, t0=base.t0 * scales.t0,
+                       c=base.c * scales.c)
+    prob = Problem(tasks=ta, server=ServerParams(lam, alpha, l_max))
+
+    feasible = lam * jnp.sum(ta.pi * ta.t0) < 1.0
+
+    fp = fixed_point.solve_fixed_point(prob, tol=tol, max_iters=max_fp_iters)
+    g = grad(prob, fp.lengths)
+    # KKT acceptance, mirroring the scalar facade: g ~ 0 on interior
+    # coords, g <= 0 at 0, g >= 0 at l_max.
+    interior = (fp.lengths > 0) & (fp.lengths < l_max)
+    kkt = jnp.max(jnp.where(interior, jnp.abs(g),
+                            jnp.where(fp.lengths <= 0, jnp.maximum(g, 0),
+                                      jnp.maximum(-g, 0))))
+    ok = fp.converged & (kkt < 1e-4 * (1.0 + jnp.max(jnp.abs(g))))
+    # PGA fallback, gated per cell through a traced iteration budget:
+    # cells that accepted the FP answer spend zero PGA iterations.
+    need_pga = (~ok) & feasible
+    pg = pga.solve_pga_backtracking(
+        prob, l0=fp.lengths, tol=tol,
+        max_iters=jnp.where(need_pga, max_pga_iters, 0))
+    lengths = jnp.where(ok, fp.lengths, pg.lengths)
+
+    if integer_method == "exhaustive":
+        ir = integer.exhaustive_policy(prob, lengths)
+    else:
+        ir = integer.round_policy(prob, lengths)
+
+    m_cont = service_moments(ta, lengths, lam)
+    m_int = service_moments(ta, ir.lengths, lam)
+    value_int = ir.value
+    return {
+        "lengths_cont": lengths,
+        "value_cont": objective(prob, lengths),
+        "lengths_int": ir.lengths,
+        "value_int": value_int,
+        "value_lower_bound": integer.rounding_lower_bound(prob, lengths),
+        "fp_iterations": fp.iterations,
+        "fp_converged": fp.converged,
+        "fp_residual": fp.residual,
+        "kkt_residual": kkt,
+        "used_pga": need_pga,
+        "pga_iterations": pg.iterations,
+        "contraction_Linf": fixed_point.contraction_certificate(prob),
+        "contraction_Linf_slab":
+            fixed_point.contraction_certificate(prob, 5e-2),
+        "rho_cont": m_cont.rho,
+        "rho_int": m_int.rho,
+        "feasible": feasible,
+        "stable": feasible & (m_int.rho < 1.0) & jnp.isfinite(value_int),
+        "accuracy_cont": jnp.sum(ta.pi * ta.accuracy(lengths)),
+        "accuracy_int": jnp.sum(ta.pi * ta.accuracy(ir.lengths)),
+        "system_time_cont": mean_system_time(m_cont, lam),
+        "system_time_int": mean_system_time(m_int, lam),
+    }
+
+
+# jitted grid solvers keyed on the static solve configuration; jit itself
+# then caches per input aval (dtype under/outside x64, cell count C), so
+# repeated solve_grid calls with a new grid of the same shape skip the
+# ~1 s retrace entirely.
+_CELL_SOLVER_CACHE: dict = {}
+
+
+def _grid_solver(tol: float, max_fp_iters: int, max_pga_iters: int,
+                 integer_method: str):
+    key = (float(tol), int(max_fp_iters), int(max_pga_iters), integer_method)
+    fn = _CELL_SOLVER_CACHE.get(key)
+    if fn is None:
+        cell = partial(_solve_cell, tol=tol, max_fp_iters=max_fp_iters,
+                       max_pga_iters=max_pga_iters,
+                       integer_method=integer_method)
+        fn = jax.jit(jax.vmap(cell, in_axes=(None, 0, 0, 0, 0)))
+        _CELL_SOLVER_CACHE[key] = fn
+    return fn
+
+
+def solve_grid_flat(tasks: TaskSet, lam, alpha, l_max,
+                    calib: Mapping[str, np.ndarray] | None = None,
+                    tol: float = 1e-8, max_fp_iters: int = 500,
+                    max_pga_iters: int = 20_000,
+                    integer_method: str | None = None) -> dict:
+    """Jitted vmapped solve over pre-flattened ``[C]`` cell axes.
+
+    Returns the raw dict of ``[C]``-shaped jnp arrays (still inside the x64
+    context's output buffers). Prefer :func:`solve_grid`, which handles
+    broadcasting and packs a :class:`GridSolution`.
+    """
+    if integer_method is None:
+        integer_method = "exhaustive" if tasks.n_tasks <= 16 else "round"
+    base = TaskArrays.from_taskset(tasks)
+    lam = jnp.asarray(lam)
+    ones = jnp.ones(lam.shape[0], dtype=lam.dtype)
+    calib = dict(calib or {})
+    unknown = set(calib) - set(_CALIB_FIELDS)
+    if unknown:
+        raise ValueError(f"unknown calib fields {sorted(unknown)}; "
+                         f"expected subset of {_CALIB_FIELDS}")
+    scales = _CalibScales(*(jnp.asarray(calib.get(f, ones))
+                            for f in _CALIB_FIELDS))
+    fn = _grid_solver(tol, max_fp_iters, max_pga_iters, integer_method)
+    return fn(base, lam, jnp.asarray(alpha), jnp.asarray(l_max), scales)
+
+
+def solve_grid(tasks: TaskSet, lam, alpha, l_max,
+               calib: Mapping[str, np.ndarray] | None = None,
+               tol: float = 1e-8, max_fp_iters: int = 500,
+               max_pga_iters: int = 20_000,
+               integer_method: str | None = None) -> GridSolution:
+    """Solve a whole ``(lambda, alpha, l_max[, calib])`` operating grid.
+
+    ``lam`` / ``alpha`` / ``l_max`` and every ``calib`` scale are broadcast
+    against each other (so ``lam[:, None, None]``-style meshes work
+    directly); the broadcast shape becomes ``GridSolution.shape``. The full
+    pipeline runs under x64 via ``repro.compat.enable_x64`` — identical
+    control-plane precision to the scalar ``core.allocator.solve``.
+
+    Infeasible cells (``lam * E[S(0)] >= 1``: the queue is unstable even at
+    zero reasoning tokens, eq 4 has no solution) are flagged via
+    ``feasible=False`` and their outputs are not meaningful; clip the
+    arrival axis first (see ``repro.sweeps.frontier.heavy_traffic_lams``).
+    """
+    tasks.validate()
+    calib = dict(calib or {})
+    arrays = [np.asarray(lam, dtype=np.float64),
+              np.asarray(alpha, dtype=np.float64),
+              np.asarray(l_max, dtype=np.float64)]
+    arrays += [np.asarray(v, dtype=np.float64) for v in calib.values()]
+    bcast = np.broadcast_arrays(*arrays)
+    shape = bcast[0].shape
+    lam_f, alpha_f, lmax_f = (np.ravel(a) for a in bcast[:3])
+    calib_f = {k: np.ravel(v) for k, v in zip(calib, bcast[3:])}
+
+    with enable_x64():
+        out = solve_grid_flat(tasks, lam_f, alpha_f, lmax_f, calib=calib_f,
+                              tol=tol, max_fp_iters=max_fp_iters,
+                              max_pga_iters=max_pga_iters,
+                              integer_method=integer_method)
+        out = {k: np.asarray(v) for k, v in out.items()}
+
+    def _reshape(x: np.ndarray) -> np.ndarray:
+        return x.reshape(shape + x.shape[1:])
+
+    return GridSolution(
+        lam=bcast[0].copy(), alpha=bcast[1].copy(), l_max=bcast[2].copy(),
+        **{k: _reshape(v) for k, v in out.items()})
+
+
+def reference_check(tasks: TaskSet, sol: GridSolution, cells=None,
+                    tol: float = 1e-6,
+                    require_integer_match: bool = True) -> float:
+    """Re-solve grid cells through the scalar facade and assert agreement.
+
+    The contract every grid consumer relies on: continuous optima within
+    ``tol`` of ``core.allocator.solve`` and (by default) identical integer
+    budgets. ``cells`` selects flat cell indices (default: all). Only valid
+    for grids solved without calibration perturbations (the scalar facade
+    solves the unperturbed ``tasks``). Returns the worst |l* - l*_ref|_inf.
+    """
+    from ..core import allocator
+
+    flat = sol.ravel()
+    if cells is None:
+        cells = range(flat.lam.shape[0])
+    worst = 0.0
+    for i in cells:
+        ref = allocator.solve(Problem(
+            tasks=tasks, server=ServerParams(float(flat.lam[i]),
+                                             float(flat.alpha[i]),
+                                             float(flat.l_max[i]))))
+        dev = float(np.max(np.abs(ref.lengths_cont - flat.lengths_cont[i])))
+        worst = max(worst, dev)
+        if dev >= tol:
+            raise AssertionError(
+                f"grid/scalar continuous optima disagree at cell {i}: "
+                f"{dev:.2e} >= {tol:g}")
+        if require_integer_match and not np.array_equal(
+                ref.lengths_int, flat.lengths_int[i]):
+            raise AssertionError(
+                f"grid/scalar integer budgets disagree at cell {i}: "
+                f"{flat.lengths_int[i]} vs {ref.lengths_int}")
+    return worst

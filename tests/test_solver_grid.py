@@ -1,0 +1,225 @@
+"""Device-resident solver-sweep subsystem (``repro.sweeps``).
+
+Pins the acceptance contract of the grid path: per-cell agreement with the
+scalar reference facade (continuous optima to 1e-6, identical integer
+budgets) on a >= 100-cell operating grid, batched-leading-axes support in
+the core solvers, calibration-perturbation axes, the batched Lemma 2
+certificates, Pareto/frontier extraction, and the DES coupling layer.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import enable_x64
+from repro.core import (ServerParams, Problem, contraction_certificate,
+                        objective, paper_problem, solve, solve_fixed_point,
+                        solve_pga)
+from repro.sweeps import (evaluate_cells, evaluate_solution,
+                          heavy_traffic_lams, max_sustainable_lambda,
+                          pareto_front, pareto_mask, reference_check,
+                          saturation_rate, solve_grid)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return paper_problem().tasks
+
+
+@pytest.fixture(scope="module")
+def grid_100(tasks):
+    """The acceptance grid: 100 (lambda, alpha, l_max) cells."""
+    lams = np.linspace(0.05, 0.5, 10)[:, None, None]
+    alphas = np.array([10.0, 20.0, 30.0, 45.0, 60.0])[None, :, None]
+    lmaxs = np.array([1024.0, 32768.0])[None, None, :]
+    return solve_grid(tasks, lams, alphas, lmaxs)
+
+
+# ------------------------------------------------------------------ tentpole
+
+
+def test_grid_agrees_with_scalar_on_100_cells(tasks, grid_100):
+    """Acceptance: per-cell agreement with ``core.allocator.solve`` over the
+    full >= 100-cell grid — continuous optima within 1e-6, identical
+    integer budgets."""
+    assert grid_100.n_cells >= 100
+    worst = reference_check(tasks, grid_100)  # raises on any disagreement
+    assert worst < 1e-6
+
+
+def test_grid_shapes_and_masks(grid_100):
+    assert grid_100.shape == (10, 5, 2)
+    assert grid_100.n_cells == 100
+    assert grid_100.lengths_cont.shape == (10, 5, 2, 6)
+    assert bool(np.all(grid_100.feasible))
+    assert bool(np.all(grid_100.stable))
+    assert bool(np.all(grid_100.rho_int < 1.0))
+    # the eq 41 sandwich holds cell-wise: J(l*) >= J(l_int) >= J_bar(l*)
+    assert bool(np.all(grid_100.value_cont >= grid_100.value_int - 1e-9))
+    assert bool(np.all(grid_100.value_int
+                       >= grid_100.value_lower_bound - 1e-9))
+    # every accepted cell is a KKT point or a converged PGA fallback
+    assert bool(np.all(grid_100.fp_converged | grid_100.used_pga))
+
+
+def test_grid_heavier_load_shrinks_budgets(grid_100):
+    """Queueing-awareness, grid-wide: budgets non-increasing in lambda."""
+    assert bool(np.all(np.diff(grid_100.lengths_cont, axis=0) <= 1e-6))
+
+
+def test_grid_certificates_match_scalar(tasks):
+    sol = solve_grid(tasks, np.array([0.05, 0.3]), 30.0, 32768.0)
+    for i, lam in enumerate((0.05, 0.3)):
+        prob = Problem(tasks=tasks, server=ServerParams(lam, 30.0, 32768.0))
+        # paper box form is inapplicable on this instance -> +inf
+        assert not np.isfinite(sol.contraction_Linf[i])
+        assert not np.isfinite(float(contraction_certificate(prob)))
+        with enable_x64():  # grid certificates are computed in x64
+            ref = float(contraction_certificate(prob, 5e-2))
+        np.testing.assert_allclose(sol.contraction_Linf_slab[i], ref,
+                                   rtol=1e-9)
+
+
+def test_grid_pga_fallback_cells_agree(tasks):
+    """Cells whose FP map cycles must be rescued by the vmapped
+    backtracking PGA and still match the scalar facade exactly."""
+    lams = np.array([1.0, 2.0, 3.0])
+    sol = solve_grid(tasks, lams, 30.0, 32768.0)
+    assert bool(np.any(sol.used_pga))
+    reference_check(tasks, sol)
+
+
+def test_grid_infeasible_cells_flagged(tasks):
+    """Arrival rates beyond saturation are flagged, not silently solved."""
+    sat = saturation_rate(tasks)
+    sol = solve_grid(tasks, np.array([0.5 * sat, 2.0 * sat]), 30.0, 1024.0)
+    assert bool(sol.feasible[0]) and not bool(sol.feasible[1])
+    assert bool(sol.stable[0]) and not bool(sol.stable[1])
+
+
+def test_grid_calibration_perturbation_axis(tasks):
+    """A +-20% miscalibration axis on the latency slope c: perturbed cells
+    must match scalar solves of the correspondingly perturbed TaskSet."""
+    from repro.core import TaskSet
+
+    scales = np.array([0.8, 1.0, 1.2])
+    sol = solve_grid(tasks, 0.1, 30.0, 32768.0, calib={"c": scales})
+    assert sol.shape == (3,)
+    for i, s in enumerate(scales):
+        perturbed = TaskSet(names=tasks.names, A=tasks.A, b=tasks.b,
+                            D=tasks.D, t0=tasks.t0, c=tasks.c * s,
+                            pi=tasks.pi)
+        ref = solve(Problem(tasks=perturbed,
+                            server=ServerParams(0.1, 30.0, 32768.0)))
+        np.testing.assert_allclose(sol.lengths_cont[i], ref.lengths_cont,
+                                   atol=1e-6)
+        np.testing.assert_array_equal(sol.lengths_int[i], ref.lengths_int)
+    # cheaper per-token service -> longer budgets affordable
+    assert sol.lengths_cont[0].sum() > sol.lengths_cont[2].sum()
+
+
+def test_grid_rejects_unknown_calib_field(tasks):
+    with pytest.raises(ValueError, match="calib"):
+        solve_grid(tasks, 0.1, 30.0, 1024.0, calib={"zeta": np.ones(1)})
+
+
+# ------------------------------------- satellite: batched core solver axes
+
+
+def test_solve_fixed_point_batched_leading_axes():
+    prob = paper_problem()
+    rng = np.random.default_rng(0)
+    l0 = jnp.asarray(rng.uniform(0, 500, size=(5, 6)))
+    with enable_x64():
+        batch = solve_fixed_point(prob, l0=l0, tol=1e-10)
+        assert batch.lengths.shape == (5, 6)
+        assert batch.converged.shape == (5,)
+        assert bool(jnp.all(batch.converged))
+        for i in range(5):
+            ref = solve_fixed_point(prob, l0=l0[i], tol=1e-10)
+            # frozen-lane batching reproduces each scalar trajectory exactly
+            np.testing.assert_array_equal(np.asarray(batch.lengths[i]),
+                                          np.asarray(ref.lengths))
+
+
+def test_solve_pga_batched_leading_axes():
+    prob = paper_problem()
+    l0 = jnp.asarray(np.linspace(0.0, 300.0, 4)[:, None]
+                     * np.ones((1, 6)))
+    with enable_x64():
+        batch = solve_pga(prob, l0=l0, tol=1e-4, max_iters=50_000)
+        assert batch.lengths.shape == (4, 6)
+        assert batch.grad_norm.shape == (4,)
+        ref = solve_pga(prob, l0=l0[0], tol=1e-4, max_iters=50_000)
+        np.testing.assert_allclose(np.asarray(batch.lengths[0]),
+                                   np.asarray(ref.lengths), atol=1e-9)
+
+
+def test_objective_batched_leading_axes():
+    prob = paper_problem()
+    stack = jnp.asarray(np.random.default_rng(1).uniform(
+        0, 400, size=(7, 6)))
+    with enable_x64():
+        batched = np.asarray(objective(prob, stack))
+        scalar = np.array([float(objective(prob, stack[i]))
+                           for i in range(7)])
+    np.testing.assert_allclose(batched, scalar, rtol=1e-12)
+
+
+# ------------------------------------------------------------ frontier layer
+
+
+def test_pareto_mask_basic():
+    acc = np.array([0.5, 0.6, 0.4, 0.6, 0.7])
+    t = np.array([1.0, 2.0, 3.0, 1.5, 4.0])
+    mask = pareto_mask(acc, t)
+    # (0.4, 3.0) dominated by (0.6, 1.5); (0.6, 2.0) dominated by (0.6, 1.5)
+    np.testing.assert_array_equal(mask, [True, False, False, True, True])
+
+
+def test_pareto_front_monotone(tasks, grid_100):
+    pf = pareto_front(grid_100)
+    assert len(pf["indices"]) >= 2
+    # sorted by time, accuracy strictly increasing along the frontier
+    assert bool(np.all(np.diff(pf["system_time"]) >= 0))
+    assert bool(np.all(np.diff(pf["accuracy"]) > 0))
+
+
+def test_max_sustainable_lambda(tasks):
+    q = max_sustainable_lambda(tasks, 30.0, 32768.0, min_accuracy=0.30,
+                               n_grid=9, refine=1)
+    assert np.isfinite(q["lam"]) and q["lam"] > 0
+    assert q["accuracy"] >= 0.30
+    # a slightly higher rate must push optimal accuracy below the target
+    probe = solve_grid(tasks, 1.15 * q["lam"], 30.0, 32768.0)
+    assert float(probe.accuracy_int) < 0.30 + 5e-3
+    # unreachable target -> nan, not a bogus operating point
+    assert np.isnan(max_sustainable_lambda(tasks, 30.0, 32768.0,
+                                           min_accuracy=0.99,
+                                           n_grid=5, refine=0)["lam"])
+
+
+# ------------------------------------------------------------ evaluate layer
+
+
+def test_evaluate_cells_crn_and_pk(tasks):
+    """Moderate load: the DES estimate must cover P-K, and the CRN base
+    batch makes neighbouring cells positively coupled."""
+    l = np.array([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
+    ev = evaluate_cells(tasks, np.array([0.1, 0.12]), l, n_seeds=12,
+                        n_queries=20_000, seed=5)
+    assert bool(np.all(ev.covered))
+    assert bool(np.all(ev.des_system_time > 0))
+    # same draws, heavier load -> strictly more delay in every cell
+    assert ev.des_system_time[1] > ev.des_system_time[0]
+
+
+def test_evaluate_solution_roundtrip(tasks):
+    sol = solve_grid(tasks, np.array([0.1, 0.3]), 30.0, 32768.0)
+    ev = evaluate_solution(tasks, sol, n_seeds=8, n_queries=10_000, seed=2)
+    assert ev.lam.shape == (2,)
+    assert ev.lengths.shape == (2, 6)
+    np.testing.assert_array_equal(ev.lengths, sol.lengths_int)
+    assert bool(np.all(np.isfinite(ev.gap_system_time)))
+    # realized objective at the solved alpha tracks the analytic value
+    j = ev.objective(sol.alpha)
+    np.testing.assert_allclose(j, sol.value_int, rtol=0.1)

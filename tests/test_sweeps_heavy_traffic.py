@@ -1,0 +1,100 @@
+"""Heavy-traffic (rho -> 1) validation grids (ISSUE 2 satellite).
+
+Near saturation is where the paper's P-K analysis earns its keep and where
+naive simulation fails (finite-horizon bias, unstable cells). Pinned here:
+
+* batched-DES vs Pollaczek-Khinchine agreement within the 95% CI
+  half-widths at rho in {0.90, 0.95, 0.98} (warmed-up streams);
+* ``core.queueing.stability_clip`` never produces a cell at or beyond
+  rho = 1, over budgets and rates far outside the stability region;
+* the heavy-traffic slice helper keeps every solved cell feasible/stable.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.core.queueing import service_moments, stability_clip
+from repro.sweeps import evaluate_cells, heavy_traffic_lams, \
+    heavy_traffic_slice, saturation_rate
+
+RHOS = (0.90, 0.95, 0.98)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return paper_problem().tasks
+
+
+def test_des_matches_pk_within_ci_near_saturation(tasks):
+    """rho in {0.90, 0.95, 0.98}: the batched Lindley DES must agree with
+    the P-K mean system time within the CI half-width per cell."""
+    l = np.array([0.0, 100.0, 0.0, 0.0, 100.0, 30.0])
+    t = np.asarray(tasks.t0) + np.asarray(tasks.c) * l
+    es = float(np.sum(np.asarray(tasks.pi) * t))
+    lams = np.asarray(RHOS) / es
+    ev = evaluate_cells(tasks, lams, l, n_seeds=16, n_queries=100_000,
+                        seed=7, warmup_frac=0.5)
+    np.testing.assert_allclose(ev.pk_rho, RHOS, atol=1e-12)
+    assert bool(np.all(np.isfinite(ev.pk_system_time)))
+    assert bool(np.all(ev.covered)), (
+        f"DES missed P-K outside CI: gaps={ev.gap_system_time}, "
+        f"ci={ev.ci_system_time}")
+    # delay must blow up monotonically as rho -> 1
+    assert bool(np.all(np.diff(ev.des_system_time) > 0))
+
+
+def test_stability_clip_never_reaches_saturation(tasks):
+    """No (budgets, lam) combination may leave stability_clip at
+    rho >= 1 — including rates beyond the zero-token saturation point."""
+    rng = np.random.default_rng(3)
+    sat = saturation_rate(tasks)
+    margin = 1e-3
+    for lam in (0.5, 0.9 * sat, 0.999 * sat):
+        for _ in range(10):
+            l = rng.uniform(0, 5000, size=tasks.n_tasks)
+            clipped = stability_clip(tasks, lam, jnp.asarray(l), margin)
+            rho = float(service_moments(tasks, clipped, lam).rho)
+            assert rho < 1.0, f"rho={rho} at lam={lam}"
+            # f32-safe slack: the clip may land a few ULP past the margin
+            assert rho <= 1.0 - margin + 1e-6
+            assert bool(jnp.all(clipped >= 0))
+            assert bool(jnp.all(clipped <= jnp.asarray(l) + 1e-12))
+
+
+def test_stability_clip_batched_axes(tasks):
+    """The clip projects whole [B, N] budget stacks cell-wise."""
+    rng = np.random.default_rng(4)
+    stack = jnp.asarray(rng.uniform(0, 5000, size=(8, tasks.n_tasks)))
+    clipped = stability_clip(tasks, 0.5, stack, 1e-3)
+    assert clipped.shape == stack.shape
+    rho = np.asarray(service_moments(tasks, clipped, 0.5).rho)
+    assert rho.shape == (8,)
+    assert bool(np.all(rho < 1.0))
+    for i in range(8):
+        ref = stability_clip(tasks, 0.5, stack[i], 1e-3)
+        np.testing.assert_array_equal(np.asarray(clipped[i]),
+                                      np.asarray(ref))
+
+
+def test_heavy_traffic_slice_all_cells_stable(tasks):
+    sol = heavy_traffic_slice(tasks, 30.0, 32768.0, list(RHOS) + [1.5])
+    # the rho_0 = 1.5 request is clipped below saturation, not solved at it
+    assert bool(np.all(sol.feasible))
+    assert bool(np.all(sol.stable))
+    assert bool(np.all(sol.rho_int < 1.0))
+    lams = heavy_traffic_lams(tasks, list(RHOS) + [1.5])
+    assert float(lams[-1]) < saturation_rate(tasks)
+    # heavier irreducible load -> shorter optimal budgets
+    total = sol.lengths_cont.sum(axis=-1)
+    assert bool(np.all(np.diff(total) <= 1e-9))
+
+
+def test_heavy_traffic_solved_cells_validate_against_des(tasks):
+    """End-to-end: solve the rho_0 -> 1 slice, then couple each solved
+    cell to the DES; the realized mean system time must cover P-K."""
+    sol = heavy_traffic_slice(tasks, 30.0, 32768.0, [0.5, 0.9])
+    ev = evaluate_cells(tasks, sol.lam, sol.lengths_int, n_seeds=16,
+                        n_queries=60_000, seed=11, warmup_frac=0.5)
+    assert bool(np.all(ev.covered)), (
+        f"gaps={ev.gap_system_time}, ci={ev.ci_system_time}")
