@@ -99,6 +99,19 @@ def worst_case(tasks: TaskSet, lam: float, l_max: float,
     )
 
 
+def stabilizable(tasks: TaskSet, lam: float, margin: float = 1e-6) -> Array:
+    """Whether :func:`stability_clip` can honor its guarantee at ``lam``.
+
+    The clip scales budgets toward l = 0, so its floor is the zero-token
+    load rho_0 = lam E[t0]; once rho_0 >= 1 - margin no scaling reaches the
+    slab and the clip returns l = 0 at rho = rho_0 (possibly >= 1). Callers
+    sweeping arrival rates (``queueing_sim.sweep``, ``sweeps.evaluate``)
+    must mark such cells unstable rather than treat them as clipped.
+    """
+    rho0 = lam * jnp.sum(tasks.pi * tasks.t0, axis=-1)
+    return rho0 < 1.0 - margin
+
+
 def stability_clip(tasks: TaskSet, lam: float, lengths: Array,
                    margin: float = 1e-6) -> Array:
     """Scale l toward 0 so that lam E[S(l)] <= 1 - margin.
@@ -106,6 +119,13 @@ def stability_clip(tasks: TaskSet, lam: float, lengths: Array,
     E[S] is affine in l, so scaling the vector by s in [0, 1] moves rho
     affinely between rho(0) < 1 and rho(l); solve for the s achieving
     rho = 1 - margin. Identity for already-stable points.
+
+    The guarantee only holds when the zero-token baseline is itself inside
+    the slab (see :func:`stabilizable`): for rho_0 >= 1 - margin the best
+    feasible projection is l = 0, which this returns, leaving
+    rho = rho_0 — possibly at or beyond saturation. Callers must check
+    ``stabilizable`` (or the resulting rho) before reporting such a cell
+    as stable.
     """
     rho0 = lam * jnp.sum(tasks.pi * tasks.t0, axis=-1)
     rho = service_moments(tasks, lengths, lam).rho

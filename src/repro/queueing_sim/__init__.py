@@ -1,21 +1,35 @@
 """Queueing simulation validating the paper's M/G/1 analysis.
 
-Two simulator paths share one workload model:
+Three simulator paths share one workload model:
 
-* ``mg1.simulate`` — scalar heapq event loop; reference path, and the only
-  path supporting the beyond-paper SJF/priority disciplines.
+* ``mg1.simulate`` — scalar heapq event loop; the asserted reference path
+  for every discipline (and the overflow fallback of the fast paths).
 * ``batched`` — vectorized Lindley-recursion FIFO fast path (NumPy
   cumulative pass or vmapped JAX ``lax.scan``), batched across
   (seeds x policies x arrival rates) via :func:`generate_streams`,
   :func:`simulate_fifo_batch`, and :func:`sweep`.
+* ``disciplines`` — masked-argmin engine putting the beyond-paper SJF and
+  priority disciplines on the same batched fast path
+  (:func:`simulate_discipline`, :func:`simulate_batch`,
+  ``sweep(discipline=...)``), with per-stream heapq fallback when a
+  queue outgrows the candidate window.
 """
 from .batched import (BatchStats, SweepResult, lindley_jax, lindley_numpy,
                       simulate_fifo, simulate_fifo_batch, sweep)
-from .mg1 import SimResult, pk_prediction, simulate
+from .disciplines import (DEFAULT_WINDOW, DISCIPLINES, discipline_keys,
+                          simulate_batch, simulate_discipline,
+                          sweep_disciplines, windowed_jax, windowed_numpy,
+                          windowed_start_finish)
+from .mg1 import SimResult, event_loop, pk_prediction, simulate
+from .stats import ci95
 from .workload import (Query, Stream, StreamBatch, empirical_mixture,
                        generate_stream, generate_streams)
 
-__all__ = ["SimResult", "simulate", "pk_prediction", "Stream", "Query",
-           "generate_stream", "empirical_mixture", "StreamBatch",
+__all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
+           "Query", "generate_stream", "empirical_mixture", "StreamBatch",
            "generate_streams", "BatchStats", "SweepResult", "lindley_numpy",
-           "lindley_jax", "simulate_fifo", "simulate_fifo_batch", "sweep"]
+           "lindley_jax", "simulate_fifo", "simulate_fifo_batch", "sweep",
+           "DISCIPLINES", "DEFAULT_WINDOW", "discipline_keys",
+           "simulate_discipline", "simulate_batch", "sweep_disciplines",
+           "windowed_numpy", "windowed_jax", "windowed_start_finish",
+           "ci95"]

@@ -35,7 +35,9 @@ Layered on top:
   analytic rho from ``core.queueing.service_moments``, and optional
   ``core.queueing.stability_clip`` projection of unstable cells.
 
-SJF and priority disciplines intentionally stay on the heapq reference path.
+SJF and priority ride the same sweep through the masked-argmin engine in
+``queueing_sim.disciplines`` (``sweep(discipline=...)``); the heapq event
+loop remains the asserted reference for all three disciplines.
 """
 from __future__ import annotations
 
@@ -47,6 +49,7 @@ import numpy as np
 from ..core.params import Problem
 from ..core.queueing import service_moments, stability_clip
 from .mg1 import SimResult, accuracy_np
+from .stats import ci95
 from .workload import Stream, StreamBatch, generate_streams
 
 __all__ = [
@@ -166,7 +169,9 @@ def _batch_stats(problem: Problem, arrivals, services, start, finish,
     mean_wait = start.mean(axis=-1) - mean_arrival
     mean_sys = finish.mean(axis=-1) - mean_arrival
     busy = services.sum(axis=-1)
-    makespan = np.maximum(finish[..., -1], 1e-12)
+    # max, not [..., -1]: under non-FIFO disciplines the last-arriving
+    # query need not finish last (same value bitwise for FIFO)
+    makespan = np.maximum(finish.max(axis=-1), 1e-12)
     acc_prob = p_query.mean(axis=-1)
     shape = np.broadcast_shapes(mean_wait.shape, acc_prob.shape)
     return BatchStats(
@@ -178,6 +183,52 @@ def _batch_stats(problem: Problem, arrivals, services, start, finish,
         mean_accuracy_prob=acc_prob,
         objective=problem.server.alpha * acc_prob - np.broadcast_to(
             mean_sys, shape),
+    )
+
+
+def _type_frequencies(types: np.ndarray, n_tasks: int) -> np.ndarray:
+    """Realized type mixture per replicate, ``[S, n] -> [S, N]``."""
+    S, n = types.shape
+    idx = types + n_tasks * np.arange(S)[:, None]
+    counts = np.bincount(idx.ravel(), minlength=S * n_tasks)
+    return counts.reshape(S, n_tasks) / max(n, 1)
+
+
+def _batch_stats_tabular(problem: Problem, t_table, p_table, types,
+                         arrivals, correct_us, start, finish,
+                         makespan) -> BatchStats:
+    """Lean :class:`BatchStats` for table-driven services, ``-> [P, S]``.
+
+    When every query's service time and accuracy come from per-task tables
+    (the analytic model — not a custom ``service_time_fn``), the mixture
+    statistics collapse onto the ``[S, N]`` type histogram: E[S], E[p] and
+    the busy time are histogram-table inner products instead of
+    ``[P, S, n]`` per-query passes, and only the delay means still touch
+    the trajectories. Same definitions as :func:`_batch_stats` up to
+    summation order (agreement ~1e-12 relative); ``makespan`` is the
+    ``[P, S]`` end of the last busy period, which work conservation makes
+    discipline-independent.
+    """
+    n = arrivals.shape[-1]
+    freq = _type_frequencies(types, t_table.shape[-1])         # [S, N]
+    mean_arrival = arrivals.mean(axis=-1)                      # [S]
+    mean_start = start.mean(axis=-1)                           # [P, S]
+    mean_finish = finish.mean(axis=-1)                         # [P, S]
+    mean_service = freq @ t_table.T                            # [S, P]
+    acc_prob = (freq @ p_table.T).T                            # [P, S]
+    P = t_table.shape[0]
+    accuracy = np.empty((P, arrivals.shape[0]))
+    for p in range(P):
+        accuracy[p] = (correct_us < p_table[p][types]).mean(axis=-1)
+    mean_sys = mean_finish - mean_arrival
+    return BatchStats(
+        mean_wait=mean_start - mean_arrival,
+        mean_system_time=mean_sys,
+        mean_service=mean_service.T,
+        utilization=n * mean_service.T / np.maximum(makespan, 1e-12),
+        accuracy=accuracy,
+        mean_accuracy_prob=acc_prob,
+        objective=problem.server.alpha * acc_prob - mean_sys,
     )
 
 
@@ -239,10 +290,10 @@ def simulate_fifo_batch(problem: Problem, lengths, batch: StreamBatch,
     t_table = _service_table(problem, L)                 # [P, N]
     p_table = _accuracy_table(problem, L)                # [P, N]
     services = t_table[:, batch.types]                   # [P, S, n]
-    p_query = p_table[:, batch.types]                    # [P, S, n]
     start, finish = _lindley(batch.arrivals, services, backend)
-    stats = _batch_stats(problem, batch.arrivals, services, start, finish,
-                         p_query, batch.correct_us)
+    stats = _batch_stats_tabular(problem, t_table, p_table, batch.types,
+                                 batch.arrivals, batch.correct_us, start,
+                                 finish, finish[..., -1])
     if single:
         stats = BatchStats(**{f.name: getattr(stats, f.name)[0]
                               for f in dataclasses.fields(BatchStats)})
@@ -262,6 +313,14 @@ class SweepResult:
     ``rho_analytic`` is the Pollaczek-Khinchine utilization from
     ``service_moments`` at the (possibly stability-clipped) budgets actually
     simulated, recorded in ``lengths`` ``[L, P, N]``.
+
+    ``stable`` marks cells whose simulated operating point satisfies
+    rho < 1; statistics of unstable cells (a zero-token baseline already at
+    or beyond saturation cannot be projected into the stability slab by
+    ``stability_clip``) are NaN rather than finite-horizon garbage.
+    ``discipline`` records the service order simulated; ``overflow_frac``
+    is the per-cell fraction of seed streams that took the heapq fallback
+    of the masked-argmin engine (always 0 under FIFO).
     """
 
     lams: np.ndarray
@@ -279,6 +338,9 @@ class SweepResult:
     ci_objective: np.ndarray
     n_seeds: int
     n_queries: int
+    stable: np.ndarray | None = None
+    overflow_frac: np.ndarray | None = None
+    discipline: str = "fifo"
 
     def objective_at(self, alpha: float) -> np.ndarray:
         """Re-weight the realized objective post-hoc for an alpha sweep.
@@ -303,79 +365,148 @@ class SweepResult:
         }
 
 
-def _ci95(x: np.ndarray) -> np.ndarray:
-    """95% half-width over the trailing (seed) axis; 0 for a single seed."""
-    s = x.shape[-1]
-    if s < 2:
-        return np.zeros(x.shape[:-1])
-    return 1.96 * x.std(axis=-1, ddof=1) / np.sqrt(s)
+def _grid_budgets(problem: Problem, policies, lams, clip_unstable: bool,
+                  margin: float):
+    """Per-cell (possibly clipped) budgets for a (lambda x policy) grid.
 
-
-def sweep(problem: Problem, policies: Mapping[str, Sequence[float]],
-          lams: Sequence[float], n_seeds: int = 16,
-          n_queries: int = 10_000, seed: int = 0, backend: str = "numpy",
-          clip_unstable: bool = True, margin: float = 1e-3,
-          prompt_len_range=(16, 128)) -> SweepResult:
-    """Monte-Carlo (lambda x policy x seed) grid in one batched Lindley call.
-
-    For every arrival rate, the same master ``seed`` regenerates the batch,
-    so cells are common random numbers across both policies and rates (the
-    exponential gaps at different rates are exact scalings of one another).
-    Budgets that would destabilize a cell (rho >= 1) are projected onto the
-    stability slab with ``stability_clip`` when ``clip_unstable`` is set —
-    mirroring what the projected solvers guarantee for their own iterates.
+    Returns ``(names, lengths [L, P, N], rho [L, P], masked [L, P])``;
+    ``masked`` marks cells still at rho >= 1 after a *requested* clip (a
+    baseline past saturation cannot be projected into the slab — see
+    ``core.queueing.stabilizable``) — their simulation is skipped and
+    their statistics NaN. With ``clip_unstable=False`` nothing is masked:
+    the caller explicitly asked for raw finite-horizon statistics, and
+    ``SweepResult.stable`` still reports rho < 1 truthfully. Shared by
+    :func:`sweep` and ``disciplines.sweep_disciplines``.
     """
     import jax.numpy as jnp
 
     names = tuple(policies.keys())
     P = len(names)
     Lg = len(lams)
-    N = problem.tasks.n_tasks
     base = np.stack([np.asarray(policies[k], dtype=np.float64)
                      for k in names])                      # [P, N]
-
-    lengths = np.empty((Lg, P, N))
+    lengths = np.empty((Lg, P, base.shape[-1]))
     rho = np.empty((Lg, P))
-    services = np.empty((Lg, P, n_seeds, n_queries))
-    arrivals = np.empty((Lg, 1, n_seeds, n_queries))
-    p_query = np.empty((Lg, P, n_seeds, n_queries))
-    us = np.empty((Lg, 1, n_seeds, n_queries))
     for i, lam in enumerate(lams):
-        for p in range(P):
-            lp = base[p]
-            if clip_unstable:
-                lp = np.asarray(stability_clip(problem.tasks, float(lam),
-                                               jnp.asarray(lp), margin))
-            lengths[i, p] = lp
-            rho[i, p] = float(service_moments(problem.tasks,
-                                              jnp.asarray(lp),
-                                              float(lam)).rho)
-        batch = generate_streams(problem.tasks, float(lam), n_seeds,
-                                 n_queries, seed=seed,
-                                 prompt_len_range=prompt_len_range)
-        services[i] = _service_table(problem, lengths[i])[:, batch.types]
-        p_query[i] = _accuracy_table(problem, lengths[i])[:, batch.types]
-        arrivals[i, 0] = batch.arrivals
-        us[i, 0] = batch.correct_us
+        lp = base
+        if clip_unstable:
+            lp = np.asarray(stability_clip(problem.tasks, float(lam),
+                                           jnp.asarray(base), margin))
+        lengths[i] = lp
+        rho[i] = np.asarray(service_moments(problem.tasks, jnp.asarray(lp),
+                                            float(lam)).rho)
+    masked = (rho >= 1.0) if clip_unstable else np.zeros_like(rho, bool)
+    return names, lengths, rho, masked
 
-    start, finish = _lindley(arrivals, services, backend)
-    stats = _batch_stats(problem, arrivals, services, start, finish,
-                         p_query, us)
 
+def _sweep_result(problem: Problem, lams, names, lengths, rho, masked,
+                  per_seed: Mapping[str, np.ndarray], overflow,
+                  n_seeds: int, n_queries: int,
+                  discipline: str) -> SweepResult:
+    """Aggregate per-seed cell statistics ``[L, P, S]`` into a
+    :class:`SweepResult`, NaN-masking ``masked`` (unstabilizable) cells.
+    Shared by :func:`sweep` and ``disciplines.sweep_disciplines``."""
+    nan = np.where(masked, np.nan, 0.0)
+    agg = {name: slab.mean(axis=-1) + nan for name, slab in per_seed.items()}
     return SweepResult(
         lams=np.asarray(lams, dtype=np.float64),
         policy_names=names,
         lengths=lengths,
         rho_analytic=rho,
-        mean_wait=stats.mean_wait.mean(axis=-1),
-        mean_system_time=stats.mean_system_time.mean(axis=-1),
-        utilization=stats.utilization.mean(axis=-1),
-        accuracy=stats.accuracy.mean(axis=-1),
-        mean_accuracy_prob=stats.mean_accuracy_prob.mean(axis=-1),
-        objective=stats.objective.mean(axis=-1),
-        ci_wait=_ci95(stats.mean_wait),
-        ci_system_time=_ci95(stats.mean_system_time),
-        ci_objective=_ci95(stats.objective),
+        mean_wait=agg["mean_wait"],
+        mean_system_time=agg["mean_system_time"],
+        utilization=agg["utilization"],
+        accuracy=agg["accuracy"],
+        mean_accuracy_prob=agg["mean_accuracy_prob"],
+        objective=agg["objective"],
+        ci_wait=ci95(per_seed["mean_wait"]) + nan,
+        ci_system_time=ci95(per_seed["mean_system_time"]) + nan,
+        ci_objective=ci95(per_seed["objective"]) + nan,
         n_seeds=n_seeds,
         n_queries=n_queries,
+        stable=rho < 1.0,
+        overflow_frac=overflow.mean(axis=-1),
+        discipline=discipline,
     )
+
+
+def sweep(problem: Problem, policies: Mapping[str, Sequence[float]],
+          lams: Sequence[float], n_seeds: int = 16,
+          n_queries: int = 10_000, seed: int = 0, backend: str = "numpy",
+          clip_unstable: bool = True, margin: float = 1e-3,
+          prompt_len_range=(16, 128), discipline: str = "fifo",
+          window: int = 512,
+          max_chunk_elems: int = 2 ** 24) -> SweepResult:
+    """Monte-Carlo (lambda x policy x seed) grid in batched simulator calls.
+
+    For every arrival rate, the same master ``seed`` regenerates the batch,
+    so cells are common random numbers across policies, rates, AND
+    disciplines (the exponential gaps at different rates are exact scalings
+    of one another) — a fig3-style grid swept once per discipline compares
+    service orders on identical sample paths.
+
+    Budgets that would destabilize a cell (rho >= 1) are projected onto the
+    stability slab with ``stability_clip`` when ``clip_unstable`` is set —
+    mirroring what the projected solvers guarantee for their own iterates.
+    Cells the clip cannot save (the zero-token baseline itself sits at
+    rho_0 >= 1 - margin, so ``stability_clip`` returns l = 0 with
+    rho = rho_0) are skipped and recorded with ``stable=False`` and NaN
+    statistics instead of masquerading as clipped-stable simulations.
+    With ``clip_unstable=False`` nothing is clipped, skipped, or
+    NaN-masked — the caller gets raw finite-horizon statistics and
+    ``stable`` still reports which cells sit at rho < 1.
+
+    ``discipline`` selects FIFO (vectorized Lindley pass), SJF, or
+    priority (masked-argmin engine from ``queueing_sim.disciplines`` with
+    heapq fallback past ``window``). The grid is simulated in lambda-axis
+    chunks of at most ``max_chunk_elems`` array elements, so large grids
+    never materialize the full ``[L, P, S, n]`` tensors at once; chunking
+    does not change any output bit (pinned by ``tests/test_batched_sim``).
+    """
+    if discipline != "fifo":
+        # deferred: disciplines.py imports this module at load time
+        from .disciplines import discipline_keys, windowed_start_finish
+
+    names, lengths, rho, masked = _grid_budgets(problem, policies, lams,
+                                                clip_unstable, margin)
+    Lg, P = rho.shape
+
+    # per-seed cell statistics, filled lambda-chunk by lambda-chunk
+    per_seed = {f.name: np.empty((Lg, P, n_seeds))
+                for f in dataclasses.fields(BatchStats)}
+    overflow = np.zeros((Lg, P, n_seeds), dtype=bool)
+    chunk = max(1, int(max_chunk_elems // max(P * n_seeds * n_queries, 1)))
+    for lo in range(0, Lg, chunk):
+        hi = min(lo + chunk, Lg)
+        todo = [i for i in range(lo, hi) if not masked[i].all()]
+        if not todo:
+            continue  # whole rows are NaN-masked anyway: skip simulating
+        c = len(todo)
+        services = np.empty((c, P, n_seeds, n_queries))
+        arrivals = np.empty((c, 1, n_seeds, n_queries))
+        p_query = np.empty((c, P, n_seeds, n_queries))
+        us = np.empty((c, 1, n_seeds, n_queries))
+        for j, i in enumerate(todo):
+            batch = generate_streams(problem.tasks, float(lams[i]), n_seeds,
+                                     n_queries, seed=seed,
+                                     prompt_len_range=prompt_len_range)
+            services[j] = _service_table(problem, lengths[i])[:, batch.types]
+            p_query[j] = _accuracy_table(problem, lengths[i])[:, batch.types]
+            arrivals[j, 0] = batch.arrivals
+            us[j, 0] = batch.correct_us
+        if discipline == "fifo":
+            start, finish = _lindley(arrivals, services, backend)
+        else:
+            arr_b = np.broadcast_to(arrivals, services.shape)
+            keys = discipline_keys(discipline, arrivals=arr_b,
+                                   services=services, accuracy=p_query)
+            start, finish, ovf = windowed_start_finish(
+                arr_b, services, keys, window=window, backend=backend)
+            overflow[todo] = ovf
+        stats = _batch_stats(problem, arrivals, services, start, finish,
+                             p_query, us)
+        for name, slab in per_seed.items():
+            slab[todo] = getattr(stats, name)
+
+    return _sweep_result(problem, lams, names, lengths, rho, masked,
+                         per_seed, overflow, n_seeds, n_queries, discipline)

@@ -1,0 +1,595 @@
+"""Batched non-FIFO disciplines: SJF / priority on the vectorized fast path.
+
+The heapq event loop (``mg1.simulate``) handles every discipline but runs
+one scalar stream per Python call, so the discipline ablations could not
+ride the (lambda x policy x seed) grids that the Lindley fast path in
+``batched`` made cheap. This module closes that gap with a masked-argmin
+event loop: arrivals are time-sorted, so at every service completion the
+candidate set is a contiguous window of arrived-but-unserved queries, and
+one ``argmin`` over masked per-query keys (ties break on query index,
+matching the heapq's ``(key, qid)`` ordering) picks the next job.
+
+Two kernels implement the O(n * window) pass:
+
+* :func:`windowed_numpy` — busy-period form, loop-free over batch cells.
+  A work-conserving non-preemptive single server has discipline-
+  INDEPENDENT busy periods (the unfinished-workload path never depends on
+  service order), so the FIFO Lindley pass from ``batched`` yields the
+  busy-period partition once for every discipline. The first query of a
+  busy period is always served first, length-<=2 periods are FIFO
+  outright, and longer periods run the masked-argmin completion loop —
+  bucketed by length and sorted into descending-length prefixes so every
+  numpy op stays dense. Python-step count is bounded by the longest busy
+  period, independent of ``n x batch``.
+* :func:`windowed_jax` — sliding-window form: one ``lax.scan`` step per
+  completion over a fixed ``[window]`` candidate mask that slides past
+  served prefixes, vmapped across flattened batch axes and jit-compiled
+  in f64. Device-resident alternative for sweeps living next to the
+  allocator's solvers.
+
+Both kernels flag streams whose candidate window ever exceeds ``window``
+(default ``DEFAULT_WINDOW`` = 512); :func:`windowed_start_finish` re-runs
+exactly the flagged streams through the heapq reference
+(``mg1.event_loop``), so every stream is exact regardless of window size.
+``tests/test_disciplines.py`` pins per-query start/finish agreement with
+the reference at 1e-10 across disciplines, backends, and overflowing
+windows.
+
+On top of the kernels: :func:`simulate_discipline` (scalar drop-in for
+``mg1.simulate``), :func:`simulate_batch` (policy stacks x seed batches,
+any discipline), and :func:`discipline_keys` — the one definition of the
+per-query priority keys, shared with ``mg1.simulate`` and
+``serving.scheduler``.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from ..core.params import Problem
+from .batched import (_accuracy_table, _batch_stats, _batch_stats_tabular,
+                      _grid_budgets, _lindley, _service_table,
+                      _sweep_result, BatchStats, lindley_numpy,
+                      simulate_fifo_batch)
+from .mg1 import (SimResult, empty_result, event_loop,
+                  result_from_trajectory, stream_arrays)
+from .workload import Stream, StreamBatch, generate_streams
+
+__all__ = [
+    "DISCIPLINES", "DEFAULT_WINDOW", "discipline_keys", "windowed_numpy",
+    "windowed_jax", "windowed_start_finish", "simulate_discipline",
+    "simulate_batch", "sweep_disciplines",
+]
+
+DISCIPLINES = ("fifo", "sjf", "priority")
+
+#: Fixed capacity of the masked-argmin candidate window. Streams whose
+#: arrived-but-unserved span ever exceeds it fall back to the heapq loop.
+DEFAULT_WINDOW = 512
+
+
+def discipline_keys(discipline: str, *, arrivals=None, services=None,
+                    accuracy=None):
+    """Service-priority keys (lower = served first), any leading shape.
+
+    * ``fifo``: the arrival time — queue order is arrival order.
+    * ``sjf``: the service time t_k(l_k) — shortest job first.
+    * ``priority``: ``-accuracy / service`` — highest marginal accuracy
+      per second of service first (the eq-7 utility numerator per unit of
+      occupied server time; beyond-paper ablation).
+
+    This is the single numerical definition used by the heapq reference
+    (``mg1.simulate``), the vectorized engine here, and the serving
+    scheduler's admission heap, so the three stay key-compatible.
+    """
+    if discipline == "fifo":
+        return np.asarray(arrivals, dtype=np.float64)
+    if discipline == "sjf":
+        return np.asarray(services, dtype=np.float64)
+    if discipline == "priority":
+        s = np.asarray(services, dtype=np.float64)
+        return -np.asarray(accuracy, dtype=np.float64) / np.maximum(s, 1e-12)
+    raise ValueError(f"unknown discipline {discipline!r} "
+                     f"(expected one of {DISCIPLINES})")
+
+
+# --------------------------------------------------------------------------
+# kernels
+# --------------------------------------------------------------------------
+
+def _flatten(arrivals, services, keys):
+    arrivals, services, keys = np.broadcast_arrays(arrivals, services, keys)
+    shape = arrivals.shape
+    n = shape[-1]
+    B = arrivals.size // n if n else 0
+    f64 = lambda x: np.ascontiguousarray(x, dtype=np.float64).reshape(B, n)
+    return f64(arrivals), f64(services), f64(keys), shape, B, n
+
+
+def windowed_numpy(arrivals, services, keys,
+                   window: int = DEFAULT_WINDOW, fifo_finish=None):
+    """Busy-period masked-argmin pass, ``[..., n] -> start/finish/overflow``.
+
+    Leading axes are independent streams. Returns ``(start, finish,
+    overflow)`` where ``overflow`` has the leading shape; a flagged
+    stream's rows hold its FIFO schedule (defined but wrong for the
+    requested keys) — use :func:`windowed_start_finish` for the exact
+    heapq fallback. A busy period longer than ``window`` triggers the
+    flag; the arrived-but-unserved candidate set is always contained in
+    the current busy period, so this bound is conservative.
+
+    ``fifo_finish`` may pass the precomputed FIFO Lindley finish times
+    (same shape as ``arrivals``) to skip the internal pass — the sweep
+    layer shares one pass across all disciplines of a grid.
+    """
+    start, finish, overflow = _windowed_numpy_multi(
+        arrivals, services, [keys], window, fifo_finish)
+    return start[0], finish[0], overflow
+
+
+def _windowed_numpy_multi(arrivals, services, keys_list,
+                          window: int = DEFAULT_WINDOW, fifo_finish=None):
+    """K-lane core of :func:`windowed_numpy`.
+
+    ``keys_list`` holds K per-query key arrays over the same
+    arrival/service grid (e.g. SJF and priority lanes of one sweep). The
+    busy structure is key-independent, so the Lindley pass, the
+    busy-period split, the length-<=2 closed forms, the overflow flags,
+    and all bucket setup except the key panel are computed once and shared
+    across lanes. Returns ``(start[K, ...], finish[K, ...], overflow)``.
+    """
+    K = len(keys_list)
+    arrivals, services = np.broadcast_arrays(arrivals, services)
+    shape = arrivals.shape
+    n = shape[-1]
+    B = arrivals.size // n if n else 0
+    if n == 0 or B == 0:
+        return (np.zeros((K,) + shape), np.zeros((K,) + shape),
+                np.zeros(shape[:-1], dtype=bool))
+    a = np.ascontiguousarray(arrivals, dtype=np.float64).reshape(B, n)
+    s = np.ascontiguousarray(services, dtype=np.float64).reshape(B, n)
+    fks = [np.ascontiguousarray(np.broadcast_to(kk, shape),
+                                dtype=np.float64).reshape(-1)
+           for kk in keys_list]
+    # discipline-independent busy structure from the FIFO Lindley pass
+    if fifo_finish is None:
+        _, fin_f = lindley_numpy(a, s)
+    else:
+        fin_f = np.broadcast_to(fifo_finish, shape).reshape(B, n)
+    new_bp = np.empty((B, n), dtype=bool)
+    new_bp[:, 0] = True
+    new_bp[:, 1:] = a[:, 1:] > fin_f[:, :-1]
+
+    fa, fs = a.ravel(), s.ravel()
+    Bn = B * n
+    f = np.flatnonzero(new_bp.ravel())        # first query of each period
+    L = np.diff(np.append(f, Bn))             # period lengths (never cross
+    sb = f // n                               # streams: each stream's first
+    overflow = np.zeros(B, dtype=bool)        # query starts a period)
+    overflow[sb[L > window]] = True
+    keep = ~overflow[sb]
+
+    start = np.empty((K, Bn))
+    finish = np.empty((K, Bn))
+    ovf_rows = np.flatnonzero(overflow)
+    if ovf_rows.size:
+        # defined placeholder for flagged streams (see docstring)
+        st_f = fin_f - s
+        for b in ovf_rows:
+            sl = slice(b * n, (b + 1) * n)
+            start[:, sl] = st_f[b]
+            finish[:, sl] = fin_f[b]
+
+    # closed forms: a period's first query is served at its own arrival
+    # under ANY non-preemptive discipline, and a length-2 period is FIFO
+    # (its second query is the only candidate at the first completion).
+    f1 = f[keep]
+    fin1 = fa[f1] + fs[f1]
+    start[:, f1] = fa[f1]
+    finish[:, f1] = fin1
+    f2 = f[keep & (L == 2)] + 1
+    fin2a = fa[f2 - 1] + fs[f2 - 1]
+    start[:, f2] = fin2a
+    finish[:, f2] = fin2a + fs[f2]
+
+    # length-3 periods close in two vectorized picks: query 1 has always
+    # arrived by the head's finish (busy-period continuity), so the only
+    # branch is whether query 2 has too — if so the masked argmin is a
+    # two-way key comparison (ties to the earlier arrival), else FIFO.
+    f3 = f[keep & (L == 3)]
+    if f3.size:
+        fin0 = fa[f3] + fs[f3]
+        arrived2 = fa[f3 + 2] <= fin0
+        for k, fk in enumerate(fks):
+            two_first = arrived2 & (fk[f3 + 2] < fk[f3 + 1])
+            i1 = f3 + np.where(two_first, 2, 1)
+            i2 = f3 + np.where(two_first, 1, 2)
+            start[k, i1] = fin0
+            fin1 = fin0 + fs[i1]
+            finish[k, i1] = fin1
+            start[k, i2] = fin1
+            finish[k, i2] = fin1 + fs[i2]
+
+    # masked-argmin completion loop for longer periods, in length ranges;
+    # setup (gathers, panels, ordering) is shared across the K key lanes
+    for lo_b, bound in _buckets(window):
+        exact = lo_b == bound
+        sel = keep & (L >= lo_b) & (L <= bound)
+        if not sel.any():
+            continue
+        fb, Lb = f[sel], L[sel]
+        if exact:
+            maxL = bound
+        else:
+            # descending-length order: at completion step t only the
+            # leading prefix of rows is still active, keeping ops dense
+            order = np.argsort(-Lb, kind="stable")
+            fb, Lb = fb[order], Lb[order]
+            maxL = int(Lb[0])
+        M = fb.shape[0]
+        offs = np.arange(maxL)
+        if exact:
+            idx = fb[:, None] + offs[None, :]
+            arr_w = fa[idx]
+            svc_w = fs[idx]
+            valid = None
+            active = np.full(maxL - 1, M)
+        else:
+            idx = np.minimum(fb[:, None] + offs[None, :], Bn - 1)
+            valid = offs[None, :] < Lb[:, None]
+            arr_w = np.where(valid, fa[idx], np.inf)
+            svc_w = np.where(valid, fs[idx], 0.0)
+            active = M - np.searchsorted(Lb[::-1], np.arange(1, maxL),
+                                         side="right")
+        head_fin = fa[fb] + fs[fb]
+        # scratch panels: the masked-argmin step runs allocation-free,
+        # with not-yet-arrived slots pushed out of contention by a huge
+        # finite offset (0 for candidates, so candidate keys stay exact);
+        # the loop only tracks the service permutation — start/finish are
+        # reconstructed afterwards by one cumulative pass per period,
+        # seeded with the head arrival so the summation order (and hence
+        # every bit) matches the sequential event loop
+        big = 1e300
+        cand = np.empty((M, maxL), dtype=bool)
+        masked = np.empty((M, maxL))
+        rows = np.arange(M)
+        for k, fk in enumerate(fks):
+            if exact:
+                key_w = fk[idx]
+            else:
+                key_w = np.where(valid, fk[idx], np.inf)
+            key_w[:, 0] = np.inf              # head already served
+            free_t = head_fin.copy()
+            perm = np.zeros((M, maxL), dtype=np.int64)
+            for t in range(1, maxL):
+                Mt = int(active[t - 1])
+                ft = free_t[:Mt]
+                np.greater(arr_w[:Mt], ft[:, None], out=cand[:Mt])
+                np.multiply(cand[:Mt], big, out=masked[:Mt])
+                masked[:Mt] += key_w[:Mt]
+                slot = np.argmin(masked[:Mt], axis=1)
+                perm[:Mt, t] = slot
+                free_t[:Mt] = ft + svc_w[rows[:Mt], slot]
+                key_w[rows[:Mt], slot] = np.inf
+            svc_o = np.take_along_axis(svc_w, perm, axis=1)
+            ext = np.empty((M, maxL + 1))
+            ext[:, 0] = fa[fb]
+            ext[:, 1:] = svc_o
+            start_o = np.cumsum(ext[:, :-1], axis=1)
+            qid = fb[:, None] + perm
+            if exact:
+                start[k, qid.ravel()] = start_o.ravel()
+                finish[k, qid.ravel()] = (start_o + svc_o).ravel()
+            else:
+                start[k, qid[valid]] = start_o[valid]
+                finish[k, qid[valid]] = start_o[valid] + svc_o[valid]
+    return (start.reshape((K,) + shape), finish.reshape((K,) + shape),
+            overflow.reshape(shape[:-1]))
+
+
+def _buckets(window: int) -> list:
+    """(lo, hi) length ranges for the completion loop. Each range pays its
+    own setup plus one loop iteration per completion step, so the split
+    balances padding waste (finer is better) against dispatch overhead
+    (coarser is better): an exact zero-padding block for the plentiful
+    length-4 periods, x2 ranges to 16, then x4 for the sparse long tail."""
+    bounds = []
+    b, step = 4, 2
+    prev = 3
+    while b < window:
+        bounds.append((prev + 1, b))
+        prev = b
+        if b >= 16:
+            step = 4
+        b *= step
+    if prev < window:
+        bounds.append((prev + 1, window))
+    return bounds
+
+
+@functools.lru_cache(maxsize=None)
+def _jax_kernel(window: int):
+    """Build (once per window size) the jitted vmapped sliding-window scan."""
+    import jax
+    import jax.numpy as jnp
+
+    W = window
+
+    @jax.jit
+    def kernel(ap, sp, kp):
+        n = ap.shape[-1] - W
+        offs = jnp.arange(W)
+
+        def one(ap, sp, kp):
+            def step(carry, _):
+                srv_w, lo, free_t, ovf = carry
+                arr_w = jax.lax.dynamic_slice(ap, (lo,), (W,))
+                cand = ~srv_w & (arr_w <= free_t)
+                # idle jump: window head is the earliest unserved query
+                free_t = jnp.where(cand.any(), free_t, arr_w[0])
+                cand = ~srv_w & (arr_w <= free_t)
+                ovf = ovf | (ap[lo + W] <= free_t)
+                key_w = jax.lax.dynamic_slice(kp, (lo,), (W,))
+                slot = jnp.argmin(jnp.where(cand, key_w, jnp.inf))
+                qid = lo + slot
+                fin = free_t + sp[qid]
+                srv_w = srv_w.at[slot].set(True)
+                uns = ~srv_w
+                adv = jnp.where(uns.any(), jnp.argmax(uns), W)
+                # slide the mask past the served prefix; slots revealed
+                # beyond n read as unserved but their arrival is +inf
+                srv_w = jnp.where(offs + adv < W, jnp.roll(srv_w, -adv),
+                                  False)
+                return ((srv_w, (lo + adv).astype(lo.dtype), fin, ovf),
+                        (qid, free_t, fin))
+
+            carry0 = (jnp.zeros(W, dtype=bool), jnp.int32(0),
+                      jnp.zeros((), ap.dtype), jnp.bool_(False))
+            (_, _, _, ovf), (qids, starts, fins) = jax.lax.scan(
+                step, carry0, None, length=n)
+            start = jnp.zeros(n, ap.dtype).at[qids].set(starts)
+            finish = jnp.zeros(n, ap.dtype).at[qids].set(fins)
+            return start, finish, ovf
+
+        return jax.vmap(one)(ap, sp, kp)
+
+    return kernel
+
+
+def windowed_jax(arrivals, services, keys, window: int = DEFAULT_WINDOW):
+    """Sliding-window ``lax.scan`` masked-argmin pass (f64, vmapped).
+
+    Same contract as :func:`windowed_numpy`; the overflow flag here is the
+    instantaneous arrived-but-unserved span exceeding ``window`` (a
+    slightly tighter condition than the busy-period bound, so the flags
+    may differ between backends on marginal streams — results after the
+    :func:`windowed_start_finish` fallback are identical).
+    """
+    import jax.numpy as jnp
+
+    from ..compat import enable_x64
+
+    a, s, k, shape, B, n = _flatten(arrivals, services, keys)
+    if n == 0 or B == 0:
+        return (np.zeros(shape), np.zeros(shape),
+                np.zeros(shape[:-1], dtype=bool))
+    W = int(window)
+    with enable_x64():
+        pad = np.full((B, W), np.inf)
+        ap = jnp.asarray(np.concatenate([a, pad], axis=1))
+        sp = jnp.asarray(np.concatenate([s, np.zeros((B, W))], axis=1))
+        kp = jnp.asarray(np.concatenate([k, pad], axis=1))
+        st, fin, ovf = _jax_kernel(W)(ap, sp, kp)
+        return (np.asarray(st).reshape(shape),
+                np.asarray(fin).reshape(shape),
+                np.asarray(ovf).reshape(shape[:-1]))
+
+
+def windowed_start_finish(arrivals, services, keys,
+                          window: int = DEFAULT_WINDOW,
+                          backend: str = "numpy", fifo_finish=None):
+    """Exact per-query start/finish under arbitrary priority keys.
+
+    Dispatches to the requested kernel, then replays any stream whose
+    window overflowed through the heapq reference (``mg1.event_loop``), so
+    the result is exact for every stream and any ``window >= 1``. Returns
+    ``(start, finish, overflow)``; ``overflow`` reports which streams took
+    the fallback. ``fifo_finish`` is forwarded to :func:`windowed_numpy`.
+    """
+    if backend == "numpy":
+        start, finish, ovf = windowed_numpy(arrivals, services, keys, window,
+                                            fifo_finish=fifo_finish)
+    elif backend == "jax":
+        start, finish, ovf = windowed_jax(arrivals, services, keys, window)
+    else:
+        raise ValueError(f"unknown backend {backend!r} "
+                         "(expected 'numpy'|'jax')")
+    if ovf.any():
+        start, finish, ovf = _apply_fallback(arrivals, services, keys,
+                                             start, finish, ovf)
+    return start, finish, ovf
+
+
+def _apply_fallback(arrivals, services, keys, start, finish, ovf):
+    """Replay overflowed streams through the heapq reference in place."""
+    a, s, k = np.broadcast_arrays(arrivals, services, keys)
+    shape = a.shape
+    n = shape[-1]
+    a2 = a.reshape(-1, n)
+    s2 = s.reshape(-1, n)
+    k2 = k.reshape(-1, n)
+    # jax-backed outputs are read-only views; copy before patching
+    if not start.flags.writeable:
+        start = np.array(start, copy=True)
+        finish = np.array(finish, copy=True)
+    st2 = start.reshape(-1, n)
+    fi2 = finish.reshape(-1, n)
+    for b in np.flatnonzero(ovf.ravel()):
+        st2[b], fi2[b] = event_loop(a2[b], s2[b], k2[b])
+    return st2.reshape(shape), fi2.reshape(shape), ovf
+
+
+# --------------------------------------------------------------------------
+# simulation layers
+# --------------------------------------------------------------------------
+
+def simulate_discipline(problem: Problem, lengths, stream: Stream,
+                        discipline: str = "fifo", backend: str = "numpy",
+                        window: int = DEFAULT_WINDOW,
+                        service_time_fn=None) -> SimResult:
+    """Fast drop-in for ``mg1.simulate`` under any discipline.
+
+    Agrees with the heapq reference within ~1e-10 per query on identical
+    streams (bitwise in practice), including when the stream overflows
+    ``window`` and takes the fallback.
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    if len(stream.queries) == 0:
+        return empty_result(problem)
+    types, arrivals, services, us, keys = stream_arrays(
+        problem, lengths, stream, discipline, service_time_fn)
+    if discipline == "fifo":
+        start, finish = _lindley(arrivals, services, backend)
+    else:
+        start, finish, _ = windowed_start_finish(arrivals, services, keys,
+                                                 window, backend)
+    return result_from_trajectory(problem, lengths, types, arrivals,
+                                  services, us, start, finish)
+
+
+def simulate_batch(problem: Problem, lengths, batch: StreamBatch,
+                   discipline: str = "fifo", backend: str = "numpy",
+                   window: int = DEFAULT_WINDOW) -> BatchStats:
+    """``simulate_fifo_batch`` with a discipline axis.
+
+    ``lengths``: ``[N]`` or ``[P, N]`` token budgets; ``batch``: ``[S, n]``
+    streams. Returns :class:`BatchStats` with shape ``[S]`` or ``[P, S]``.
+    FIFO routes to the Lindley fast path; SJF/priority run the masked-
+    argmin engine (with heapq fallback on window overflow).
+    """
+    if discipline == "fifo":
+        return simulate_fifo_batch(problem, lengths, batch, backend=backend)
+    if discipline not in DISCIPLINES:
+        raise ValueError(f"unknown discipline {discipline!r} "
+                         f"(expected one of {DISCIPLINES})")
+    lengths = np.asarray(lengths, dtype=np.float64)
+    single = lengths.ndim == 1
+    L = lengths[None, :] if single else lengths           # [P, N]
+    import dataclasses
+
+    services = _service_table(problem, L)[:, batch.types]   # [P, S, n]
+    p_query = _accuracy_table(problem, L)[:, batch.types]   # [P, S, n]
+    arr = np.broadcast_to(batch.arrivals[None], services.shape)
+    keys = discipline_keys(discipline, arrivals=arr, services=services,
+                           accuracy=p_query)
+    start, finish, _ = windowed_start_finish(arr, services, keys, window,
+                                             backend)
+    stats = _batch_stats(problem, batch.arrivals, services, start, finish,
+                         p_query, batch.correct_us)
+    if single:
+        stats = BatchStats(**{f.name: getattr(stats, f.name)[0]
+                              for f in dataclasses.fields(BatchStats)})
+    return stats
+
+
+def sweep_disciplines(problem: Problem, policies, lams,
+                      disciplines=DISCIPLINES, n_seeds: int = 16,
+                      n_queries: int = 10_000, seed: int = 0,
+                      backend: str = "numpy", clip_unstable: bool = True,
+                      margin: float = 1e-3, prompt_len_range=(16, 128),
+                      window: int = DEFAULT_WINDOW) -> dict:
+    """The full discipline-ablation grid with all shared work amortized.
+
+    Equivalent to ``{d: batched.sweep(..., discipline=d) for d in
+    disciplines}`` — identical common-random-number streams, per-field
+    agreement to ~1e-12 — but computes everything the disciplines share
+    only once per arrival rate: stream generation, the per-task
+    service/accuracy tables, the batched ``stability_clip`` projection,
+    and the FIFO Lindley pass (which both *is* the FIFO result and
+    supplies the busy-period split for the masked-argmin engine). Work
+    conservation makes utilization, realized accuracy, and the service
+    mixture discipline-independent, so only the delay means are computed
+    per discipline — non-FIFO lanes run through one K-lane engine call.
+    This is the fast path behind ``benchmarks/discipline_ablation``;
+    memory peaks at one ``[P, S, n]`` tensor per field (the lambda axis
+    is streamed, never materialized). Grid setup and aggregation are the
+    ``sweep`` helpers, so the clip/NaN-unstable contract is identical.
+    """
+    for d in disciplines:
+        if d not in DISCIPLINES:
+            raise ValueError(f"unknown discipline {d!r}")
+    names, lengths, rho, masked = _grid_budgets(problem, policies, lams,
+                                                clip_unstable, margin)
+    Lg, P = rho.shape
+
+    per_seed = {d: {nm: np.zeros((Lg, P, n_seeds)) for nm in
+                    ("mean_wait", "mean_system_time", "mean_service",
+                     "utilization", "accuracy", "mean_accuracy_prob",
+                     "objective")} for d in disciplines}
+    ovf = {d: np.zeros((Lg, P, n_seeds), dtype=bool) for d in disciplines}
+
+    for i, lam in enumerate(lams):
+        if masked[i].all():
+            continue  # whole row is NaN-masked anyway: skip simulating
+        batch = generate_streams(problem.tasks, float(lam), n_seeds,
+                                 n_queries, seed=seed,
+                                 prompt_len_range=prompt_len_range)
+        t_tab = _service_table(problem, lengths[i])        # [P, N]
+        p_tab = _accuracy_table(problem, lengths[i])       # [P, N]
+        svc = t_tab[:, batch.types]                        # [P, S, n]
+        arr_b = np.broadcast_to(batch.arrivals[None], svc.shape)
+        st_f, fin_f = lindley_numpy(arr_b, svc)
+        fifo_stats = _batch_stats_tabular(problem, t_tab, p_tab,
+                                          batch.types, batch.arrivals,
+                                          batch.correct_us, st_f, fin_f,
+                                          fin_f[..., -1])
+        mean_arr = batch.arrivals.mean(axis=-1)
+        non_fifo = [d for d in disciplines if d != "fifo"]
+
+        def _keys(d):
+            if d == "sjf":
+                return svc
+            return discipline_keys("priority", services=t_tab,
+                                   accuracy=p_tab)[:, batch.types]
+
+        delay = {}
+        if "fifo" in disciplines:
+            delay["fifo"] = (fifo_stats.mean_wait,
+                             fifo_stats.mean_system_time)
+        if non_fifo and backend == "numpy":
+            # one K-lane busy-period pass: split/setup shared across lanes
+            st_k, fin_k, o = _windowed_numpy_multi(
+                arr_b, svc, [_keys(d) for d in non_fifo], window,
+                fifo_finish=fin_f)
+            if o.any():
+                for kk, d in enumerate(non_fifo):
+                    st_k[kk], fin_k[kk], _ = _apply_fallback(
+                        arr_b, svc, _keys(d), st_k[kk], fin_k[kk], o)
+            for kk, d in enumerate(non_fifo):
+                delay[d] = (st_k[kk].mean(axis=-1) - mean_arr,
+                            fin_k[kk].mean(axis=-1) - mean_arr)
+                ovf[d][i] = o
+        else:
+            for d in non_fifo:
+                start, fin, o = windowed_start_finish(arr_b, svc, _keys(d),
+                                                      window, backend)
+                delay[d] = (start.mean(axis=-1) - mean_arr,
+                            fin.mean(axis=-1) - mean_arr)
+                ovf[d][i] = o
+        for d in disciplines:
+            wait_i, sys_i = delay[d]
+            cell = per_seed[d]
+            cell["mean_wait"][i] = wait_i
+            cell["mean_system_time"][i] = sys_i
+            # work conservation: everything but delay is discipline-shared
+            cell["mean_service"][i] = fifo_stats.mean_service
+            cell["utilization"][i] = fifo_stats.utilization
+            cell["accuracy"][i] = fifo_stats.accuracy
+            cell["mean_accuracy_prob"][i] = fifo_stats.mean_accuracy_prob
+            cell["objective"][i] = (problem.server.alpha
+                                    * fifo_stats.mean_accuracy_prob - sys_i)
+
+    return {d: _sweep_result(problem, lams, names, lengths, rho, masked,
+                             per_seed[d], ovf[d], n_seeds, n_queries, d)
+            for d in disciplines}

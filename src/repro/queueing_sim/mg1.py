@@ -6,11 +6,18 @@ non-preemptive priority are beyond-paper ablations showing how much of the
 optimal allocation's gain is discipline-specific.
 
 This heapq event loop is the *reference* path: it handles every discipline
-but simulates one scalar stream per Python call. FIFO workloads should use
-the vectorized Lindley fast path in ``queueing_sim.batched``
-(``simulate_fifo`` / ``simulate_fifo_batch`` / ``sweep``), which agrees with
-this loop to ~1e-10 and batches whole (seed x policy x rate) grids into one
-array pass; the equivalence is pinned by ``tests/test_batched_sim.py``.
+but simulates one scalar stream per Python call. Batched workloads should
+use the vectorized fast paths, which agree with this loop to ~1e-10 on
+identical streams:
+
+* FIFO: the Lindley recursion in ``queueing_sim.batched``
+  (``simulate_fifo`` / ``simulate_fifo_batch``), pinned by
+  ``tests/test_batched_sim.py``.
+* SJF / priority: the masked-argmin engine in
+  ``queueing_sim.disciplines`` (``simulate_discipline`` /
+  ``simulate_batch``), pinned by ``tests/test_disciplines.py``. Streams
+  whose queue outgrows the engine's window fall back to
+  :func:`event_loop` here, so this loop stays the single source of truth.
 
 The simulator also evaluates the realized objective: per-query accuracy is
 Bernoulli(p_k(l_k)) using the stream's pre-drawn uniforms so that policies
@@ -42,12 +49,46 @@ class SimResult:
     n: int
 
 
-def _service_times(problem: Problem, lengths: np.ndarray,
-                   stream: Stream) -> np.ndarray:
-    t0 = np.asarray(problem.tasks.t0)
-    c = np.asarray(problem.tasks.c)
+def empty_result(problem: Problem) -> SimResult:
+    """Zeroed :class:`SimResult` for an empty stream (means over 0 queries)."""
+    n_tasks = problem.tasks.n_tasks
+    return SimResult(
+        mean_wait=0.0, mean_system_time=0.0, mean_service=0.0,
+        utilization=0.0, accuracy=0.0, mean_accuracy_prob=0.0,
+        objective=0.0,
+        per_task_system_time=np.zeros(n_tasks),
+        per_task_count=np.zeros(n_tasks, dtype=np.int64),
+        n=0,
+    )
+
+
+def stream_arrays(problem: Problem, lengths, stream: Stream,
+                  discipline: str = "fifo", service_time_fn=None) -> tuple:
+    """Unpack one stream into ``(types, arrivals, services, us, keys)``.
+
+    The single preamble shared by the heapq reference (:func:`simulate`)
+    and the vectorized engine (``disciplines.simulate_discipline``), so
+    service model and key semantics cannot drift between the two paths.
+    """
+    # deferred: disciplines imports this module for the fallback path
+    from .disciplines import discipline_keys
+
+    lengths = np.asarray(lengths, dtype=np.float64)
     types = np.array([q.task for q in stream.queries])
-    return t0[types] + c[types] * np.asarray(lengths)[types]
+    arrivals = np.array([q.arrival for q in stream.queries])
+    us = np.array([q.correct_u for q in stream.queries])
+    if service_time_fn is None:
+        t0 = np.asarray(problem.tasks.t0)
+        c = np.asarray(problem.tasks.c)
+        services = (t0 + c * lengths)[types]
+    else:
+        services = np.array([service_time_fn(q, lengths)
+                             for q in stream.queries])
+    accuracy = (accuracy_np(problem.tasks, lengths)[types]
+                if discipline == "priority" else None)
+    keys = discipline_keys(discipline, arrivals=arrivals, services=services,
+                           accuracy=accuracy)
+    return types, arrivals, services, us, keys
 
 
 def accuracy_np(tasks, lengths) -> np.ndarray:
@@ -61,60 +102,22 @@ def accuracy_np(tasks, lengths) -> np.ndarray:
     return A * (1.0 - np.exp(-b * np.asarray(lengths, dtype=np.float64))) + D
 
 
-def simulate(problem: Problem, lengths, stream: Stream,
-             discipline: str = "fifo",
-             service_time_fn: Callable | None = None) -> SimResult:
-    """Simulate the queue under integer budgets ``lengths``.
+def event_loop(arrivals: np.ndarray, services: np.ndarray,
+               keys: np.ndarray) -> tuple:
+    """Reference non-preemptive single-server pass: per-query start/finish.
 
-    discipline: "fifo" (paper), "sjf" (shortest-job-first, non-preemptive),
-    "priority" (highest marginal utility per second first; beyond paper).
-    ``service_time_fn(query, lengths) -> float`` overrides the analytic
-    service model (used to couple the DES to the real decode engine).
+    ``keys`` are the service-priority keys (lower = served first; FIFO is
+    ``keys = arrivals``); ties break on query index, i.e. arrival order.
+    This is the heapq loop the vectorized engines are pinned against, and
+    their fallback when a stream overflows the masked-argmin window.
     """
-    lengths = np.asarray(lengths, dtype=np.float64)
-    n = len(stream.queries)
-    if n == 0:
-        # Empty stream: every statistic is a mean over zero queries; return a
-        # well-defined zeroed result instead of crashing on .max()/.mean().
-        n_tasks = problem.tasks.n_tasks
-        return SimResult(
-            mean_wait=0.0, mean_system_time=0.0, mean_service=0.0,
-            utilization=0.0, accuracy=0.0, mean_accuracy_prob=0.0,
-            objective=0.0,
-            per_task_system_time=np.zeros(n_tasks),
-            per_task_count=np.zeros(n_tasks, dtype=np.int64),
-            n=0,
-        )
-    types = np.array([q.task for q in stream.queries])
-    arrivals = np.array([q.arrival for q in stream.queries])
-    if service_time_fn is None:
-        services = _service_times(problem, lengths, stream)
-    else:
-        services = np.array([service_time_fn(q, lengths)
-                             for q in stream.queries])
-
-    # priority keys (lower = served first)
-    if discipline == "fifo":
-        keys = arrivals
-    elif discipline == "sjf":
-        keys = services
-    elif discipline == "priority":
-        # marginal utility density: alpha pi_k p_k / t_k -- serve high first
-        p = accuracy_np(problem.tasks, lengths)
-        dens = p[types] / np.maximum(services, 1e-12)
-        keys = -dens
-    else:
-        raise ValueError(f"unknown discipline {discipline!r}")
-
-    # non-preemptive single server event loop
+    n = len(arrivals)
     start = np.zeros(n)
     finish = np.zeros(n)
     ready: list[tuple[float, int]] = []   # (key, qid) heap of waiting queries
-    t = 0.0
     i = 0  # next arrival index
     busy_until = 0.0
     served = 0
-    busy_time = 0.0
     while served < n:
         # admit all arrivals up to the moment the server frees
         while i < n and (arrivals[i] <= busy_until or not ready):
@@ -128,14 +131,22 @@ def simulate(problem: Problem, lengths, stream: Stream,
         start[qid] = t
         finish[qid] = t + services[qid]
         busy_until = finish[qid]
-        busy_time += services[qid]
         served += 1
+    return start, finish
 
+
+def result_from_trajectory(problem: Problem, lengths, types, arrivals,
+                           services, correct_us, start,
+                           finish) -> SimResult:
+    """Reduce one stream's per-query trajectory to a :class:`SimResult`.
+
+    Shared by the heapq reference and the vectorized discipline engine so
+    both paths aggregate with bit-identical operations.
+    """
     waits = start - arrivals
     sys_times = finish - arrivals
     p = accuracy_np(problem.tasks, lengths)
-    us = np.array([q.correct_u for q in stream.queries])
-    correct = us < p[types]
+    correct = correct_us < p[types]
     acc_prob = float(np.mean(p[types]))
     per_task_sys = np.zeros(problem.tasks.n_tasks)
     per_task_cnt = np.bincount(types, minlength=problem.tasks.n_tasks)
@@ -146,14 +157,34 @@ def simulate(problem: Problem, lengths, stream: Stream,
         mean_wait=float(waits.mean()),
         mean_system_time=float(sys_times.mean()),
         mean_service=float(services.mean()),
-        utilization=float(busy_time / max(finish.max(), 1e-12)),
+        utilization=float(services.sum() / max(finish.max(), 1e-12)),
         accuracy=float(correct.mean()),
         mean_accuracy_prob=acc_prob,
         objective=float(problem.server.alpha * acc_prob - sys_times.mean()),
         per_task_system_time=per_task_sys,
         per_task_count=per_task_cnt,
-        n=n,
+        n=len(arrivals),
     )
+
+
+def simulate(problem: Problem, lengths, stream: Stream,
+             discipline: str = "fifo",
+             service_time_fn: Callable | None = None) -> SimResult:
+    """Simulate the queue under integer budgets ``lengths``.
+
+    discipline: "fifo" (paper), "sjf" (shortest-job-first, non-preemptive),
+    "priority" (highest marginal utility per second first; beyond paper).
+    ``service_time_fn(query, lengths) -> float`` overrides the analytic
+    service model (used to couple the DES to the real decode engine).
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    if len(stream.queries) == 0:
+        return empty_result(problem)
+    types, arrivals, services, us, keys = stream_arrays(
+        problem, lengths, stream, discipline, service_time_fn)
+    start, finish = event_loop(arrivals, services, keys)
+    return result_from_trajectory(problem, lengths, types, arrivals,
+                                  services, us, start, finish)
 
 
 def pk_prediction(problem: Problem, lengths) -> dict:

@@ -61,7 +61,10 @@ def generate_stream(tasks: TaskSet, lam: float, n_queries: int,
               prompt_len=int(plens[i]), correct_u=float(us[i]))
         for i in range(n_queries)
     )
-    return Stream(queries=queries, lam=lam, horizon=float(arrivals[-1]))
+    # n_queries == 0: an empty stream is a valid workload (both simulators
+    # and generate_streams handle it); horizon 0.0 instead of arrivals[-1]
+    horizon = float(arrivals[-1]) if n_queries else 0.0
+    return Stream(queries=queries, lam=lam, horizon=horizon)
 
 
 def empirical_mixture(stream: Stream, n_tasks: int) -> np.ndarray:

@@ -15,6 +15,7 @@ from typing import Optional
 import numpy as np
 
 from ..core.allocator import TokenBudgetAllocator
+from ..queueing_sim.disciplines import discipline_keys
 from .request import Phase, Request
 
 
@@ -41,17 +42,20 @@ class Scheduler:
         if self.discipline == "fifo":
             self._fifo.append(req)
             return
+        # keys shared with the DES paths via queueing_sim.discipline_keys,
+        # so the serving heap and both simulators order work identically
         prob = self.allocator._base
         t_service = float(prob.tasks.t0[req.task_index]
                           + prob.tasks.c[req.task_index] * req.budget)
         if self.discipline == "sjf":
-            key = t_service
+            key = float(discipline_keys("sjf", services=t_service))
         else:  # priority: highest accuracy-per-second first
             k = req.task_index
             p = float(prob.tasks.A[k]
                       * (1 - np.exp(-prob.tasks.b[k] * req.budget))
                       + prob.tasks.D[k])
-            key = -p / max(t_service, 1e-9)
+            key = float(discipline_keys("priority", services=t_service,
+                                        accuracy=p))
         self._seq += 1
         heapq.heappush(self._heap, (key, self._seq, req))
 

@@ -28,7 +28,10 @@ import numpy as np
 
 from ..core.params import TaskSet
 from ..queueing_sim.batched import _lindley
+from ..queueing_sim.disciplines import (DEFAULT_WINDOW, discipline_keys,
+                                        windowed_start_finish)
 from ..queueing_sim.mg1 import accuracy_np
+from ..queueing_sim.stats import ci95
 from ..queueing_sim.workload import StreamBatch, generate_streams
 
 __all__ = ["GridEvaluation", "evaluate_cells", "evaluate_solution"]
@@ -72,17 +75,12 @@ class GridEvaluation:
             - self.des_system_time
 
 
-def _ci95(x: np.ndarray, axis: int = -1) -> np.ndarray:
-    s = x.shape[axis]
-    if s < 2:
-        return np.zeros(np.delete(x.shape, axis))
-    return 1.96 * x.std(axis=axis, ddof=1) / np.sqrt(s)
-
-
 def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
                    n_queries: int = 10_000, seed: int = 0,
                    backend: str = "numpy", warmup_frac: float = 0.0,
                    base: StreamBatch | None = None,
+                   discipline: str = "fifo",
+                   window: int = DEFAULT_WINDOW,
                    max_chunk_elems: int = 2 ** 24) -> GridEvaluation:
     """Evaluate ``[C]`` cells of ``(lam, lengths[C, N])`` against P-K + DES.
 
@@ -90,6 +88,13 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
     to share across calls; otherwise one is drawn from ``seed``. Cells are
     processed in chunks of at most ``max_chunk_elems`` array elements so a
     large grid never materializes a ``[C, S, n]`` tensor at once.
+
+    ``discipline`` selects the simulated service order; the ``pk_*``
+    columns are always the FIFO Pollaczek-Khinchine steady state, so under
+    SJF/priority ``gap_system_time`` measures the discipline's gain over
+    the paper's FIFO analysis (and ``covered`` is only a validation
+    criterion for ``discipline="fifo"``). Unstable cells (rho >= 1) have
+    infinite P-K predictions and are never ``covered``.
     """
     lam = np.atleast_1d(np.asarray(lam, dtype=np.float64))
     lengths = np.asarray(lengths, dtype=np.float64)
@@ -129,20 +134,36 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
         # CRN: unit-rate arrivals rescaled per cell
         arr = base.arrivals[None] / lam[sl, None, None]        # [c, S, n]
         services = t_table[sl][:, base.types]                  # [c, S, n]
-        start, finish = _lindley(arr, services, backend)
+        p_query = p_table[sl][:, base.types]                   # [c, S, n]
+        if discipline == "fifo":
+            start, finish = _lindley(arr, services, backend)
+        else:
+            arr_b = np.broadcast_to(arr, services.shape)
+            keys = discipline_keys(discipline, arrivals=arr_b,
+                                   services=services, accuracy=p_query)
+            start, finish, _ = windowed_start_finish(
+                arr_b, services, keys, window=window, backend=backend)
         tail = slice(w, None)
         des_wait[sl] = (start - arr)[..., tail].mean(axis=-1)
         des_sys[sl] = (finish - arr)[..., tail].mean(axis=-1)
-        p_query = p_table[sl][:, base.types]                   # [c, S, n]
         des_acc[sl] = (base.correct_us[None] <
                        p_query)[..., tail].mean(axis=-1)
         des_acc_prob[sl] = p_query[..., tail].mean(axis=-1)
-        busy = services[..., tail].sum(axis=-1)
-        span = finish[..., -1] - (arr[..., w] if w else 0.0)
+        # utilization over the observation window [w-th arrival, last
+        # finish]: count only the busy time inside the window (a service
+        # straddling its left edge contributes its overlap, not its whole
+        # duration, and warmup-era services contribute nothing), so the
+        # estimate is a true time-average in [0, 1] even near saturation
+        t_obs = arr[..., w]
+        busy = np.maximum(finish - np.maximum(start, t_obs[..., None]),
+                          0.0).sum(axis=-1)
+        # max, not [..., -1]: under SJF/priority the last-arriving query
+        # need not finish last (same value bitwise for FIFO)
+        span = finish.max(axis=-1) - t_obs
         des_util[sl] = busy / np.maximum(span, 1e-12)
 
     gap = des_sys.mean(axis=-1) - pk_sys
-    ci_sys = _ci95(des_sys)
+    ci_sys = ci95(des_sys)
     return GridEvaluation(
         lam=lam, lengths=lengths,
         pk_wait=pk_wait, pk_system_time=pk_sys, pk_rho=rho,
@@ -151,8 +172,8 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
         des_accuracy=des_acc.mean(axis=-1),
         des_accuracy_prob=des_acc_prob.mean(axis=-1),
         des_utilization=des_util.mean(axis=-1),
-        ci_wait=_ci95(des_wait), ci_system_time=ci_sys,
-        gap_system_time=gap, covered=np.abs(gap) <= ci_sys,
+        ci_wait=ci95(des_wait), ci_system_time=ci_sys,
+        gap_system_time=gap, covered=(np.abs(gap) <= ci_sys) & (rho < 1.0),
         n_seeds=S, n_queries=n, warmup=w,
     )
 

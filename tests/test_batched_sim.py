@@ -177,8 +177,66 @@ def test_sweep_clips_unstable_cells(prob):
     res = sweep(prob, {"huge": np.full(6, 30_000.0)}, [0.1], n_seeds=4,
                 n_queries=2000, seed=1)
     assert np.all(res.rho_analytic < 1.0)
+    assert np.all(res.stable)
     assert np.all(np.isfinite(res.mean_wait))
     assert np.all(res.lengths < 30_000.0)
+
+
+def test_sweep_unstabilizable_baseline_cells_are_nan(prob):
+    """Rates past zero-token saturation cannot be clipped stable: the cell
+    must be reported unstable with NaN statistics, not as a fake
+    clipped-stable simulation (stability_clip returns l=0 at rho_0 >= 1)."""
+    from repro.core.queueing import stabilizable
+    from repro.sweeps import saturation_rate
+
+    sat = saturation_rate(prob.tasks)
+    lams = [0.1, 1.5 * sat]
+    assert not bool(stabilizable(prob.tasks, lams[1]))
+    res = sweep(prob, {"opt": LSTAR}, lams, n_seeds=3, n_queries=1000,
+                seed=0, clip_unstable=True)
+    # the stable cell is untouched
+    assert bool(res.stable[0, 0])
+    assert np.isfinite(res.mean_wait[0, 0])
+    # the saturated cell: l clipped to 0, rho honest (>= 1), stats NaN
+    assert not bool(res.stable[1, 0])
+    assert res.rho_analytic[1, 0] >= 1.0
+    np.testing.assert_array_equal(res.lengths[1, 0], 0.0)
+    for field in ("mean_wait", "mean_system_time", "utilization",
+                  "accuracy", "objective", "ci_system_time"):
+        assert np.isnan(getattr(res, field)[1, 0]), field
+
+
+def test_sweep_without_clip_keeps_raw_unstable_stats(prob):
+    """clip_unstable=False is an explicit opt-out: unstable cells must
+    return their (finite-horizon) statistics, flagged via stable=False."""
+    res = sweep(prob, {"huge": np.full(6, 30_000.0)}, [0.1], n_seeds=3,
+                n_queries=500, seed=1, clip_unstable=False)
+    assert res.rho_analytic[0, 0] >= 1.0
+    assert not bool(res.stable[0, 0])
+    assert np.isfinite(res.mean_wait[0, 0])
+    assert np.isfinite(res.objective[0, 0])
+    np.testing.assert_array_equal(res.lengths[0, 0], 30_000.0)
+
+
+def test_sweep_chunked_is_bitwise_identical(prob):
+    """max_chunk_elems must only bound memory, never change a bit."""
+    policies = {"opt": LSTAR, "u100": np.full(6, 100.0)}
+    lams = [0.05, 0.15, 0.25]
+    full = sweep(prob, policies, lams, n_seeds=3, n_queries=700, seed=4)
+    tiny = sweep(prob, policies, lams, n_seeds=3, n_queries=700, seed=4,
+                 max_chunk_elems=1)
+    for field in ("lengths", "rho_analytic", "mean_wait",
+                  "mean_system_time", "utilization", "accuracy",
+                  "mean_accuracy_prob", "objective", "ci_wait",
+                  "ci_system_time", "ci_objective"):
+        np.testing.assert_array_equal(getattr(full, field),
+                                      getattr(tiny, field), err_msg=field)
+    sjf_full = sweep(prob, policies, lams, n_seeds=3, n_queries=700,
+                     seed=4, discipline="sjf")
+    sjf_tiny = sweep(prob, policies, lams, n_seeds=3, n_queries=700,
+                     seed=4, discipline="sjf", max_chunk_elems=1)
+    np.testing.assert_array_equal(sjf_full.mean_wait, sjf_tiny.mean_wait)
+    np.testing.assert_array_equal(sjf_full.objective, sjf_tiny.objective)
 
 
 # ------------------------------------------------------------ empty streams
@@ -192,3 +250,14 @@ def test_empty_stream_returns_zeroed_result(prob):
         assert res.mean_system_time == 0.0
         assert res.utilization == 0.0
         assert res.per_task_count.sum() == 0
+
+
+def test_generate_stream_empty_regression(prob):
+    """n_queries=0 used to crash on arrivals[-1]; it must return a valid
+    empty Stream (horizon 0.0) that both simulators accept."""
+    s = generate_stream(prob.tasks, 0.3, 0, seed=5)
+    assert len(s) == 0
+    assert s.horizon == 0.0
+    assert s.lam == 0.3
+    for sim in (simulate, simulate_fifo):
+        assert sim(prob, LSTAR, s).n == 0

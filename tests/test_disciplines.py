@@ -1,0 +1,273 @@
+"""Vectorized SJF/priority engine: equivalence, overflow fallback, sweeps.
+
+Pins the contracts promised by ``queueing_sim.disciplines``:
+
+* both masked-argmin kernels (numpy busy-period pass, jax sliding-window
+  scan) agree with the heapq reference per query within 1e-10 on common
+  streams, for every discipline — including streams that overflow the
+  candidate window and take the heapq fallback;
+* ``discipline_keys`` is the single key definition shared by the DES
+  reference, the vectorized engine, and the serving scheduler;
+* ``simulate_discipline`` / ``simulate_batch`` reproduce ``mg1.simulate``
+  aggregates, and ``sweep(discipline=...)`` yields CRN-comparable grids
+  (SJF never waits longer than FIFO cell-by-cell);
+* classical ordering properties hold on the batched path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.queueing_sim import (DISCIPLINES, discipline_keys, event_loop,
+                                generate_stream, generate_streams, simulate,
+                                simulate_batch, simulate_discipline,
+                                simulate_fifo_batch, sweep,
+                                sweep_disciplines, windowed_jax,
+                                windowed_numpy, windowed_start_finish)
+from repro.queueing_sim.mg1 import accuracy_np
+
+LSTAR = np.array([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])  # ~ paper Table I l*
+
+NON_FIFO = ("sjf", "priority")
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+def _arrays(prob, lengths, batch):
+    """Per-query (arrivals, services, keys-by-discipline) for a batch."""
+    t_table = np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * lengths
+    services = t_table[batch.types]
+    p_query = accuracy_np(prob.tasks, lengths)[batch.types]
+    keys = {
+        "fifo": batch.arrivals,
+        "sjf": services,
+        "priority": discipline_keys("priority", services=services,
+                                    accuracy=p_query),
+    }
+    return batch.arrivals, services, keys
+
+
+# ------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_kernels_match_heapq_per_query(prob, backend, discipline):
+    """Start/finish agree with the heapq loop within 1e-10 per query."""
+    batch = generate_streams(prob.tasks, 0.25, 3, 1500, seed=5)
+    arrivals, services, keys = _arrays(prob, LSTAR, batch)
+    kern = windowed_numpy if backend == "numpy" else windowed_jax
+    start, finish, ovf = kern(arrivals, services, keys[discipline])
+    assert not ovf.any()
+    for i in range(batch.n_seeds):
+        rs, rf = event_loop(arrivals[i], services[i], keys[discipline][i])
+        np.testing.assert_allclose(start[i], rs, rtol=0, atol=1e-10)
+        np.testing.assert_allclose(finish[i], rf, rtol=0, atol=1e-10)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("window", [1, 4])
+def test_overflow_falls_back_to_heapq(prob, backend, window):
+    """Tiny windows overflow at this load; results must stay exact."""
+    batch = generate_streams(prob.tasks, 0.28, 2, 800, seed=7)
+    arrivals, services, keys = _arrays(prob, LSTAR, batch)
+    kern = windowed_numpy if backend == "numpy" else windowed_jax
+    _, _, raw_ovf = kern(arrivals, services, keys["sjf"], window=window)
+    assert raw_ovf.all(), "expected every stream to overflow the window"
+    start, finish, ovf = windowed_start_finish(
+        arrivals, services, keys["sjf"], window=window, backend=backend)
+    assert ovf.all()
+    for i in range(batch.n_seeds):
+        rs, rf = event_loop(arrivals[i], services[i], keys["sjf"][i])
+        np.testing.assert_allclose(start[i], rs, rtol=0, atol=1e-10)
+        np.testing.assert_allclose(finish[i], rf, rtol=0, atol=1e-10)
+
+
+def test_backends_agree(prob):
+    batch = generate_streams(prob.tasks, 0.25, 3, 1000, seed=9)
+    arrivals, services, keys = _arrays(prob, LSTAR, batch)
+    for d in NON_FIFO:
+        a = windowed_start_finish(arrivals, services, keys[d])
+        b = windowed_start_finish(arrivals, services, keys[d],
+                                  backend="jax")
+        np.testing.assert_allclose(a[0], b[0], rtol=0, atol=1e-12)
+        np.testing.assert_allclose(a[1], b[1], rtol=0, atol=1e-12)
+
+
+def test_tied_keys_break_on_arrival_order(prob):
+    """Cross-class key ties must serve in qid order, like the heapq."""
+    batch = generate_streams(prob.tasks, 0.25, 2, 800, seed=13)
+    tied = np.array([1.0, 1.0, 2.0, 2.0, 3.0, 3.0])[batch.types]
+    t_table = np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * LSTAR
+    services = t_table[batch.types]
+    for backend in ("numpy", "jax"):
+        start, finish, _ = windowed_start_finish(batch.arrivals, services,
+                                                 tied, backend=backend)
+        for i in range(batch.n_seeds):
+            rs, rf = event_loop(batch.arrivals[i], services[i], tied[i])
+            np.testing.assert_allclose(start[i], rs, rtol=0, atol=1e-10)
+            np.testing.assert_allclose(finish[i], rf, rtol=0, atol=1e-10)
+
+
+# ------------------------------------------------------- simulation layers
+
+@pytest.mark.parametrize("discipline", DISCIPLINES)
+def test_simulate_discipline_matches_mg1(prob, discipline):
+    stream = generate_stream(prob.tasks, 0.25, 2500, seed=11)
+    ref = simulate(prob, LSTAR, stream, discipline=discipline)
+    fast = simulate_discipline(prob, LSTAR, stream, discipline=discipline)
+    assert fast.n == ref.n
+    for field in ("mean_wait", "mean_system_time", "mean_service",
+                  "utilization", "accuracy", "mean_accuracy_prob",
+                  "objective"):
+        assert abs(getattr(fast, field) - getattr(ref, field)) < 1e-9, field
+    np.testing.assert_allclose(fast.per_task_system_time,
+                               ref.per_task_system_time, atol=1e-9)
+    np.testing.assert_array_equal(fast.per_task_count, ref.per_task_count)
+
+
+def test_simulate_batch_matches_per_stream_reference(prob):
+    batch = generate_streams(prob.tasks, 0.25, 3, 1200, seed=3)
+    policies = np.stack([LSTAR, np.full(6, 100.0)])
+    for d in NON_FIFO:
+        stats = simulate_batch(prob, policies, batch, discipline=d)
+        assert stats.mean_wait.shape == (2, 3)
+        for p in range(2):
+            for s in range(batch.n_seeds):
+                ref = simulate(prob, policies[p], batch.stream(s),
+                               discipline=d)
+                assert abs(stats.mean_wait[p, s] - ref.mean_wait) < 1e-9
+                assert abs(stats.objective[p, s] - ref.objective) < 1e-9
+
+
+def test_simulate_batch_fifo_routes_to_lindley(prob):
+    batch = generate_streams(prob.tasks, 0.25, 2, 600, seed=2)
+    a = simulate_batch(prob, LSTAR, batch, discipline="fifo")
+    b = simulate_fifo_batch(prob, LSTAR, batch)
+    np.testing.assert_array_equal(a.mean_system_time, b.mean_system_time)
+
+
+def test_empty_stream_and_unknown_discipline(prob):
+    empty = generate_stream(prob.tasks, 1.0, 0, seed=0)
+    res = simulate_discipline(prob, LSTAR, empty, discipline="sjf")
+    assert res.n == 0 and res.mean_wait == 0.0
+    with pytest.raises(ValueError):
+        simulate_discipline(prob, LSTAR,
+                            generate_stream(prob.tasks, 1.0, 10, seed=0),
+                            discipline="lifo")
+    with pytest.raises(ValueError):
+        discipline_keys("lifo", arrivals=np.zeros(3))
+
+
+# ----------------------------------------------------------- discipline keys
+
+def test_discipline_keys_definitions(prob):
+    arr = np.array([1.0, 2.0])
+    svc = np.array([3.0, 4.0])
+    acc = np.array([0.5, 0.8])
+    np.testing.assert_array_equal(discipline_keys("fifo", arrivals=arr), arr)
+    np.testing.assert_array_equal(discipline_keys("sjf", services=svc), svc)
+    np.testing.assert_allclose(
+        discipline_keys("priority", services=svc, accuracy=acc),
+        [-0.5 / 3.0, -0.8 / 4.0])
+
+
+# ------------------------------------------------------- ordering properties
+
+def test_sjf_and_priority_properties_batched(prob):
+    """SJF minimizes mean wait among the three (classic result), and the
+    realized accuracy mixture is discipline-invariant (service order cannot
+    change which queries are correct)."""
+    batch = generate_streams(prob.tasks, 0.27, 6, 4000, seed=17)
+    stats = {d: simulate_batch(prob, np.full(6, 300.0), batch, discipline=d)
+             for d in DISCIPLINES}
+    assert np.all(stats["sjf"].mean_wait <= stats["fifo"].mean_wait + 1e-9)
+    assert np.all(stats["sjf"].mean_wait <=
+                  stats["priority"].mean_wait + 1e-9)
+    for d in NON_FIFO:
+        # fifo rides the tabular stats path (histogram inner products), so
+        # agreement is to summation-order rounding, not bitwise
+        np.testing.assert_allclose(stats[d].mean_accuracy_prob,
+                                   stats["fifo"].mean_accuracy_prob,
+                                   rtol=1e-12)
+        np.testing.assert_allclose(stats[d].accuracy,
+                                   stats["fifo"].accuracy, rtol=1e-12)
+
+
+# ------------------------------------------------------------------ sweeps
+
+def test_sweep_discipline_axis_crn(prob):
+    """Per-cell SJF wait <= FIFO wait: same seed means common random
+    numbers across disciplines, so the classic inequality holds cell-wise,
+    not just in expectation."""
+    lams = [0.1, 0.2, 0.27]
+    policies = {"opt": LSTAR, "u300": np.full(6, 300.0)}
+    res = {d: sweep(prob, policies, lams, n_seeds=4, n_queries=2000,
+                    seed=0, discipline=d) for d in DISCIPLINES}
+    for d in DISCIPLINES:
+        assert res[d].discipline == d
+        assert res[d].mean_wait.shape == (3, 2)
+        assert bool(np.all(res[d].stable))
+        assert np.all(np.isfinite(res[d].mean_wait))
+    assert np.all(res["sjf"].mean_wait <= res["fifo"].mean_wait + 1e-9)
+    # CRN: identical budgets and analytic rho across disciplines
+    np.testing.assert_array_equal(res["sjf"].lengths, res["fifo"].lengths)
+    np.testing.assert_array_equal(res["sjf"].rho_analytic,
+                                  res["fifo"].rho_analytic)
+
+
+def test_sweep_disciplines_matches_per_discipline_sweeps(prob):
+    """The amortized multi-lane grid == one sweep() per discipline (same
+    CRN streams; histogram-vs-per-query stats agree to summation-order
+    rounding). This is the path the ablation benchmark times."""
+    policies = {"opt": LSTAR, "u300": np.full(6, 300.0)}
+    lams = [0.1, 0.2]
+    multi = sweep_disciplines(prob, policies, lams, n_seeds=4,
+                              n_queries=900, seed=2)
+    assert set(multi) == set(DISCIPLINES)
+    for d in DISCIPLINES:
+        ref = sweep(prob, policies, lams, n_seeds=4, n_queries=900, seed=2,
+                    discipline=d)
+        for field in ("lengths", "rho_analytic", "mean_wait",
+                      "mean_system_time", "utilization", "accuracy",
+                      "mean_accuracy_prob", "objective", "ci_wait",
+                      "ci_system_time", "ci_objective"):
+            np.testing.assert_allclose(getattr(multi[d], field),
+                                       getattr(ref, field), atol=1e-9,
+                                       err_msg=f"{d}.{field}")
+        assert multi[d].discipline == d
+        np.testing.assert_array_equal(multi[d].stable, ref.stable)
+    # work conservation: utilization and accuracy are discipline-invariant
+    np.testing.assert_allclose(multi["sjf"].utilization,
+                               multi["fifo"].utilization, rtol=1e-12)
+    np.testing.assert_allclose(multi["priority"].accuracy,
+                               multi["fifo"].accuracy, rtol=1e-12)
+
+
+def test_sweep_disciplines_tiny_window_fallback(prob):
+    """All-overflow (window=2) multi-lane sweep equals the default one."""
+    policies = {"u300": np.full(6, 300.0)}
+    a = sweep_disciplines(prob, policies, [0.15], n_seeds=3, n_queries=700,
+                          seed=6, window=2)
+    b = sweep_disciplines(prob, policies, [0.15], n_seeds=3, n_queries=700,
+                          seed=6)
+    for d in ("sjf", "priority"):
+        assert np.all(a[d].overflow_frac == 1.0)
+        assert np.all(b[d].overflow_frac == 0.0)
+        np.testing.assert_array_equal(a[d].mean_wait, b[d].mean_wait)
+        np.testing.assert_array_equal(a[d].objective, b[d].objective)
+
+
+def test_sweep_discipline_overflow_fallback_consistent(prob):
+    """A sweep forced through tiny windows (all-fallback) must equal the
+    large-window sweep exactly."""
+    policies = {"u300": np.full(6, 300.0)}
+    a = sweep(prob, policies, [0.15], n_seeds=3, n_queries=800, seed=1,
+              discipline="sjf", window=2)
+    b = sweep(prob, policies, [0.15], n_seeds=3, n_queries=800, seed=1,
+              discipline="sjf")
+    assert a.overflow_frac is not None and np.all(a.overflow_frac == 1.0)
+    assert np.all(b.overflow_frac == 0.0)
+    np.testing.assert_array_equal(a.mean_wait, b.mean_wait)
+    np.testing.assert_array_equal(a.objective, b.objective)

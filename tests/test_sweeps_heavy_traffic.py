@@ -44,6 +44,47 @@ def test_des_matches_pk_within_ci_near_saturation(tasks):
     assert bool(np.all(np.diff(ev.des_system_time) > 0))
 
 
+def test_warmup_utilization_bounded_near_saturation(tasks):
+    """Utilization is a time-average over the post-warmup window: it must
+    land in [0, 1] even at rho ~ 0.98 where the server is still draining
+    warmup-era jobs when the window opens (the old accounting summed only
+    post-warmup services against a span starting at the w-th arrival and
+    could exceed 1)."""
+    l = np.array([0.0, 100.0, 0.0, 0.0, 100.0, 30.0])
+    t = np.asarray(tasks.t0) + np.asarray(tasks.c) * l
+    es = float(np.sum(np.asarray(tasks.pi) * t))
+    lam = 0.98 / es
+    for warmup in (0.0, 0.5):
+        for disc in ("fifo", "sjf"):
+            ev = evaluate_cells(tasks, [lam], l, n_seeds=8,
+                                n_queries=20_000, seed=3,
+                                warmup_frac=warmup, discipline=disc)
+            util = float(ev.des_utilization[0])
+            assert 0.0 <= util <= 1.0, f"{disc} warmup={warmup}: {util}"
+            # at rho ~ 0.98 the server should be busy nearly all the time
+            assert util > 0.9
+    # short SJF streams: the last-arriving query often is not the last to
+    # finish, so the span must use the max finish (regression guard)
+    ev = evaluate_cells(tasks, [0.95 / es], l, n_seeds=32, n_queries=200,
+                        seed=5, warmup_frac=0.3, discipline="sjf")
+    assert 0.0 <= float(ev.des_utilization[0]) <= 1.0
+
+
+def test_evaluate_unstable_cell_never_covered(tasks):
+    """A cell at rho >= 1 has an infinite P-K prediction; it must be
+    reported as not covered rather than compared against garbage."""
+    l = np.full(tasks.n_tasks, 100.0)
+    t = np.asarray(tasks.t0) + np.asarray(tasks.c) * l
+    es = float(np.sum(np.asarray(tasks.pi) * t))
+    ev = evaluate_cells(tasks, [0.5 / es, 1.2 / es], l, n_seeds=4,
+                        n_queries=4000, seed=1)
+    assert ev.pk_rho[1] >= 1.0
+    assert not bool(ev.covered[1])
+    assert np.isinf(ev.pk_system_time[1])
+    assert bool(np.isfinite(ev.des_system_time).all())  # finite horizon
+    assert 0.0 <= ev.des_utilization[1] <= 1.0
+
+
 def test_stability_clip_never_reaches_saturation(tasks):
     """No (budgets, lam) combination may leave stability_clip at
     rho >= 1 — including rates beyond the zero-token saturation point."""
