@@ -8,11 +8,23 @@ def emit(name: str, value, derived: str = "") -> None:
     print(f"{name},{value},{derived}", flush=True)
 
 
-def timed(fn, *args, repeat: int = 3, **kwargs):
-    """Returns (result, microseconds per call)."""
-    fn(*args, **kwargs)          # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(repeat):
+def timed(fn, *args, repeat: int = 3, warmup: int = 1, best: bool = False,
+          **kwargs):
+    """Returns (result, microseconds per call).
+
+    ``warmup`` untimed calls run first so jit compilation (and any
+    first-call cache/tracing work) is excluded from the timed repeats —
+    per-call figures like ``decode_us_per_token`` must never average in
+    compile time. ``best=True`` reports the FASTEST repeat instead of the
+    mean (the standard microbenchmark estimator: rejects scheduler noise
+    on shared/small machines instead of averaging it in).
+    """
+    for _ in range(max(warmup, 0)):
         out = fn(*args, **kwargs)
-    us = (time.perf_counter() - t0) / repeat * 1e6
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        times.append(time.perf_counter() - t0)
+    us = (min(times) if best else sum(times) / len(times)) * 1e6
     return out, us

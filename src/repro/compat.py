@@ -5,8 +5,18 @@
 newer releases. Everything in the repo that needs double precision for the
 control-plane solvers goes through :func:`enable_x64` so the next rename is
 a one-line fix.
+
+Buffer donation is version- and backend-sensitive too: some backends (and
+older CPU clients) silently ignore ``donate_argnums`` and warn on every
+call. :func:`donation_supported` probes the default backend once, and
+:func:`jit` only requests donation where it is actually honored, so the
+serving fast path gets in-place cache updates without per-call warning
+spam elsewhere.
 """
 from __future__ import annotations
+
+import functools
+import warnings
 
 import jax
 
@@ -19,6 +29,41 @@ except AttributeError:
 def enable_x64(enabled: bool = True):
     """Context manager enabling 64-bit JAX computation within its scope."""
     return _enable_x64(enabled)
+
+
+@functools.lru_cache(maxsize=1)
+def donation_supported() -> bool:
+    """True iff ``jit(..., donate_argnums=...)`` actually reuses buffers.
+
+    Probes the default backend with a tiny donated identity-plus-one: a
+    backend that honors donation deletes the input buffer and emits no
+    "donation is not implemented" warning. Cached so the probe (one tiny
+    compile) runs at most once per process.
+    """
+    import jax.numpy as jnp
+
+    probe = jax.jit(lambda x: x + 1, donate_argnums=(0,))
+    x = jnp.zeros((8,), jnp.float32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        probe(x).block_until_ready()
+    warned = any("donat" in str(w.message).lower() for w in caught)
+    deleted = getattr(x, "is_deleted", lambda: False)()
+    return deleted and not warned
+
+
+def jit(fun, *, donate_argnums=(), **kwargs):
+    """``jax.jit`` that requests buffer donation only where it is honored.
+
+    The serving engines route every cache-threading entry point (prefill
+    insert / decode step / fused decode scan) through this so the KV cache
+    is updated in place on backends that support donation, and silently
+    falls back to copying semantics (no per-call warnings) on backends
+    that do not.
+    """
+    if donate_argnums and donation_supported():
+        return jax.jit(fun, donate_argnums=donate_argnums, **kwargs)
+    return jax.jit(fun, **kwargs)
 
 
 def pallas_tpu_compiler_params(**kwargs):

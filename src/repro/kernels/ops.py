@@ -67,7 +67,9 @@ def decode_attention(q: Array, k: Array, v: Array, valid: Array, *,
     if force_ref:
         out = ref.decode_attention_ref(qk, kk, vv, vd)
     else:
-        out = _decode_pallas(qk, kk, vv, vd, interpret=_interpret())
+        out = _decode_pallas(qk, kk, vv, vd,
+                             block_c=_divisor_block(C, 512),
+                             interpret=_interpret())
     return out.reshape(B, 1, nh, hd)
 
 

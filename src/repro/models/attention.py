@@ -193,6 +193,49 @@ def _maybe_quantize_cache(cfg: ModelConfig, cache: KVCache):
                         length=cache.length)
 
 
+def _decode_pos_slot(cfg: ModelConfig, pos, C: int):
+    """Write slot for the new token: ring position when sliding."""
+    if cfg.sliding_window is not None:
+        return (pos % C).astype(jnp.int32)
+    return pos
+
+
+def _decode_valid(cfg: ModelConfig, pos, slot, B: int, C: int,
+                  per_row: bool) -> Array:
+    """[B or 1, 1, C] bool mask over cache slots (capacity / ring window)."""
+    slots = jnp.arange(C)
+    pos_b = pos[:, None] if per_row else pos[None, None]      # broadcastable
+    slot_b = slot[:, None] if per_row else slot[None, None]
+    if cfg.sliding_window is not None:
+        # ring buffer: reconstruct global positions per slot
+        kv_pos = jnp.where(slots[None] <= slot_b,
+                           pos_b - slot_b + slots[None],
+                           pos_b - slot_b + slots[None] - C)
+        valid = (kv_pos >= 0) & (kv_pos > pos_b - cfg.sliding_window)
+    else:
+        valid = slots[None] <= pos_b
+    return valid.reshape((B if per_row else 1), 1, C)
+
+
+def _decode_attend(cfg: ModelConfig, p: dict, q: Array, k: Array, v: Array,
+                   valid: Array, B: int, C: int) -> Array:
+    """Attend one query token over the cache and project out.
+
+    Dispatches to the Pallas decode-attention slot kernel when
+    ``cfg.use_decode_kernel`` is set (per-row valid masks cover both ragged
+    continuous-batching lengths and ring-buffer windows); the jnp ``_sdpa``
+    is the cross-checked reference.
+    """
+    if cfg.use_decode_kernel:
+        from ..kernels import ops as kops
+        out = kops.decode_attention(
+            q, k, v, jnp.broadcast_to(valid[:, 0, :], (B, C)))
+    else:
+        mask = jnp.broadcast_to(valid, (B, 1, C))
+        out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), p["wo"])
+
+
 def attn_decode(cfg: ModelConfig, p: dict, x: Array, cache):
     """One-token step. x [B,1,d] -> (y [B,1,d], new cache).
 
@@ -208,8 +251,7 @@ def attn_decode(cfg: ModelConfig, p: dict, x: Array, cache):
     rope_pos = pos[:, None] if per_row else pos[None]
     q, k_new, v_new = _project_qkv(cfg, p, x, rope_pos.astype(jnp.int32))
     C = cache.capacity
-    slot = (pos % C).astype(jnp.int32) if cfg.sliding_window is not None \
-        else pos
+    slot = _decode_pos_slot(cfg, pos, C)
 
     if per_row:
         rows = jnp.arange(B)
@@ -234,22 +276,42 @@ def attn_decode(cfg: ModelConfig, p: dict, x: Array, cache):
         k = put(cache.k, k_new)
         v = put(cache.v, v_new)
 
-    slots = jnp.arange(C)
-    pos_b = pos[:, None] if per_row else pos[None, None]      # broadcastable
-    slot_b = slot[:, None] if per_row else slot[None, None]
-    if cfg.sliding_window is not None:
-        # ring buffer: reconstruct global positions per slot
-        kv_pos = jnp.where(slots[None] <= slot_b,
-                           pos_b - slot_b + slots[None],
-                           pos_b - slot_b + slots[None] - C)
-        valid = (kv_pos >= 0) & (kv_pos > pos_b - cfg.sliding_window)
-    else:
-        valid = slots[None] <= pos_b
-    valid = valid.reshape((B if per_row else 1), 1, C)
-    mask = jnp.broadcast_to(valid, (B, 1, C))
-    out = _sdpa(cfg, q, k, v, mask)
-    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), p["wo"])
+    valid = _decode_valid(cfg, pos, slot, B, C, per_row)
+    y = _decode_attend(cfg, p, q, k, v, valid, B, C)
     if quant:
         return y, QuantKVCache(k=k_int, v=v_int, k_scale=k_sc,
                                v_scale=v_sc, length=pos + 1)
     return y, KVCache(k=k, v=v, length=pos + 1)
+
+
+def attn_decode_stacked(cfg: ModelConfig, p: dict, x: Array, k_all: Array,
+                        v_all: Array, pos, layer: int):
+    """One-token step scattering straight into STACKED cache leaves.
+
+    x [B,1,d]; k_all/v_all [L, B, C, nkv, hd] with ``layer`` a static
+    (trace-time) index into the leading stack axis; ``pos`` the layer's
+    cache length (scalar or [B]). Returns (y, k_all, v_all) with the new
+    token's KV written in place at ``[layer, :, slot]`` — no per-layer
+    slice-out/write-back copies, which is what lets XLA keep the whole
+    stacked cache aliased as a loop carry in the serving engines' fused
+    decode scan. Float math is identical to :func:`attn_decode`.
+    """
+    B = x.shape[0]
+    per_row = pos.ndim == 1
+    rope_pos = pos[:, None] if per_row else pos[None]
+    q, k_new, v_new = _project_qkv(cfg, p, x, rope_pos.astype(jnp.int32))
+    C = k_all.shape[-3]
+    slot = _decode_pos_slot(cfg, pos, C)
+    if per_row:
+        rows = jnp.arange(B)
+        k_all = k_all.at[layer, rows, slot].set(k_new[:, 0])
+        v_all = v_all.at[layer, rows, slot].set(v_new[:, 0])
+    else:
+        start = (layer, 0, slot, 0, 0)
+        k_all = jax.lax.dynamic_update_slice(k_all, k_new[None], start)
+        v_all = jax.lax.dynamic_update_slice(v_all, v_new[None], start)
+    k = k_all[layer]
+    v = v_all[layer]
+    valid = _decode_valid(cfg, pos, slot, B, C, per_row)
+    y = _decode_attend(cfg, p, q, k, v, valid, B, C)
+    return y, k_all, v_all

@@ -77,6 +77,12 @@ class ModelConfig:
     # interpret mode (slow, exact); the jnp path stays the default because
     # the dry-run/roofline needs XLA-analyzable HLO.
     use_kernels: bool = False
+    # route the slot-decode attention step (``attn_decode``) through the
+    # Pallas decode_attention kernel (per-row lengths / ring-buffer valid
+    # masks). Independent of use_kernels so serving can flip just the
+    # decode hot path; on CPU the kernel runs in interpret mode and is
+    # cross-checked against the jnp reference by tests/engine bench.
+    use_decode_kernel: bool = False
     # decode KV cache storage: "model" (= dtype, bf16) or "int8"
     # (per-(position, head) absmax-scaled symmetric quantization; halves
     # cache HBM traffic, the dominant decode cost)

@@ -1,4 +1,10 @@
-"""Token sampling for the decode loop."""
+"""Token sampling for the decode loop.
+
+Greedy decoding (``temperature <= 0``) is a pure argmax: it consumes no
+PRNG key, so callers on the hot path (the per-token reference loop and the
+fused decode scan in ``serving.engine``) skip ``jax.random.split`` entirely
+and pass ``key=None``.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,12 +13,17 @@ import jax.numpy as jnp
 Array = jnp.ndarray
 
 
-def sample(logits: Array, key, temperature: float = 0.0,
+def sample(logits: Array, key=None, temperature: float = 0.0,
            top_k: int = 0) -> Array:
-    """logits [B, 1, V] -> tokens [B, 1] int32."""
+    """logits [B, 1, V] -> tokens [B, 1] int32.
+
+    ``key`` may be None when ``temperature <= 0`` (greedy argmax path).
+    """
     logits = logits[:, -1, :].astype(jnp.float32)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    if key is None:
+        raise ValueError("stochastic sampling (temperature > 0) needs a key")
     logits = logits / temperature
     if top_k > 0:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]

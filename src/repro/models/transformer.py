@@ -285,14 +285,105 @@ def init_decode_cache(cfg: ModelConfig, batch: int, capacity: int):
     }
 
 
+def _layer_at(tree, *idx):
+    """Static per-layer view of stacked params/cache leaves."""
+    return jax.tree.map(lambda t: t[idx], tree)
+
+
+def _write_at(stacked, update, *idx):
+    """Static per-layer write-back into stacked cache leaves (aliasable)."""
+    return jax.tree.map(lambda t, s: t.at[idx].set(s), stacked, update)
+
+
+def _attn_block_static(cfg: ModelConfig, kind: str, p: dict, x: Array,
+                       kv: KVCache, i: int):
+    """Attention/MoE block decode scattering straight into the stacked KV
+    leaves (no slice-out/write-back copy of the capacity-sized cache)."""
+    pos = kv.length[i]
+    h, k_all, v_all = attention.attn_decode_stacked(
+        cfg, p["attn"], apply_norm(cfg, p["ln1"], x), kv.k, kv.v, pos, i)
+    x = x + h
+    if kind == "attn":
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    else:
+        h, _ = moe.moe_forward(cfg, p["moe"], apply_norm(cfg, p["ln2"], x))
+        x = x + h
+    kv = KVCache(k=k_all, v=v_all, length=kv.length.at[i].set(pos + 1))
+    return x, kv
+
+
+def _decode_static(cfg: ModelConfig, params: dict, x: Array, cache):
+    """One decode step with a trace-time-unrolled layer loop.
+
+    The stacked cache leaves are threaded through as carried buffers:
+    attention KV scatters land directly in the stacked [L, B, C, nkv, hd]
+    leaves (``attn_decode_stacked``), and the small recurrent states use a
+    static slice + ``.at[i].set`` write-back — both of which XLA keeps in
+    place inside a surrounding ``lax.scan``, instead of the layer-scan
+    xs->ys round trip that re-materializes every capacity-sized cache leaf
+    once per token. int8 KV caches fall back to slice + write-back (their
+    quantized leaves are already half-width).
+    """
+    kind = cfg.backbone_kind
+    block_fn = functools.partial(_block_decode, cfg, kind)
+    if not cfg.has_shared_attn:
+        layers = cache["layers"]
+        inplace_kv = kind in ("attn", "moe") and isinstance(layers, KVCache)
+        for i in range(cfg.n_layers):
+            lp = _layer_at(params["blocks"], i)
+            if inplace_kv:
+                x, layers = _attn_block_static(cfg, kind, lp, x, layers, i)
+            else:
+                x, ci = block_fn(lp, x, _layer_at(layers, i))
+                layers = _write_at(layers, ci, i)
+        return x, {"layers": layers}
+    g, rem = _hybrid_layout(cfg)
+    grouped, shared = cache["grouped"], cache["shared"]
+    shared_inplace = isinstance(shared, KVCache)
+    for gi in range(g):
+        for j in range(cfg.attn_every):
+            x, ci = block_fn(_layer_at(params["blocks"],
+                                       gi * cfg.attn_every + j), x,
+                             _layer_at(grouped, gi, j))
+            grouped = _write_at(grouped, ci, gi, j)
+        if shared_inplace:
+            x, shared = _attn_block_static(cfg, "attn",
+                                           params["shared_attn"], x,
+                                           shared, gi)
+        else:
+            x, sc = _block_decode(cfg, "attn", params["shared_attn"], x,
+                                  _layer_at(shared, gi))
+            shared = _write_at(shared, sc, gi)
+    rem_cache = cache.get("remainder")
+    if rem:
+        for j in range(rem):
+            x, ci = block_fn(_layer_at(params["blocks"],
+                                       g * cfg.attn_every + j), x,
+                             _layer_at(rem_cache, j))
+            rem_cache = _write_at(rem_cache, ci, j)
+    return x, {"grouped": grouped, "shared": shared, "remainder": rem_cache}
+
+
 def decode_step(cfg: ModelConfig, params: dict, token: Array,
-                cache) -> ModelOutput:
-    """token [B, 1] int32 -> next-token logits [B, 1, V]."""
+                cache, static_layers: bool = False) -> ModelOutput:
+    """token [B, 1] int32 -> next-token logits [B, 1, V].
+
+    ``static_layers=True`` unrolls the layer loop at trace time and keeps
+    the stacked cache leaves as the carried buffers (static slice per layer
+    + ``.at[i].set`` write-back) instead of running the layer ``lax.scan``
+    whose xs->ys round trip re-materializes every capacity-sized cache leaf
+    each token. Inside the serving engines' fused generation scan this is
+    the difference between O(1) in-place slot updates and a full cache copy
+    per token, so the fast path uses it; the default (False) keeps the
+    scanned stack that bounds compile time for deep training/prefill graphs.
+    """
     x = embed_tokens(cfg, params["embed"], token)
     kind = cfg.backbone_kind
     block_fn = functools.partial(_block_decode, cfg, kind)
 
-    if not cfg.has_shared_attn:
+    if static_layers:
+        x, new_cache = _decode_static(cfg, params, x, cache)
+    elif not cfg.has_shared_attn:
         def scan_body(x, inputs):
             lp, c = inputs
             x, c = block_fn(lp, x, c)

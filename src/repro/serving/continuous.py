@@ -7,23 +7,46 @@ the per-row-position decode path (``attn_decode`` with a vector
 ``length``):
 
 * a fixed pool of ``max_slots`` cache rows,
-* per-request prefill (B=1) whose cache rows are INSERTED into a free slot,
-* one shared decode step advances every active slot,
+* **batched admission**: up to k queued requests prefill in ONE padded
+  B=k dispatch (``admit_many``), and all k rows are inserted with a single
+  vectorized slot-scatter — one jitted, donation-aware ``_insert`` over a
+  slot-index vector instead of a per-request per-leaf Python scatter,
+* one shared decode step advances every active slot, either per token
+  (``step``, the reference) or as a fused ``lax.scan`` emitting up to
+  ``chunk`` tokens per dispatch (``step_chunk``) with per-slot budget and
+  alive masks carried as device state,
 * strict per-slot budget enforcement (the paper's control knob),
 * slots retire when budget + answer tokens complete.
 
+Padding contract: batched admission right-pads prompts, which is exact for
+attention backbones (causal masking means the last real token's logits are
+unchanged, and pad KV slots are overwritten by decode before the per-row
+``length`` mask can expose them). Recurrent/hybrid backbones and sliding
+windows fold pads into carried state, so there admissions are batched per
+equal prompt length instead (no pads, still one dispatch per group);
+capacity-dispatch MoE couples rows through shared per-expert capacity
+buffers, so its admissions stay B=1 (dropless MoE impls batch freely).
+
+Donation contract: ``_step`` / ``_scan`` / ``_insert`` consume the engine
+cache via ``donate_argnums`` (through ``compat.jit``) where the backend
+supports it, so slot caches update in place instead of copying all
+``capacity``-sized leaves every token.
+
 Correctness contract (tested): with greedy sampling, a request served in a
-rolling batch produces EXACTLY the tokens it would produce alone.
+rolling batch — admitted in a batch, decoded in chunks, sharing steps with
+strangers across admissions and retirements — produces EXACTLY the tokens
+it would produce alone.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..models import decode_step, forward
 from ..models.config import ModelConfig
 
@@ -42,19 +65,25 @@ class Slot:
 
 class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
-                 capacity: int = 512):
+                 capacity: int = 512, chunk: int = 8,
+                 use_decode_kernel: bool = False):
+        if use_decode_kernel:
+            cfg = dataclasses.replace(cfg, use_decode_kernel=True)
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
         self.capacity = capacity
+        self.chunk = chunk
         from ..models import init_decode_cache
-        cache = init_decode_cache(cfg, max_slots, capacity)
         # per-slot positions: broadcast every `length` leaf to [L..., B]
-        self.cache = jax.tree.map(lambda l: l, cache)
-        self.cache = self._with_vector_lengths(self.cache)
+        self.cache = self._with_vector_lengths(
+            init_decode_cache(cfg, max_slots, capacity))
         self.slots: list = [None] * max_slots
         self._prefill = jax.jit(self._prefill_impl)
-        self._step = jax.jit(self._step_impl)
+        self._step = compat.jit(self._step_impl, donate_argnums=(2,))
+        self._scan = compat.jit(self._scan_impl, donate_argnums=(2,),
+                                static_argnames=("chunk",))
+        self._insert = compat.jit(self._insert_impl, donate_argnums=(1,))
 
     # ------------------------------------------------------------ internals
     def _with_vector_lengths(self, cache):
@@ -68,66 +97,162 @@ class ContinuousBatchingEngine:
                             is_leaf=lambda n: hasattr(n, "_replace")
                             and hasattr(n, "length"))
 
-    def _prefill_impl(self, params, tokens):
+    def _prefill_impl(self, params, tokens, lengths):
+        """Right-padded B=k prefill; returns per-row greedy first tokens
+        (gathered at each row's true last position) + the prefill cache."""
         out = forward(self.cfg, params, tokens, return_cache=True,
                       cache_capacity=self.capacity)
-        return out.logits[:, -1:, :], out.cache
+        rows = jnp.arange(tokens.shape[0])
+        last = out.logits[rows, lengths - 1]
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), out.cache
 
     def _step_impl(self, params, token, cache):
         out = decode_step(self.cfg, params, token, cache)
         return out.logits, out.cache
 
-    def _insert(self, slot: int, row_cache):
-        """Insert a single-request prefill cache (batch row 0) into `slot`."""
-        def ins(dst, src):
-            if hasattr(dst, "_replace") and hasattr(dst, "length"):
-                new = {}
-                for f in dst._fields:
-                    d, s = getattr(dst, f), getattr(src, f)
-                    if f == "length":
-                        new[f] = d.at[..., slot].set(s)
-                    else:
-                        # leaves are [stack..., B, ...]; batch axis position =
-                        # ndim of the stacked prefix + 0 -> find axis where
-                        # dst has max_slots and src has 1
-                        axis = next(i for i in range(d.ndim)
-                                    if d.shape[i] == self.max_slots
-                                    and s.shape[i] == 1)
-                        idx = [slice(None)] * d.ndim
-                        idx[axis] = slot
-                        sidx = [slice(None)] * s.ndim
-                        sidx[axis] = 0
-                        new[f] = d.at[tuple(idx)].set(s[tuple(sidx)])
-                return dst._replace(**new)
-            return dst
+    def _scan_impl(self, params, token, cache, alive, remaining, *, chunk):
+        """Fused multi-token decode: ``chunk`` steps in one dispatch.
 
-        self.cache = jax.tree.map(
-            ins, self.cache, row_cache,
+        Per-slot alive/remaining masks ride the scan carry; retired slots
+        keep decoding on their own (discarded) greedy continuation — their
+        rows are dead weight until the next admission overwrites them —
+        which keeps shapes static. Dead-row inputs never influence live
+        rows for the row-independent architectures the exactness contract
+        covers. Emits the raw next-token matrix [chunk, S]; the host takes
+        ``min(chunk, remaining)`` tokens per slot, mirroring ``step``.
+        """
+        def body(carry, _):
+            token, cache, alive, remaining = carry
+            out = decode_step(self.cfg, params, token[:, None], cache,
+                              static_layers=True)
+            logits, cache = out.logits, out.cache
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            remaining = remaining - alive.astype(jnp.int32)
+            alive = alive & (remaining > 0)
+            return (nxt, cache, alive, remaining), nxt
+
+        (token, cache, alive, remaining), toks = jax.lax.scan(
+            body, (token, cache, alive, remaining), None, length=chunk)
+        return toks, cache
+
+    def _insert_impl(self, row_cache, cache, slot_idx, lengths):
+        """Vectorized slot-scatter: insert k prefilled rows into ``cache``
+        at ``slot_idx`` [k] in one fused update (all leaves, all rows).
+
+        The batch axis of every leaf is the node's stack-prefix depth,
+        recovered from the broadcast ``length`` leaf (shape [stack..., B]);
+        ``lengths`` [k] carries each row's TRUE prompt length so padded
+        prefills land with exact per-row positions.
+        """
+        def ins(dst, src):
+            if not (hasattr(dst, "_replace") and hasattr(dst, "length")):
+                return dst
+            axis = dst.length.ndim - 1          # stack-prefix depth
+            new = {}
+            for f in dst._fields:
+                d, s = getattr(dst, f), getattr(src, f)
+                if f == "length":
+                    new[f] = d.at[..., slot_idx].set(
+                        lengths.astype(d.dtype))
+                else:
+                    idx = [slice(None)] * d.ndim
+                    idx[axis] = slot_idx
+                    new[f] = d.at[tuple(idx)].set(s)
+            return dst._replace(**new)
+
+        return jax.tree.map(
+            ins, cache, row_cache,
             is_leaf=lambda n: hasattr(n, "_replace") and hasattr(n, "length"))
+
+    def _batch_rows(self) -> int:
+        """How many requests one admission prefill may batch exactly.
+
+        Capacity-dispatch MoE routes the whole flattened batch through
+        shared per-expert capacity buffers, so rows (and pads) compete for
+        slots and a token that survives solo can be dropped in a batch —
+        those admissions stay B=1 to keep the served-alone contract.
+        """
+        if (self.cfg.backbone_kind == "moe"
+                and self.cfg.moe.impl == "capacity"):
+            return 1
+        return self.max_slots
+
+    def _can_pad_batch(self) -> bool:
+        """Right-padded ragged prefill is exact only when per-position state
+        never flows forward past the pads (pure attention, no window) and
+        rows don't couple through shared routing buffers."""
+        return (self.cfg.backbone_kind in ("attn", "moe")
+                and self._batch_rows() > 1
+                and not self.cfg.has_shared_attn
+                and self.cfg.sliding_window is None)
 
     # ------------------------------------------------------------------ api
     def admit(self, rid: int, prompt: np.ndarray, budget: int,
               max_extra: int = 4) -> bool:
         """Prefill a request and place it in a free slot; False if full."""
-        try:
-            slot = self.slots.index(None)
-        except ValueError:
-            return False
-        logits, row_cache = self._prefill(
-            self.params, jnp.asarray(prompt[None, :], jnp.int32))
-        self._insert(slot, row_cache)
-        first = int(jnp.argmax(logits[0, -1]))
-        self.slots[slot] = Slot(rid=rid, budget=budget, max_extra=max_extra,
-                                generated=1, tokens=[first],
-                                last_token=first)
-        return True
+        return self.admit_many([(rid, prompt, budget, max_extra)])[0]
+
+    def admit_many(self, requests: Sequence[Tuple]) -> list:
+        """Admit up to ``len(requests)`` queued requests in batched
+        prefills. Each request is ``(rid, prompt, budget, max_extra)``.
+        Returns per-request admission flags (False once slots run out;
+        admission order is FIFO over the argument list).
+
+        Admission always emits the prefill's greedy first token, so every
+        request produces ``max(budget + max_extra, 1)`` tokens; degenerate
+        ``budget + max_extra <= 1`` slots retire on the next step without
+        consuming decode work (identical under ``step`` and
+        ``step_chunk``).
+        """
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        take = min(len(free), len(requests))
+        flags = [False] * len(requests)
+        if take == 0:
+            return flags
+        batch = list(zip(free[:take], requests[:take]))
+        if self._can_pad_batch():
+            groups = [batch]
+        else:       # exactness for recurrent/hybrid/windowed: no pads
+            by_len: dict = {}
+            for item in batch:
+                by_len.setdefault(len(item[1][1]), []).append(item)
+            groups = list(by_len.values())
+        rows = self._batch_rows()
+        if rows < max(len(g) for g in groups):   # e.g. capacity-dispatch MoE
+            groups = [g[i:i + rows] for g in groups
+                      for i in range(0, len(g), rows)]
+        for group in groups:
+            lengths = np.asarray([len(req[1]) for _, req in group],
+                                 dtype=np.int32)
+            S = int(lengths.max())
+            tokens = np.zeros((len(group), S), dtype=np.int32)
+            for r, (_, req) in enumerate(group):
+                tokens[r, :lengths[r]] = req[1]
+            firsts, row_cache = self._prefill(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths))
+            slot_idx = jnp.asarray([slot for slot, _ in group], jnp.int32)
+            self.cache = self._insert(row_cache, self.cache, slot_idx,
+                                      jnp.asarray(lengths))
+            firsts = np.asarray(firsts)
+            for r, (slot, (rid, _, budget, max_extra)) in enumerate(group):
+                first = int(firsts[r])
+                self.slots[slot] = Slot(rid=rid, budget=budget,
+                                        max_extra=max_extra, generated=1,
+                                        tokens=[first], last_token=first)
+        for j in range(take):
+            flags[j] = True
+        return flags
 
     @property
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
     def step(self) -> list:
-        """One decode step for all active slots; returns finished Slots."""
+        """One decode step for all active slots; returns finished Slots.
+
+        Per-token reference path: one dispatch + one host sync per token.
+        ``step_chunk`` is the fused fast path with identical semantics.
+        """
         if self.n_active == 0:
             return []
         token = jnp.asarray([[s.last_token if s else 0]
@@ -138,9 +263,43 @@ class ContinuousBatchingEngine:
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
-            s.tokens.append(int(nxt[i]))
-            s.last_token = int(nxt[i])
-            s.generated += 1
+            if s.generated < s.budget + s.max_extra:
+                s.tokens.append(int(nxt[i]))
+                s.last_token = int(nxt[i])
+                s.generated += 1
+            if s.generated >= s.budget + s.max_extra:
+                finished.append(s)
+                self.slots[i] = None
+        return finished
+
+    def step_chunk(self, chunk: Optional[int] = None) -> list:
+        """Advance every active slot by up to ``chunk`` tokens in ONE
+        dispatch (fused ``lax.scan``); returns Slots that finished inside
+        the chunk. Admissions happen at chunk boundaries; a slot whose
+        remaining budget is shorter than the chunk retires mid-chunk (its
+        surplus steps are masked on device and discarded here).
+        """
+        chunk = self.chunk if chunk is None else chunk
+        if self.n_active == 0 or chunk <= 0:
+            return []
+        token = jnp.asarray([s.last_token if s else 0 for s in self.slots],
+                            jnp.int32)
+        alive = jnp.asarray([s is not None for s in self.slots])
+        remaining = jnp.asarray(
+            [s.budget + s.max_extra - s.generated if s else 0
+             for s in self.slots], jnp.int32)
+        toks, self.cache = self._scan(self.params, token, self.cache,
+                                      alive, remaining, chunk=chunk)
+        toks = np.asarray(toks)                      # [chunk, S]
+        finished = []
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            n_take = min(chunk, s.budget + s.max_extra - s.generated)
+            if n_take > 0:
+                s.tokens.extend(int(t) for t in toks[:n_take, i])
+                s.generated += n_take
+                s.last_token = int(toks[n_take - 1, i])
             if s.generated >= s.budget + s.max_extra:
                 finished.append(s)
                 self.slots[i] = None

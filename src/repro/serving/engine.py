@@ -6,18 +6,40 @@ EXACTLY l_k reasoning tokens (Sec II: "a strict budget-enforcement
 mechanism ensures that exactly l_k tokens are produced"), then up to
 ``max_extra_tokens`` answer tokens.
 
+Two execution paths share one contract:
+
+* **Fused scan fast path** (default): generation runs as a chunked
+  ``lax.scan`` — one device dispatch emits up to ``chunk`` tokens, with the
+  budget / EOS / alive masks carried as device state, so the host syncs
+  once per chunk instead of once per token. The last chunk always runs the
+  full static ``chunk`` length (finished rows emit masked zeros), so every
+  generate call reuses ONE compiled scan regardless of budgets.
+* **Per-token reference loop** (``use_scan=False``): one jitted decode step
+  + one host sync per token. This is the asserted reference — with greedy
+  sampling the fast path must match it token-for-token (tests and
+  ``benchmarks/engine_bench.py`` pin this per architecture family), and
+  with ``temperature > 0`` the two paths consume identical key splits
+  while any row is alive, so sampled outputs match too.
+
+Donation contract: the KV cache is threaded through the jitted step/scan
+entry points with ``donate_argnums`` (via ``compat.jit``), so on backends
+that honor donation each dispatch updates the capacity-sized cache buffers
+in place instead of copying them per token. Callers must treat the cache
+passed into ``_step`` / ``_scan`` as consumed.
+
 Batched generation pads budgets within the batch and masks finished rows —
 the beyond-paper continuous-batching mode builds on this.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..models import decode_step, forward, sample
 from ..models.config import ModelConfig
 
@@ -26,14 +48,21 @@ Array = jnp.ndarray
 
 class DecodeEngine:
     def __init__(self, cfg: ModelConfig, params, cache_capacity: int = 512,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0, chunk: int = 16,
+                 use_scan: bool = True, use_decode_kernel: bool = False):
+        if use_decode_kernel:
+            cfg = dataclasses.replace(cfg, use_decode_kernel=True)
         self.cfg = cfg
         self.params = params
         self.capacity = cache_capacity
         self.temperature = temperature
+        self.chunk = chunk
+        self.use_scan = use_scan
         self._prefill = jax.jit(self._prefill_impl,
                                 static_argnames=("capacity",))
-        self._step = jax.jit(self._step_impl)
+        self._step = compat.jit(self._step_impl, donate_argnums=(2,))
+        self._scan = compat.jit(self._scan_impl, donate_argnums=(2,),
+                                static_argnames=("chunk", "eos_token"))
 
     # ------------------------------------------------------------- internals
     def _prefill_impl(self, params, tokens, prefix_embeds, *, capacity):
@@ -45,21 +74,63 @@ class DecodeEngine:
         out = decode_step(self.cfg, params, token, cache)
         return out.logits, out.cache
 
+    def _scan_impl(self, params, token, cache, alive, n_gen, total, budgets,
+                   key, *, chunk, eos_token):
+        """Emit up to ``chunk`` tokens in one dispatch.
+
+        Mirrors the reference loop exactly: each step records the current
+        token (masked by ``alive``), advances the budget/EOS masks, then
+        runs the model step and samples the next token. Dead rows keep
+        stepping (their emissions are masked to 0), which keeps the scan
+        shape static; the host decides chunk-level early exit.
+        """
+        greedy = self.temperature <= 0.0
+
+        def body(carry, _):
+            token, cache, alive, n_gen, key = carry
+            out_tok = jnp.where(alive, token[:, 0], 0)
+            n_gen = n_gen + alive.astype(jnp.int32)
+            done = n_gen >= total
+            if eos_token is not None:
+                done = done | ((n_gen > budgets) & (token[:, 0] == eos_token))
+            alive = alive & ~done
+            out = decode_step(self.cfg, params, token, cache,
+                              static_layers=True)
+            logits, cache = out.logits, out.cache
+            if greedy:
+                token = sample(logits, None, 0.0)
+            else:
+                key, sub = jax.random.split(key)
+                token = sample(logits, sub, self.temperature)
+            return (token, cache, alive, n_gen, key), out_tok
+
+        (token, cache, alive, n_gen, key), toks = jax.lax.scan(
+            body, (token, cache, alive, n_gen, key), None, length=chunk)
+        return toks.T, token, cache, alive, n_gen, key
+
     # ------------------------------------------------------------------ api
     def generate(self, prompts: np.ndarray, budgets: Sequence[int],
                  max_extra_tokens: int = 16,
                  prefix_embeds: Optional[np.ndarray] = None,
-                 eos_token: Optional[int] = None) -> dict:
+                 eos_token: Optional[int] = None, seed: int = 0,
+                 key=None, use_scan: Optional[bool] = None,
+                 chunk: Optional[int] = None) -> dict:
         """prompts [B, S] int32 (left-padded equally), budgets per row.
 
         Returns {"tokens": [B, T] generated ids, "n_generated": [B],
         "n_reasoning": [B]}. Row b generates exactly budgets[b] reasoning
         tokens, then up to max_extra_tokens answer tokens (stopping early
         only on EOS *after* the reasoning phase, mirroring the paper's
-        enforced-thinking setup).
+        enforced-thinking setup). ``seed`` (or an explicit ``key``) drives
+        stochastic sampling; greedy decoding never touches the PRNG.
+        ``use_scan`` / ``chunk`` override the engine defaults per call.
         """
         cfg = self.cfg
         B, S = prompts.shape
+        use_scan = self.use_scan if use_scan is None else use_scan
+        chunk = self.chunk if chunk is None else chunk
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
         budgets = np.asarray(budgets, dtype=np.int32)
         assert budgets.shape == (B,)
         total = budgets + max_extra_tokens
@@ -68,11 +139,55 @@ class DecodeEngine:
             self.params, jnp.asarray(prompts, jnp.int32),
             None if prefix_embeds is None else jnp.asarray(prefix_embeds),
             capacity=self.capacity)
-        key = jax.random.PRNGKey(0)
+        greedy = self.temperature <= 0.0
+        if key is None and not greedy:
+            key = jax.random.PRNGKey(seed)
+        token = sample(logits, key, self.temperature)
+        if use_scan:
+            out_tokens, n_gen = self._generate_scan(
+                token, cache, total, budgets, eos_token, key, T, chunk)
+        else:
+            out_tokens, n_gen = self._generate_loop(
+                token, cache, total, budgets, eos_token, key, T)
+        return {
+            "tokens": out_tokens,
+            "n_generated": n_gen,
+            "n_reasoning": np.minimum(n_gen, budgets),
+        }
+
+    def _generate_scan(self, token, cache, total, budgets, eos_token, key, T,
+                       chunk):
+        """Chunked device-resident generation: one dispatch per chunk."""
+        B = token.shape[0]
+        if key is None:              # greedy: the scan never consumes it
+            key = jax.random.PRNGKey(0)
+        alive = jnp.ones((B,), bool)
+        n_gen = jnp.zeros((B,), jnp.int32)
+        total_d = jnp.asarray(total)
+        budgets_d = jnp.asarray(budgets)
+        pieces = []
+        emitted = 0
+        while emitted < T:
+            toks, token, cache, alive, n_gen, key = self._scan(
+                self.params, token, cache, alive, n_gen, total_d, budgets_d,
+                key, chunk=chunk, eos_token=eos_token)
+            pieces.append(np.asarray(toks))
+            emitted += chunk
+            if not bool(np.any(np.asarray(alive))):   # one sync per chunk
+                break
+        out = (np.concatenate(pieces, axis=1) if pieces
+               else np.zeros((B, 0), np.int32))
+        if out.shape[1] < T:
+            out = np.pad(out, ((0, 0), (0, T - out.shape[1])))
+        return out[:, :T].astype(np.int32), np.asarray(n_gen)
+
+    def _generate_loop(self, token, cache, total, budgets, eos_token, key, T):
+        """Per-token reference loop (one dispatch + host sync per token)."""
+        B = token.shape[0]
+        greedy = self.temperature <= 0.0
         out_tokens = np.zeros((B, T), dtype=np.int32)
         alive = np.ones((B,), dtype=bool)
         n_gen = np.zeros((B,), dtype=np.int32)
-        token = sample(logits, key, self.temperature)
         for t in range(T):
             out_tokens[:, t] = np.where(alive, np.asarray(token[:, 0]), 0)
             n_gen += alive.astype(np.int32)
@@ -84,11 +199,9 @@ class DecodeEngine:
             alive &= ~done_budget
             if not alive.any():
                 break
-            key, sub = jax.random.split(key)
+            sub = None
+            if not greedy:
+                key, sub = jax.random.split(key)
             logits, cache = self._step(self.params, token, cache)
             token = sample(logits, sub, self.temperature)
-        return {
-            "tokens": out_tokens,
-            "n_generated": n_gen,
-            "n_reasoning": np.minimum(n_gen, budgets),
-        }
+        return out_tokens, n_gen

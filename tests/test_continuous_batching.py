@@ -61,6 +61,116 @@ def test_slot_reuse_after_retirement(setup):
     assert cb.admit(1, np.arange(1, 5, dtype=np.int32), 2)      # slot freed
 
 
+def test_batched_admission_churn_across_chunks(setup):
+    """Admit/retire across chunk boundaries with BATCHED admission: ragged
+    prompts prefill in one padded dispatch, rows land via the vectorized
+    slot-scatter, decode advances in fused chunks, and a request admitted
+    mid-flight into a freed slot still matches its served-alone stream."""
+    cfg, params = setup
+    eng = DecodeEngine(cfg, params, cache_capacity=64)
+    prompts = [np.arange(1, 7, dtype=np.int32),
+               np.arange(3, 12, dtype=np.int32),
+               np.arange(2, 5, dtype=np.int32),
+               np.arange(4, 9, dtype=np.int32)]
+    budgets = [5, 3, 7, 4]
+    refs = []
+    for pr, b in zip(prompts, budgets):
+        out = eng.generate(pr[None, :], [b], max_extra_tokens=2)
+        refs.append(out["tokens"][0, :out["n_generated"][0]].tolist())
+
+    cb = ContinuousBatchingEngine(cfg, params, max_slots=3, capacity=64,
+                                  chunk=3)
+    reqs = [(i, prompts[i], budgets[i], 2) for i in range(4)]
+    flags = cb.admit_many(reqs)
+    assert flags == [True, True, True, False]    # slots exhausted
+    done = {}
+    pending = [reqs[3]]
+    for _ in range(30):
+        for s in cb.step_chunk():
+            done[s.rid] = s.tokens
+        if pending and cb.n_active < cb.max_slots:
+            ok = cb.admit_many(pending)          # churn: re-admit mid-flight
+            pending = [r for r, f in zip(pending, ok) if not f]
+        if cb.n_active == 0 and not pending:
+            break
+    assert sorted(done) == [0, 1, 2, 3]
+    for rid in range(4):
+        assert done[rid] == refs[rid], rid
+
+
+def test_chunked_step_matches_per_token_step(setup):
+    """step_chunk is the fused twin of step: same admissions, same token
+    streams, chunk boundaries landing mid-request."""
+    cfg, params = setup
+    reqs = [(0, np.arange(1, 7, dtype=np.int32), 5, 2),
+            (1, np.arange(3, 12, dtype=np.int32), 6, 2)]
+
+    def drain(stepper):
+        cb = ContinuousBatchingEngine(cfg, params, max_slots=2, capacity=64)
+        cb.admit_many(reqs)
+        out = {}
+        for _ in range(30):
+            for s in stepper(cb):
+                out[s.rid] = s.tokens
+            if cb.n_active == 0:
+                break
+        return out
+
+    per_tok = drain(lambda cb: cb.step())
+    chunked = drain(lambda cb: cb.step_chunk(3))
+    assert per_tok == chunked
+
+
+def test_moe_capacity_admissions_stay_solo():
+    """Capacity-dispatch MoE at a REAL capacity factor (1.25, not the
+    reduced smoke 8.0): rows compete for expert-capacity slots, so batched
+    admission must fall back to B=1 prefills to keep the served-alone
+    contract."""
+    import dataclasses
+
+    cfg = reduced(get_config("deepseek-moe-16b"))
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.25))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, params, cache_capacity=64)
+    prompts = [np.arange(1, 9, dtype=np.int32),
+               np.arange(2, 10, dtype=np.int32)]
+    budgets = [4, 5]
+    refs = []
+    for pr, b in zip(prompts, budgets):
+        out = eng.generate(pr[None, :], [b], max_extra_tokens=1)
+        refs.append(out["tokens"][0, :out["n_generated"][0]].tolist())
+    cb = ContinuousBatchingEngine(cfg, params, max_slots=2, capacity=64,
+                                  chunk=3)
+    assert cb._batch_rows() == 1
+    assert cb.admit_many([(i, prompts[i], budgets[i], 1)
+                          for i in range(2)]) == [True, True]
+    done = {}
+    for _ in range(10):
+        for s in cb.step_chunk():
+            done[s.rid] = s.tokens
+        if cb.n_active == 0:
+            break
+    assert done[0] == refs[0] and done[1] == refs[1]
+
+
+def test_degenerate_budget_retires_without_overrun(setup):
+    """budget + max_extra <= 1: the prefill first token IS the request;
+    step and step_chunk both retire the slot with exactly one token."""
+    cfg, params = setup
+    for stepper in (lambda cb: cb.step(), lambda cb: cb.step_chunk(2)):
+        cb = ContinuousBatchingEngine(cfg, params, max_slots=2, capacity=64)
+        cb.admit_many([(0, np.arange(1, 5, dtype=np.int32), 1, 0),
+                       (1, np.arange(1, 5, dtype=np.int32), 0, 0)])
+        done = {}
+        for _ in range(4):
+            for s in stepper(cb):
+                done[s.rid] = s.tokens
+            if cb.n_active == 0:
+                break
+        assert len(done[0]) == 1 and len(done[1]) == 1
+
+
 def test_budget_enforced_per_slot(setup):
     cfg, params = setup
     cb = ContinuousBatchingEngine(cfg, params, max_slots=2, capacity=64)

@@ -126,6 +126,30 @@ def test_engine_strict_budget_enforcement():
     assert out["tokens"].shape[1] == 21
 
 
+def test_server_with_continuous_engine(prob):
+    """Wall mode + batch_size>1 riding the continuous fast path: batched
+    admission, fused chunked decode, strict budget+extra enforcement."""
+    from repro.core import Problem, ServerParams
+    from repro.serving.continuous import ContinuousBatchingEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, capacity=128,
+                                   chunk=4)
+    small = Problem(tasks=prob.tasks, server=ServerParams(0.1, 2.0, 64.0))
+    stream = generate_stream(small.tasks, 0.1, 10, seed=7,
+                             prompt_len_range=(4, 8))
+    srv = LLMServer(small, ServerConfig(mode="wall", batch_size=3,
+                                        generate_tokens=True,
+                                        max_extra_tokens=2,
+                                        online_adaptation=False),
+                    engine=eng)
+    rep = srv.run(stream)
+    assert rep.n == 10
+    assert rep.tokens_generated > 0
+    assert rep.mean_service > 0        # wall clock, not the virtual model
+
+
 def test_server_with_real_engine(prob):
     """Full path: allocator -> scheduler -> REAL model decode, virtual clock."""
     cfg = reduced(get_config("qwen3-0.6b"))
