@@ -1,12 +1,117 @@
-"""Generate the EXPERIMENTS.md dry-run + roofline tables from results/."""
+"""Benchmark reporting: EXPERIMENTS.md tables + the CI baseline gate.
+
+Two roles:
+
+* ``python -m benchmarks.report [dryrun|roofline|all]`` — generate the
+  EXPERIMENTS.md dry-run / roofline tables from ``results/`` (historical
+  behavior, unchanged).
+* ``python -m benchmarks.report --check --smoke-dir DIR`` — the CI gate:
+  compare every smoke-run ``BENCH_*.json`` in ``DIR`` against the
+  committed full-run artifact of the same family (repo root by default)
+  and fail the build when a smoke metric drops below its
+  relative-tolerance floor.
+
+The floors are deliberately coarse: committed artifacts are produced on
+a quiet dev machine with the full grids, smoke runs on small shared CI
+runners with reduced grids, so only order-of-magnitude regressions (a
+fast path silently falling back to the scalar pipeline, a kernel losing
+its batching, a corrupted artifact) are actionable here — the tighter
+wall-clock budgets and in-bench assertions live in each benchmark
+itself. Structural checks are strict: the committed baseline must be a
+``full`` run, the smoke artifact a ``smoke`` run, and with ``--require``
+every listed family must have produced an artifact.
+"""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import pathlib
 import sys
 
 RES = pathlib.Path("results")
+
+
+# Per-family gates: (metric name, extractor, floor as a fraction of the
+# committed full-run value). Extractors raise KeyError on malformed
+# artifacts, which the gate reports as a failure.
+def _min_arch_speedup(d: dict) -> float:
+    return min(a["speedup"] for a in d["archs"].values())
+
+
+GATES = {
+    "BENCH_disciplines.json": [
+        ("timings.speedup", lambda d: d["timings"]["speedup"], 0.15),
+        ("timings.queries_per_s",
+         lambda d: d["timings"]["queries_per_s"], 0.02),
+    ],
+    "BENCH_solver_grid.json": [
+        ("speedup_vs_scalar", lambda d: d["speedup_vs_scalar"], 0.02),
+        ("grid_cells_per_s", lambda d: d["grid_cells_per_s"], 0.02),
+    ],
+    "BENCH_engine.json": [
+        ("min_arch_speedup", _min_arch_speedup, 0.25),
+    ],
+    "BENCH_multiserver.json": [
+        ("timings.speedup", lambda d: d["timings"]["speedup"], 0.15),
+        ("timings.queries_per_s",
+         lambda d: d["timings"]["queries_per_s"], 0.02),
+    ],
+}
+
+
+def check_benchmarks(smoke_dir: str, baseline_dir: str = ".",
+                     require: bool = False) -> int:
+    """Gate smoke artifacts against committed baselines; returns #failures."""
+    smoke_dir = pathlib.Path(smoke_dir)
+    baseline_dir = pathlib.Path(baseline_dir)
+    failures = 0
+    rows = []
+    for family, gates in GATES.items():
+        base_path = baseline_dir / family
+        smoke_path = smoke_dir / family
+        if not base_path.exists():
+            rows.append((family, "-", "no committed baseline", "skip"))
+            continue
+        if not smoke_path.exists():
+            status = "FAIL" if require else "skip"
+            failures += require
+            rows.append((family, "-", "smoke artifact missing", status))
+            continue
+        base = json.load(open(base_path))
+        smoke = json.load(open(smoke_path))
+        if base.get("mode") != "full":
+            rows.append((family, "mode",
+                         f"committed baseline is {base.get('mode')!r}, "
+                         "expected 'full'", "FAIL"))
+            failures += 1
+        if smoke.get("mode") != "smoke":
+            rows.append((family, "mode",
+                         f"smoke artifact is {smoke.get('mode')!r}, "
+                         "expected 'smoke'", "FAIL"))
+            failures += 1
+        for name, extract, frac in gates:
+            try:
+                b = float(extract(base))
+                s = float(extract(smoke))
+            except (KeyError, TypeError, ValueError) as e:
+                rows.append((family, name, f"unreadable metric: {e!r}",
+                             "FAIL"))
+                failures += 1
+                continue
+            floor = frac * b
+            ok = s >= floor
+            rows.append((family, name,
+                         f"smoke {s:.3g} vs floor {floor:.3g} "
+                         f"({frac:.0%} of committed {b:.3g})",
+                         "ok" if ok else "FAIL"))
+            failures += not ok
+    width = max(len(r[0]) for r in rows) if rows else 0
+    print("## Benchmark baseline gate\n")
+    for family, metric, detail, status in rows:
+        print(f"{status:>4}  {family:<{width}}  {metric:<22}  {detail}")
+    print(f"\n{failures} failing check(s)" if failures else "\nall green")
+    return failures
 
 
 def dryrun_table() -> str:
@@ -48,11 +153,32 @@ def roofline_table(tag: str = "") -> str:
     return "\n".join(out)
 
 
-if __name__ == "__main__":
-    which = sys.argv[1] if len(sys.argv) > 1 else "all"
-    if which in ("all", "dryrun"):
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("which", nargs="?", default="all",
+                    choices=["all", "dryrun", "roofline"],
+                    help="EXPERIMENTS.md table(s) to print")
+    ap.add_argument("--check", action="store_true",
+                    help="gate smoke BENCH_*.json against committed "
+                         "baselines instead of printing tables")
+    ap.add_argument("--smoke-dir", default="bench-artifacts",
+                    help="directory holding the smoke-run artifacts")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed full-run "
+                         "artifacts (repo root)")
+    ap.add_argument("--require", action="store_true",
+                    help="fail if any gated family has no smoke artifact")
+    args = ap.parse_args(argv)
+    if args.check:
+        sys.exit(1 if check_benchmarks(args.smoke_dir, args.baseline_dir,
+                                       require=args.require) else 0)
+    if args.which in ("all", "dryrun"):
         print("## Dry-run table\n")
         print(dryrun_table())
-    if which in ("all", "roofline"):
+    if args.which in ("all", "roofline"):
         print("\n## Roofline table\n")
         print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

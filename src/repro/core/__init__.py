@@ -16,13 +16,15 @@ from .fixed_point import (contraction_certificate, fixed_point_map,
 from .integer import (coordinate_policy, exhaustive_policy, round_policy,
                       rounding_lower_bound, sandwich)
 from .lambertw import lambertw0
-from .mgc import objective_mgc, solve_mgc
+from .mgc import (erlang_c, erlang_c_np, mean_system_time_mgc, mean_wait_mgc,
+                  mgc_wait_np, objective_mgc, solve_mgc)
 from .objective import grad, hessian, lipschitz_grad_bound, objective
 from .params import (PAPER_TABLE1_LSTAR, Problem, ServerParams, TaskSet,
                      paper_problem, paper_tasks)
 from .pga import safe_step_size, solve_pga, solve_pga_backtracking
 from .queueing import (is_stable, max_stable_budget, mean_system_time,
-                       mean_wait, service_moments, worst_case)
+                       mean_wait, priority_mean_waits, service_moments,
+                       stabilizable, stability_clip, worst_case)
 
 __all__ = [
     "Problem", "TaskSet", "ServerParams", "paper_problem", "paper_tasks",
@@ -33,6 +35,8 @@ __all__ = [
     "coordinate_policy", "rounding_lower_bound", "sandwich", "lambertw0",
     "TokenBudgetAllocator", "Solution", "solve", "service_moments",
     "mean_wait", "mean_system_time", "is_stable", "worst_case",
-    "max_stable_budget", "calibrate_taskset", "fit_accuracy", "fit_latency",
-    "objective_mgc", "solve_mgc",
+    "max_stable_budget", "stability_clip", "stabilizable",
+    "priority_mean_waits", "calibrate_taskset", "fit_accuracy",
+    "fit_latency", "erlang_c", "erlang_c_np", "mean_wait_mgc",
+    "mean_system_time_mgc", "mgc_wait_np", "objective_mgc", "solve_mgc",
 ]

@@ -25,6 +25,7 @@ import numpy as np
 from . import fixed_point, integer, pga
 from .objective import grad, objective
 from .params import Problem, ServerParams, TaskSet
+from .queueing import mean_wait, service_moments
 
 Array = jnp.ndarray
 
@@ -42,18 +43,31 @@ class Solution:
                                  # its rho_max < 1 assumption fails)
     contraction_Linf_slab: float  # slab-restricted variant (beyond paper)
     stable: bool
+    slo_satisfied: bool = True   # per-task delay SLOs met (True when none)
 
 
 def solve(problem: Problem, tol: float = 1e-8,
-          integer_method: str = "exhaustive") -> Solution:
+          integer_method: str = "exhaustive",
+          delay_slo=None) -> Solution:
     """Full solve: FP -> (PGA fallback) -> integer projection.
 
     Runs under x64 (control-plane precision; N ~ 10 scalars, cost is nil).
+
+    ``delay_slo`` (optional ``[N]`` seconds) adds per-task mean-delay SLOs
+    E[T_sys,k] = E[W] + t_k(l_k) <= slo_k, handled by projection onto the
+    SLO-feasible set alongside the token-budget box (see
+    :func:`_project_slo_x64`). ``Solution.slo_satisfied`` reports whether
+    the deployed integer budgets meet every SLO (an SLO below the
+    zero-token floor t0_k + E[W(0)] is unsatisfiable; the projection then
+    returns the closest feasible budgets and flags it).
     """
     from ..compat import enable_x64
 
     with enable_x64():
-        return _solve_x64(problem, tol, integer_method)
+        sol = _solve_x64(problem, tol, integer_method)
+        if delay_slo is None:
+            return sol
+        return _project_slo_x64(problem, sol, delay_slo)
 
 
 def _solve_x64(problem: Problem, tol: float,
@@ -103,6 +117,69 @@ def _solve_x64(problem: Problem, tol: float,
     )
 
 
+def _project_slo_x64(problem: Problem, sol: Solution, delay_slo,
+                     max_rounds: int = 32) -> Solution:
+    """Project a solved allocation onto the per-task delay-SLO feasible set.
+
+    The constraint E[W(l)] + t0_k + c_k l_k <= slo_k rearranges to a
+    per-task cap l_k <= (slo_k - E[W(l)] - t0_k) / c_k that couples through
+    E[W]; capping any coordinate only lowers E[W] (E[S], E[S^2] are
+    monotone in l), so alternating "evaluate W -> cap -> re-evaluate"
+    converges monotonically from the unconstrained optimum. Integer
+    budgets take the floor of the final caps, which the same monotonicity
+    argument makes SLO-feasible whenever the caps are.
+    """
+    tasks, sp = problem.tasks, problem.server
+    slo = np.asarray(delay_slo, dtype=np.float64)
+    t0 = np.asarray(tasks.t0)
+    cc = np.asarray(tasks.c)
+    l = np.asarray(sol.lengths_cont, dtype=np.float64).copy()
+    caps = np.full_like(l, sp.l_max)
+    for _ in range(max_rounds):
+        w = float(mean_wait(service_moments(tasks, jnp.asarray(l), sp.lam),
+                            sp.lam))
+        caps = np.clip((slo - w - t0) / cc, 0.0, sp.l_max)
+        l_new = np.minimum(l, caps)
+        moved = float(np.max(np.abs(l_new - l)))
+        l = l_new
+        if moved < 1e-9:
+            break
+    # integer projection: floors alone are not sufficient (the cap loop can
+    # converge strictly below its final caps, so W at floor(caps) may
+    # exceed the W the caps were computed with) — tighten the integer
+    # point against caps recomputed at the integer point itself; each
+    # round only lowers budgets, so it terminates
+    l_int = np.clip(np.minimum(np.asarray(sol.lengths_int),
+                               np.floor(caps + 1e-12)), 0.0, sp.l_max)
+    for _ in range(max_rounds):
+        m_int = service_moments(tasks, jnp.asarray(l_int), sp.lam)
+        sys_int = float(mean_wait(m_int, sp.lam)) + t0 + cc * l_int
+        if np.all(sys_int <= slo + 1e-6) or not l_int.any():
+            break
+        caps_int = np.floor(np.clip(
+            (slo - float(mean_wait(m_int, sp.lam)) - t0) / cc,
+            0.0, sp.l_max) + 1e-12)
+        tightened = np.minimum(l_int, caps_int)
+        if np.array_equal(tightened, l_int):
+            break
+        l_int = tightened
+    # re-evaluate at the final budgets: the loop may exit right after a
+    # tightening step, and the flag must describe the returned point
+    m_int = service_moments(tasks, jnp.asarray(l_int), sp.lam)
+    sys_int = float(mean_wait(m_int, sp.lam)) + t0 + cc * l_int
+    satisfied = bool(np.all(sys_int <= slo + 1e-6)
+                     and float(m_int.rho) < 1.0)
+    return dataclasses.replace(
+        sol,
+        lengths_cont=l,
+        lengths_int=l_int,
+        value_cont=float(objective(problem, jnp.asarray(l))),
+        value_int=float(objective(problem, jnp.asarray(l_int))),
+        method=sol.method + "+slo",
+        slo_satisfied=satisfied,
+    )
+
+
 class TokenBudgetAllocator:
     """Online queueing-aware budget allocator.
 
@@ -113,9 +190,12 @@ class TokenBudgetAllocator:
 
     def __init__(self, problem: Problem, *, ewma_halflife: float = 200.0,
                  resolve_rel_tol: float = 0.05,
-                 min_resolve_interval: int = 200):
+                 min_resolve_interval: int = 200,
+                 delay_slo=None):
         problem.validate()
         self._base = problem
+        self._delay_slo = (None if delay_slo is None
+                           else np.asarray(delay_slo, dtype=np.float64))
         self._lock = threading.Lock()
         self._ewma_decay = math.log(2.0) / ewma_halflife
         self._lam_est = problem.server.lam
@@ -126,7 +206,7 @@ class TokenBudgetAllocator:
         # baked in); cap the cadence so the control plane stays cheap
         self._min_resolve_interval = min_resolve_interval
         self._arrivals_since_resolve = 0
-        self._solution = solve(problem)
+        self._solution = solve(problem, delay_slo=self._delay_slo)
         self._solved_at = (self._lam_est, self._pi_est.copy())
         self.n_resolves = 1
 
@@ -178,6 +258,6 @@ class TokenBudgetAllocator:
         lam = min(self._lam_est, 0.95 / max(es0, 1e-9))
         new_problem = Problem(tasks=new_tasks,
                               server=ServerParams(lam, sp.alpha, sp.l_max))
-        self._solution = solve(new_problem)
+        self._solution = solve(new_problem, delay_slo=self._delay_slo)
         self._solved_at = (lam, self._pi_est.copy())
         self.n_resolves += 1

@@ -32,19 +32,30 @@ class IntegerResult(NamedTuple):
     method: str
 
 
-def round_policy(problem: Problem, l_star: Array) -> IntegerResult:
-    """Componentwise rounding (eq 40), clipped to [0, l_max]."""
+def round_policy(problem: Problem, l_star: Array,
+                 objective_fn=None) -> IntegerResult:
+    """Componentwise rounding (eq 40), clipped to [0, l_max].
+
+    ``objective_fn(problem, lengths)`` defaults to the paper's P-K
+    objective; the M/G/c grid solver passes the c-server wait term.
+    """
+    if objective_fn is None:
+        objective_fn = objective
     l_int = jnp.clip(jnp.round(l_star), 0.0, problem.server.l_max)
-    return IntegerResult(l_int, objective(problem, l_int), "round")
+    return IntegerResult(l_int, objective_fn(problem, l_int), "round")
 
 
 def exhaustive_policy(problem: Problem, l_star: Array,
-                      max_tasks: int = 20) -> IntegerResult:
+                      max_tasks: int = 20,
+                      objective_fn=None) -> IntegerResult:
     """Exact floor/ceil search (eq 39) over all 2^N combinations.
 
     Vectorized: enumerate bit patterns, evaluate J for all candidates at
     once, reject unstable ones (J = -inf there already), take the argmax.
+    ``objective_fn`` as in :func:`round_policy`.
     """
+    if objective_fn is None:
+        objective_fn = objective
     n = problem.tasks.n_tasks
     if n > max_tasks:
         raise ValueError(
@@ -54,7 +65,7 @@ def exhaustive_policy(problem: Problem, l_star: Array,
     hi = jnp.clip(jnp.ceil(l_star), 0.0, problem.server.l_max)
     bits = ((jnp.arange(2 ** n)[:, None] >> jnp.arange(n)[None, :]) & 1)
     cand = jnp.where(bits == 1, hi[None, :], lo[None, :])     # [2^N, N]
-    vals = jax.vmap(lambda l: objective(problem, l))(cand)
+    vals = jax.vmap(lambda l: objective_fn(problem, l))(cand)
     best = jnp.argmax(vals)
     return IntegerResult(cand[best], vals[best], "exhaustive")
 

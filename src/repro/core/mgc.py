@@ -1,17 +1,43 @@
-"""Beyond-paper: M/G/c extension for a pod serving with c model replicas.
+"""Beyond-paper: M/G/c analytics for a pod serving with c model replicas.
 
 The paper's analysis is M/G/1. A TPU pod running c independent replicas of
-the server (data-parallel serving) sees an M/G/c queue, which has no exact
-Pollaczek-Khinchine analogue; we use the standard Lee-Longton / Kingman
-approximation
+the server behind one queue (data-parallel serving) is an M/G/c queue,
+which has no exact Pollaczek-Khinchine analogue; the default wait term is
+the standard Lee-Longton / Allen-Cunneen approximation
 
     E[W_{M/G/c}] ~= (1 + CV^2) / 2 * E[W_{M/M/c}]
 
-with E[W_{M/M/c}] from Erlang-C. The objective and solver structure carry
-over unchanged — only the wait term changes — so we re-use PGA (the wait
-term is no longer provably convex in l, but remains so empirically in the
-operating regimes we test; PGA with backtracking still converges to a
-stationary point and the DES validates the approximation).
+with E[W_{M/M/c}] from Erlang-C. At c = 1 it reduces *exactly* to the
+paper's P-K wait (eq 5): Erlang-C(1, a) = rho, so the scaling recovers
+lam E[S^2] / (2 (1 - rho)) identically — the M/G/1 analysis is the
+single-replica special case of everything in this module.
+
+Approximation error (observed on the DES validation grid of
+``benchmarks/multiserver_bench`` / ``tests/test_multiserver.py``, paper
+Table I mixtures, c in {2, 4}): Lee-Longton is asymptotically exact in
+heavy traffic — within ~1-3% of the batched c-server DES at rho = 0.9 for
+the high-variance l* mixture — but *under-predicts* by ~5-14% at moderate
+load (rho ~ 0.6), worst for near-deterministic mixtures (uniform budgets,
+CV^2 ~ 0, the M/D/c regime) and for small per-server load with many
+servers. ``correction="cosmetatos"`` applies the Cosmetatos M/D/c
+refinement interpolated in CV^2,
+
+    E[W] ~= [(1 - CV^2)/2 * (1 + f) + CV^2] * E[W_{M/M/c}],
+    f = (1 - rho)(c - 1)(sqrt(4 + 5 c) - 2) / (16 rho c),
+
+which cuts the moderate-load error to ~4-5% for deterministic mixtures
+(and is identical to Lee-Longton at c = 1, hence still exactly P-K).
+Residual error for strongly bimodal deterministic mixtures (the paper's
+l*: CV^2 ~ 1.6) remains ~6-13% at rho = 0.6 under either form — the DES,
+not the formula, is the ground truth there, which is why the sweeps layer
+couples every analytic cell to ``queueing_sim.multiserver``.
+
+The objective and solver structure carry over unchanged — only the wait
+term changes — so the c-grid solver (``sweeps.solver_grid`` with a ``c``
+axis) runs PGA with the autodiff gradient of :func:`objective_mgc` (the
+Lambert-W fixed point of Sec III-B is P-K-specific). ``c_servers`` may be
+a traced per-cell array under jit/vmap; pass the static grid-wide maximum
+as ``c_max`` so the Erlang-B recursion unrolls to a fixed depth.
 """
 from __future__ import annotations
 
@@ -27,38 +53,139 @@ from .queueing import service_moments
 
 Array = jnp.ndarray
 
+#: Wait-term variants accepted by :func:`mean_wait_mgc` (see module docs).
+MGC_CORRECTIONS = ("lee-longton", "cosmetatos")
 
-def erlang_c(c: int, a: Array) -> Array:
+
+def erlang_c(c, a: Array, c_max: int | None = None) -> Array:
     """Erlang-C probability of waiting, offered load a = lam E[S], c servers.
 
     Computed with a numerically stable iterative form of the Erlang-B
     recursion B(0)=1, B(k) = a B / (k + a B), then C = B / (1 - rho + rho B).
+
+    ``c`` may be a Python int (static recursion depth, the historical
+    behavior) or a traced integer array batched against ``a`` — then pass
+    the static bound ``c_max`` (the largest server count in the grid): the
+    recursion unrolls to ``c_max`` steps and each lane freezes its B at
+    its own c.
     """
-    b = jnp.ones_like(a)
-    for k in range(1, c + 1):
-        b = a * b / (k + a * b)
-    rho = a / c
+    if c_max is None:
+        c_max = int(c)
+    c_arr = jnp.asarray(c)
+    b = jnp.ones_like(jnp.asarray(a, dtype=jnp.result_type(float)))
+    for k in range(1, int(c_max) + 1):
+        b = jnp.where(k <= c_arr, a * b / (k + a * b), b)
+    rho = a / c_arr
     return b / jnp.clip(1.0 - rho * (1.0 - b), 1e-12, None)
 
 
-def mean_wait_mgc(problem: Problem, lengths: Array, c_servers: int) -> Array:
-    """Lee-Longton approximate E[W] for M/G/c."""
+def erlang_c_np(c, a) -> np.ndarray:
+    """Host-f64 mirror of :func:`erlang_c` (vectorized over cells).
+
+    Shared by the DES validation layers (``sweeps.evaluate``,
+    ``queueing_sim.multiserver.mgc_prediction``) so analytic cross-checks
+    never round through f32 traces; same recursion, elementwise ``c``.
+    """
+    c = np.asarray(c)
+    a = np.asarray(a, dtype=np.float64)
+    b = np.ones_like(np.broadcast_arrays(a, c)[0], dtype=np.float64)
+    for k in range(1, int(c.max()) + 1):
+        b = np.where(k <= c, a * b / (k + a * b), b)
+    rho = a / c
+    return b / np.clip(1.0 - rho * (1.0 - b), 1e-12, None)
+
+
+def _wait_factor(cv2, rho, c, correction: str, xp=jnp):
+    """Multiplier on E[W_{M/M/c}] for the chosen approximation family.
+
+    ``xp`` selects the array module (jnp for the traced solver path, np
+    for the host-f64 validation mirror) so the two cannot drift.
+    """
+    if correction == "lee-longton":
+        return (1.0 + cv2) / 2.0
+    if correction == "cosmetatos":
+        # guard rho = 0 (zero offered load): the correction term is 0/0
+        # there while the wait itself is 0 — inner where keeps the
+        # division NaN-free so the outer select stays clean under grad
+        pos = rho > 0.0
+        f = xp.where(pos,
+                     (1.0 - rho) * (c - 1.0)
+                     * (xp.sqrt(4.0 + 5.0 * c) - 2.0)
+                     / xp.where(pos, 16.0 * rho * c, 1.0),
+                     0.0)
+        return (1.0 - cv2) / 2.0 * (1.0 + f) + cv2
+    raise ValueError(f"unknown correction {correction!r} "
+                     f"(expected one of {MGC_CORRECTIONS})")
+
+
+def mean_wait_mgc(problem: Problem, lengths: Array, c_servers,
+                  c_max: int | None = None,
+                  correction: str = "lee-longton") -> Array:
+    """Approximate E[W] for M/G/c (module docs discuss the error).
+
+    ``lengths`` may carry leading batch axes ``[..., N]``; ``c_servers``
+    broadcasts against the leading shape and may be traced given a static
+    ``c_max``. At c = 1 both corrections equal the P-K wait exactly.
+    """
     tasks, sp = problem.tasks, problem.server
     m = service_moments(tasks, lengths, sp.lam)
     cv2 = jnp.clip(m.es2 / jnp.clip(m.es ** 2, 1e-30, None) - 1.0, 0.0, None)
     a = sp.lam * m.es                    # offered load (erlangs)
     rho = a / c_servers
-    pw = erlang_c(c_servers, a)
+    pw = erlang_c(c_servers, a, c_max)
     w_mmc = pw * m.es / (c_servers * jnp.clip(1.0 - rho, 1e-9, None))
-    return (1.0 + cv2) / 2.0 * w_mmc
+    return _wait_factor(cv2, rho, c_servers, correction) * w_mmc
 
 
-def objective_mgc(problem: Problem, lengths: Array, c_servers: int) -> Array:
+def mean_system_time_mgc(problem: Problem, lengths: Array, c_servers,
+                         c_max: int | None = None,
+                         correction: str = "lee-longton") -> Array:
+    """E[T_sys] = E[W_{M/G/c}] + E[S] (the eq 6 analogue)."""
+    m = service_moments(problem.tasks, lengths, problem.server.lam)
+    return mean_wait_mgc(problem, lengths, c_servers, c_max, correction) + m.es
+
+
+def mgc_wait_np(tasks, lengths, lam, c_servers,
+                correction: str = "lee-longton") -> np.ndarray:
+    """Host-f64 mirror of :func:`mean_wait_mgc` over ``[..., N]`` cells.
+
+    ``lam`` and ``c_servers`` broadcast against the leading cell axes.
+    Unstable cells (lam E[S] >= c) return +inf, matching how the
+    evaluation layer treats rho >= 1 single-server cells.
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    t = np.asarray(tasks.t0) + np.asarray(tasks.c) * lengths
+    pi = np.asarray(tasks.pi)
+    es = np.sum(pi * t, axis=-1)
+    es2 = np.sum(pi * t * t, axis=-1)
+    cv2 = np.clip(es2 / np.clip(es ** 2, 1e-30, None) - 1.0, 0.0, None)
+    a = np.asarray(lam, dtype=np.float64) * es
+    c = np.asarray(c_servers)
+    rho = a / c
+    pw = erlang_c_np(c, a)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        w_mmc = pw * es / (c * (1.0 - rho))
+        w = _wait_factor(cv2, rho, c, correction, xp=np) * w_mmc
+    return np.where(rho < 1.0, w, np.inf)
+
+
+def objective_mgc(problem: Problem, lengths: Array, c_servers,
+                  c_max: int | None = None,
+                  correction: str = "lee-longton") -> Array:
+    """J_c(l) = alpha E[p] - E[W_{M/G/c}] - E[S]; -inf outside rho/c < 1.
+
+    The c-server generalization of eq 7: only the wait term changes, and
+    at c = 1 it equals ``core.objective.objective`` exactly. Traceable in
+    ``lengths`` and ``c_servers`` (static ``c_max``), so the grid solver
+    can vmap cells and autodiff the gradient.
+    """
     tasks, sp = problem.tasks, problem.server
     m = service_moments(tasks, lengths, sp.lam)
-    rho = sp.lam * m.es / c_servers
-    acc = jnp.sum(tasks.pi * tasks.accuracy(lengths))
-    j = sp.alpha * acc - mean_wait_mgc(problem, lengths, c_servers) - m.es
+    rho = m.rho / c_servers
+    acc = jnp.sum(tasks.pi * tasks.accuracy(lengths), axis=-1)
+    j = (sp.alpha * acc
+         - mean_wait_mgc(problem, lengths, c_servers, c_max, correction)
+         - m.es)
     return jnp.where(rho < 1.0, j, -jnp.inf)
 
 
@@ -69,13 +196,21 @@ class MGcResult(NamedTuple):
 
 
 def solve_mgc(problem: Problem, c_servers: int, tol: float = 1e-8,
-              max_iters: int = 50_000) -> MGcResult:
-    """Projected gradient ascent on the M/G/c objective (autodiff gradient)."""
+              max_iters: int = 50_000,
+              correction: str = "lee-longton") -> MGcResult:
+    """Projected gradient ascent on the M/G/c objective (autodiff gradient).
+
+    Scalar host loop — one operating point per call. Whole (lambda x alpha
+    x c) grids should use ``sweeps.solver_grid.solve_grid(c=...)``, which
+    vmaps the same objective through the traced PGA-backtracking solver.
+    """
     import jax
 
     sp = problem.server
-    jfun = jax.jit(lambda l: objective_mgc(problem, l, c_servers))
-    gfun = jax.jit(jax.grad(lambda l: objective_mgc(problem, l, c_servers)))
+    jfun = jax.jit(lambda l: objective_mgc(problem, l, c_servers,
+                                           correction=correction))
+    gfun = jax.jit(jax.grad(lambda l: objective_mgc(problem, l, c_servers,
+                                                    correction=correction)))
     l = jnp.zeros(problem.tasks.n_tasks, dtype=jnp.result_type(float))
     eta = 1.0
     it = 0
@@ -100,8 +235,9 @@ def solve_mgc(problem: Problem, c_servers: int, tol: float = 1e-8,
 
 
 def pod_replica_tradeoff(problem: Problem, max_replicas: int = 8) -> list:
-    """Sweep replica count: each replica serves lam/c... actually the pod
-    shares one queue (M/G/c). Returns [(c, J_c, l_c)] for capacity planning."""
+    """Sweep replica count: the pod shares one queue (M/G/c), so each c is
+    one solve of the shared-queue objective. Returns [(c, J_c, l_c)] for
+    capacity planning."""
     out = []
     for c in range(1, max_replicas + 1):
         r = solve_mgc(problem, c)

@@ -51,8 +51,9 @@ def safe_step_size(problem: Problem, safety: float = 0.5) -> Array:
 
 
 def _stability_clip(problem: Problem, lengths: Array,
-                    margin: float = _SLAB_MARGIN) -> Array:
-    return stability_clip(problem.tasks, problem.server.lam, lengths, margin)
+                    margin: float = _SLAB_MARGIN, c_servers=1) -> Array:
+    return stability_clip(problem.tasks, problem.server.lam, lengths, margin,
+                          c_servers)
 
 
 def solve_pga(problem: Problem, l0: Array | None = None,
@@ -106,7 +107,9 @@ def solve_pga_backtracking(problem: Problem, l0: Array | None = None,
                            tol: float = 1e-9, max_iters: int = 20_000,
                            eta0: float | None = None,
                            shrink: float = 0.5,
-                           grow: float = 1.3) -> PGAResult:
+                           grow: float = 1.3,
+                           objective_fn=None, grad_fn=None,
+                           c_servers=1) -> PGAResult:
     """Beyond-paper: Armijo-backtracking PGA.
 
     The global bound 2/L_J is extremely conservative on instances where the
@@ -118,7 +121,17 @@ def solve_pga_backtracking(problem: Problem, l0: Array | None = None,
     with ``jax.vmap`` (see ``repro.sweeps.solver_grid``) rather than leading
     axes. ``max_iters`` may be a traced 0-d integer, so a vmapped caller can
     gate the solve per cell (0 iterations returns ``l0`` untouched).
+
+    ``objective_fn`` / ``grad_fn`` (signature ``(problem, lengths)``)
+    default to the paper's P-K objective; the M/G/c grid solver passes
+    ``core.mgc.objective_mgc`` closures plus the matching ``c_servers`` so
+    iterates are clipped into the c-server stability slab lam E[S] < c
+    rather than the single-server one.
     """
+    if objective_fn is None:
+        objective_fn = objective
+    if grad_fn is None:
+        grad_fn = grad
     sp = problem.server
     dtype = jnp.result_type(float)
     if l0 is None:
@@ -126,7 +139,7 @@ def solve_pga_backtracking(problem: Problem, l0: Array | None = None,
     # backtracking needs only a domain guard, not the slab certificate
     guard = 1e-6
     l0 = _stability_clip(problem, project(jnp.asarray(l0, dtype), sp.l_max),
-                         guard)
+                         guard, c_servers)
     eta_init = jnp.asarray(eta0 if eta0 is not None
                            else 100.0 * safe_step_size(problem), dtype=dtype)
 
@@ -136,15 +149,15 @@ def solve_pga_backtracking(problem: Problem, l0: Array | None = None,
 
     def body(state):
         l, eta_v, it, _ = state
-        g = grad(problem, l)
-        j0 = objective(problem, l)
+        g = grad_fn(problem, l)
+        j0 = objective_fn(problem, l)
 
         def try_step(eta_try):
             cand = _stability_clip(problem, project(l + eta_try * g, sp.l_max),
-                                   guard)
+                                   guard, c_servers)
             # Armijo w.r.t. the projected step direction
             dec = jnp.sum(g * (cand - l))
-            ok = objective(problem, cand) >= j0 + 1e-4 * dec
+            ok = objective_fn(problem, cand) >= j0 + 1e-4 * dec
             return cand, ok
 
         def bt_cond(s):

@@ -8,6 +8,7 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from .params import Problem, TaskSet
 
@@ -99,40 +100,111 @@ def worst_case(tasks: TaskSet, lam: float, l_max: float,
     )
 
 
-def stabilizable(tasks: TaskSet, lam: float, margin: float = 1e-6) -> Array:
+def stabilizable(tasks: TaskSet, lam: float, margin: float = 1e-6,
+                 c_servers=1) -> Array:
     """Whether :func:`stability_clip` can honor its guarantee at ``lam``.
 
     The clip scales budgets toward l = 0, so its floor is the zero-token
-    load rho_0 = lam E[t0]; once rho_0 >= 1 - margin no scaling reaches the
-    slab and the clip returns l = 0 at rho = rho_0 (possibly >= 1). Callers
-    sweeping arrival rates (``queueing_sim.sweep``, ``sweeps.evaluate``)
-    must mark such cells unstable rather than treat them as clipped.
+    load rho_0 = lam E[t0]; once rho_0 >= c (1 - margin) no scaling reaches
+    the slab and the clip returns l = 0 at rho = rho_0 (possibly >= c).
+    Callers sweeping arrival rates (``queueing_sim.sweep``,
+    ``sweeps.evaluate``) must mark such cells unstable rather than treat
+    them as clipped.
+
+    ``c_servers`` is the server count of the M/G/c pod (default 1, the
+    paper's M/G/1): a c-server queue is stable iff the *offered* load
+    lam E[S] stays below c, so the slab scales with c. May carry leading
+    batch axes / be traced (``sweeps.solver_grid`` c-grids).
     """
     rho0 = lam * jnp.sum(tasks.pi * tasks.t0, axis=-1)
-    return rho0 < 1.0 - margin
+    return rho0 < c_servers * (1.0 - margin)
 
 
 def stability_clip(tasks: TaskSet, lam: float, lengths: Array,
-                   margin: float = 1e-6) -> Array:
-    """Scale l toward 0 so that lam E[S(l)] <= 1 - margin.
+                   margin: float = 1e-6, c_servers=1) -> Array:
+    """Scale l toward 0 so that lam E[S(l)] <= c (1 - margin).
 
     E[S] is affine in l, so scaling the vector by s in [0, 1] moves rho
-    affinely between rho(0) < 1 and rho(l); solve for the s achieving
-    rho = 1 - margin. Identity for already-stable points.
+    affinely between rho(0) < c and rho(l); solve for the s achieving
+    rho = c (1 - margin). Identity for already-stable points.
+    ``c_servers`` (default 1: the paper's single-server condition
+    lam E[S] <= 1 - margin, bit-identical to the historical behavior) is
+    the M/G/c server count — the stability region of a c-server pod is
+    rho / c < 1, so multi-server cells must not be clipped against the
+    single-server slab.
 
     The guarantee only holds when the zero-token baseline is itself inside
-    the slab (see :func:`stabilizable`): for rho_0 >= 1 - margin the best
-    feasible projection is l = 0, which this returns, leaving
+    the slab (see :func:`stabilizable`): for rho_0 >= c (1 - margin) the
+    best feasible projection is l = 0, which this returns, leaving
     rho = rho_0 — possibly at or beyond saturation. Callers must check
     ``stabilizable`` (or the resulting rho) before reporting such a cell
     as stable.
     """
+    cap = c_servers * (1.0 - margin)
     rho0 = lam * jnp.sum(tasks.pi * tasks.t0, axis=-1)
     rho = service_moments(tasks, lengths, lam).rho
-    s = jnp.where(rho >= 1.0 - margin,
-                  (1.0 - margin - rho0) / jnp.maximum(rho - rho0, 1e-30),
+    s = jnp.where(rho >= cap,
+                  (cap - rho0) / jnp.maximum(rho - rho0, 1e-30),
                   1.0)
     return lengths * jnp.clip(s, 0.0, 1.0)[..., None]
+
+
+class PriorityWaits(NamedTuple):
+    """Cobham per-class waits for non-preemptive M/G/1 priority."""
+
+    per_task: np.ndarray    # [N] mean wait of each task's class
+    mean_wait: np.ndarray   # scalar: sum_k pi_k W_k (arrival-averaged)
+    residual: np.ndarray    # scalar: R = lam E[S^2] / 2
+    class_of: np.ndarray    # [N] 0-based class index (0 = served first)
+
+
+def priority_mean_waits(tasks: TaskSet, lengths, lam: float,
+                        keys=None) -> PriorityWaits:
+    """Cobham's non-preemptive priority formula, per task (beyond paper).
+
+    The paper's M/G/1 analysis is FIFO; the DES ablations also run a
+    non-preemptive priority discipline whose per-query key is constant per
+    task type at fixed budgets (``queueing_sim.discipline_keys``:
+    ``-accuracy / service``). Each task type is then a Poisson class with
+    rate lam pi_k and deterministic service t_k(l_k), and Cobham's formula
+    gives the exact steady-state mean wait of class k:
+
+        W_k = R / ((1 - sigma_{k-1}) (1 - sigma_k)),
+        R = lam E[S^2] / 2,   sigma_k = sum_{j in classes <= k} lam pi_j t_j
+
+    with classes ordered by ascending key (lower key = served first) and
+    tasks sharing a key merged into one class (they are FIFO among
+    themselves, which is exactly a pooled class). With all keys equal the
+    formula collapses to the P-K wait R / (1 - rho) — the FIFO special
+    case — which is how the DES cross-check in CI anchors it.
+
+    ``keys`` defaults to the priority discipline's own ordering; pass any
+    per-task key vector to analyze other class structures. Host-side f64
+    (control-plane analytics; not traceable).
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    t = np.asarray(tasks.t0) + np.asarray(tasks.c) * lengths
+    pi = np.asarray(tasks.pi)
+    if keys is None:
+        # mirror discipline_keys("priority") without the circular import
+        A, b, D = (np.asarray(x) for x in (tasks.A, tasks.b, tasks.D))
+        p = A * (1.0 - np.exp(-b * lengths)) + D
+        keys = -p / np.maximum(t, 1e-12)
+    keys = np.asarray(keys, dtype=np.float64)
+    uniq, class_of = np.unique(keys, return_inverse=True)
+    rho_class = np.bincount(class_of, weights=lam * pi * t,
+                            minlength=uniq.shape[0])
+    sigma = np.cumsum(rho_class)                       # sigma_k, inclusive
+    sigma_prev = sigma - rho_class                     # sigma_{k-1}
+    r = lam * float(np.sum(pi * t * t)) / 2.0
+    with np.errstate(divide="ignore"):
+        w_class = np.where((sigma < 1.0) & (sigma_prev < 1.0),
+                           r / ((1.0 - sigma_prev) * (1.0 - sigma)), np.inf)
+    per_task = w_class[class_of]
+    return PriorityWaits(per_task=per_task,
+                         mean_wait=np.sum(pi * per_task),
+                         residual=np.asarray(r),
+                         class_of=class_of)
 
 
 def max_stable_budget(problem: Problem, margin: float = 1e-3) -> float:

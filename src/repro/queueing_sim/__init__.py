@@ -12,15 +12,27 @@ Three simulator paths share one workload model:
   priority disciplines on the same batched fast path
   (:func:`simulate_discipline`, :func:`simulate_batch`,
   ``sweep(discipline=...)``), with per-stream heapq fallback when a
-  queue outgrows the candidate window.
+  queue outgrows the candidate window — plus the preemptive SRPT ring
+  kernel (:func:`srpt_numpy`), pinned against ``mg1.srpt_event_loop``.
+* ``multiserver`` — batched M/G/c next-free-server kernels for a pod of
+  c data-parallel replicas behind one queue (:func:`free_server_numpy` /
+  :func:`free_server_jax`, :func:`simulate_mgc_batch`,
+  :func:`sweep_mgc`), pinned against ``mg1.event_loop_mgc`` and
+  cross-checked against the Erlang-C/Lee-Longton analytics in
+  ``core.mgc``.
 """
 from .batched import (BatchStats, SweepResult, lindley_jax, lindley_numpy,
                       simulate_fifo, simulate_fifo_batch, sweep)
-from .disciplines import (DEFAULT_WINDOW, DISCIPLINES, discipline_keys,
-                          simulate_batch, simulate_discipline,
-                          sweep_disciplines, windowed_jax, windowed_numpy,
+from .disciplines import (ALL_DISCIPLINES, DEFAULT_WINDOW, DISCIPLINES,
+                          PREEMPTIVE_DISCIPLINES, discipline_keys,
+                          simulate_batch, simulate_discipline, srpt_numpy,
+                          srpt_start_finish, sweep_disciplines,
+                          windowed_jax, windowed_numpy,
                           windowed_start_finish)
-from .mg1 import SimResult, event_loop, pk_prediction, simulate
+from .mg1 import (SimResult, event_loop, event_loop_mgc, mgc_prediction,
+                  pk_prediction, simulate, srpt_event_loop)
+from .multiserver import (free_server_jax, free_server_numpy, simulate_mgc,
+                          simulate_mgc_batch, sweep_mgc)
 from .stats import ci95
 from .workload import (Query, Stream, StreamBatch, empirical_mixture,
                        generate_stream, generate_streams)
@@ -29,7 +41,11 @@ __all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
            "Query", "generate_stream", "empirical_mixture", "StreamBatch",
            "generate_streams", "BatchStats", "SweepResult", "lindley_numpy",
            "lindley_jax", "simulate_fifo", "simulate_fifo_batch", "sweep",
-           "DISCIPLINES", "DEFAULT_WINDOW", "discipline_keys",
+           "DISCIPLINES", "PREEMPTIVE_DISCIPLINES", "ALL_DISCIPLINES",
+           "DEFAULT_WINDOW", "discipline_keys",
            "simulate_discipline", "simulate_batch", "sweep_disciplines",
            "windowed_numpy", "windowed_jax", "windowed_start_finish",
-           "ci95"]
+           "srpt_numpy", "srpt_start_finish", "srpt_event_loop",
+           "event_loop_mgc", "mgc_prediction", "free_server_numpy",
+           "free_server_jax", "simulate_mgc", "simulate_mgc_batch",
+           "sweep_mgc", "ci95"]

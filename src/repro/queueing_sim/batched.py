@@ -341,6 +341,7 @@ class SweepResult:
     stable: np.ndarray | None = None
     overflow_frac: np.ndarray | None = None
     discipline: str = "fifo"
+    c_servers: int = 1
 
     def objective_at(self, alpha: float) -> np.ndarray:
         """Re-weight the realized objective post-hoc for an alpha sweep.
@@ -366,17 +367,21 @@ class SweepResult:
 
 
 def _grid_budgets(problem: Problem, policies, lams, clip_unstable: bool,
-                  margin: float):
+                  margin: float, c_servers: int = 1):
     """Per-cell (possibly clipped) budgets for a (lambda x policy) grid.
 
     Returns ``(names, lengths [L, P, N], rho [L, P], masked [L, P])``;
-    ``masked`` marks cells still at rho >= 1 after a *requested* clip (a
+    ``masked`` marks cells still at rho >= c after a *requested* clip (a
     baseline past saturation cannot be projected into the slab — see
     ``core.queueing.stabilizable``) — their simulation is skipped and
-    their statistics NaN. With ``clip_unstable=False`` nothing is masked:
-    the caller explicitly asked for raw finite-horizon statistics, and
-    ``SweepResult.stable`` still reports rho < 1 truthfully. Shared by
-    :func:`sweep` and ``disciplines.sweep_disciplines``.
+    their statistics NaN. ``c_servers`` threads the M/G/c stability
+    condition rho / c < 1 through the clip and the mask, so multi-server
+    cells are not spuriously clipped against the single-server slab
+    (``rho`` itself stays the *offered* load lam E[S]). With
+    ``clip_unstable=False`` nothing is masked: the caller explicitly asked
+    for raw finite-horizon statistics, and ``SweepResult.stable`` still
+    reports stability truthfully. Shared by :func:`sweep`,
+    ``disciplines.sweep_disciplines``, and ``multiserver.sweep_mgc``.
     """
     import jax.numpy as jnp
 
@@ -391,11 +396,13 @@ def _grid_budgets(problem: Problem, policies, lams, clip_unstable: bool,
         lp = base
         if clip_unstable:
             lp = np.asarray(stability_clip(problem.tasks, float(lam),
-                                           jnp.asarray(base), margin))
+                                           jnp.asarray(base), margin,
+                                           c_servers))
         lengths[i] = lp
         rho[i] = np.asarray(service_moments(problem.tasks, jnp.asarray(lp),
                                             float(lam)).rho)
-    masked = (rho >= 1.0) if clip_unstable else np.zeros_like(rho, bool)
+    masked = (rho >= c_servers) if clip_unstable \
+        else np.zeros_like(rho, bool)
     return names, lengths, rho, masked
 
 
@@ -465,7 +472,8 @@ def sweep(problem: Problem, policies: Mapping[str, Sequence[float]],
     """
     if discipline != "fifo":
         # deferred: disciplines.py imports this module at load time
-        from .disciplines import discipline_keys, windowed_start_finish
+        from .disciplines import (discipline_keys, srpt_start_finish,
+                                  windowed_start_finish)
 
     names, lengths, rho, masked = _grid_budgets(problem, policies, lams,
                                                 clip_unstable, margin)
@@ -496,6 +504,11 @@ def sweep(problem: Problem, policies: Mapping[str, Sequence[float]],
             us[j, 0] = batch.correct_us
         if discipline == "fifo":
             start, finish = _lindley(arrivals, services, backend)
+        elif discipline == "srpt":
+            arr_b = np.broadcast_to(arrivals, services.shape)
+            start, finish, ovf = srpt_start_finish(arr_b, services,
+                                                   window=window)
+            overflow[todo] = ovf
         else:
             arr_b = np.broadcast_to(arrivals, services.shape)
             keys = discipline_keys(discipline, arrivals=arr_b,

@@ -53,16 +53,25 @@ from .batched import (_accuracy_table, _batch_stats, _batch_stats_tabular,
                       _sweep_result, BatchStats, lindley_numpy,
                       simulate_fifo_batch)
 from .mg1 import (SimResult, empty_result, event_loop,
-                  result_from_trajectory, stream_arrays)
+                  result_from_trajectory, srpt_event_loop, stream_arrays)
 from .workload import Stream, StreamBatch, generate_streams
 
 __all__ = [
-    "DISCIPLINES", "DEFAULT_WINDOW", "discipline_keys", "windowed_numpy",
-    "windowed_jax", "windowed_start_finish", "simulate_discipline",
-    "simulate_batch", "sweep_disciplines",
+    "DISCIPLINES", "PREEMPTIVE_DISCIPLINES", "ALL_DISCIPLINES",
+    "DEFAULT_WINDOW", "discipline_keys", "windowed_numpy",
+    "windowed_jax", "windowed_start_finish", "srpt_numpy",
+    "srpt_start_finish", "simulate_discipline", "simulate_batch",
+    "sweep_disciplines",
 ]
 
+#: Non-preemptive disciplines served by the masked-argmin engine.
 DISCIPLINES = ("fifo", "sjf", "priority")
+
+#: Preemptive disciplines with their own kernels (remaining-work state
+#: cannot ride the completion-ordered masked-argmin pass).
+PREEMPTIVE_DISCIPLINES = ("srpt",)
+
+ALL_DISCIPLINES = DISCIPLINES + PREEMPTIVE_DISCIPLINES
 
 #: Fixed capacity of the masked-argmin candidate window. Streams whose
 #: arrived-but-unserved span ever exceeds it fall back to the heapq loop.
@@ -78,6 +87,11 @@ def discipline_keys(discipline: str, *, arrivals=None, services=None,
     * ``priority``: ``-accuracy / service`` — highest marginal accuracy
       per second of service first (the eq-7 utility numerator per unit of
       occupied server time; beyond-paper ablation).
+    * ``srpt``: the *remaining* work, which at admission time equals the
+      full service time — the key a non-preemptive admission queue (the
+      serving scheduler) orders SRPT work by; the DES engines instead
+      track remaining work through preemptions (:func:`srpt_numpy`,
+      ``mg1.srpt_event_loop``).
 
     This is the single numerical definition used by the heapq reference
     (``mg1.simulate``), the vectorized engine here, and the serving
@@ -85,13 +99,13 @@ def discipline_keys(discipline: str, *, arrivals=None, services=None,
     """
     if discipline == "fifo":
         return np.asarray(arrivals, dtype=np.float64)
-    if discipline == "sjf":
+    if discipline in ("sjf", "srpt"):
         return np.asarray(services, dtype=np.float64)
     if discipline == "priority":
         s = np.asarray(services, dtype=np.float64)
         return -np.asarray(accuracy, dtype=np.float64) / np.maximum(s, 1e-12)
     raise ValueError(f"unknown discipline {discipline!r} "
-                     f"(expected one of {DISCIPLINES})")
+                     f"(expected one of {ALL_DISCIPLINES})")
 
 
 # --------------------------------------------------------------------------
@@ -431,6 +445,190 @@ def _apply_fallback(arrivals, services, keys, start, finish, ovf):
 
 
 # --------------------------------------------------------------------------
+# preemptive SRPT kernel
+# --------------------------------------------------------------------------
+
+def _srpt_bucket(arr_w, svc_w, Lb, fin_o) -> None:
+    """SRPT over one dense length-bucket of busy periods, in place.
+
+    ``arr_w`` / ``svc_w`` are ``[M, maxL]`` per-period panels in arrival
+    (= qid) order, inf/0-padded past each row's true length ``Lb``
+    (descending). Columns ARE qid order, so ``np.argmin``'s first-index
+    rule reproduces the heapq's (remaining, qid) tie-break exactly. At
+    step k only the leading prefix of rows still has arrivals
+    (descending-length sort); a row whose last arrival has passed sees
+    ``ta = inf`` (the padding) and drains to completion. Float-op order
+    matches ``mg1.srpt_event_loop`` term for term, so agreement is
+    bitwise in practice.
+    """
+    M, maxL = arr_w.shape
+    rem = np.full((M, maxL), np.inf)
+    rem[:, 0] = svc_w[:, 0]              # the head job, served at arrival
+    t = arr_w[:, 0].copy()
+    rows = np.arange(M)
+
+    def serve_until(Mt: int, ta: np.ndarray) -> None:
+        sub, tt = rem[:Mt], t[:Mt]
+        rr = rows[:Mt]
+        bounded = np.isfinite(ta)
+        while True:
+            j = np.argmin(sub, axis=1)   # first min = lowest qid
+            m = sub[rr, j]
+            fin_t = tt + m
+            can = np.isfinite(m) & (fin_t <= ta)
+            if not can.any():
+                act = np.isfinite(m) & bounded
+                if act.any():
+                    ra = rr[act]
+                    sub[ra, j[act]] = m[act] - (ta[act] - tt[act])
+                tt[bounded] = ta[bounded]
+                return
+            rc, jc = rr[can], j[can]
+            tt[can] = fin_t[can]
+            fin_o[rc, jc] = fin_t[can]
+            sub[rc, jc] = np.inf
+
+    for k in range(1, maxL):
+        Mt = int(np.searchsorted(-Lb, -k, side="right"))  # rows with L >= k
+        serve_until(Mt, arr_w[:Mt, k])   # inf past a row's length: drains
+        valid_k = np.isfinite(arr_w[:Mt, k])
+        rem[:Mt, k][valid_k] = svc_w[:Mt, k][valid_k]
+    Mt = int(np.searchsorted(-Lb, -maxL, side="right"))
+    serve_until(Mt, np.full(Mt, np.inf))
+
+
+def srpt_numpy(arrivals, services, window: int = DEFAULT_WINDOW,
+               fifo_finish=None) -> tuple:
+    """Preemptive SRPT finish times, ``[..., n] -> (finish, overflow)``.
+
+    Shortest-Remaining-Processing-Time over independent streams (leading
+    axes): between consecutive arrivals the server drains the job with
+    the least remaining work, and each arrival preempts whatever is
+    running if it is shorter.
+
+    SRPT is work-conserving, so its busy periods are the FIFO Lindley
+    ones (the unfinished-workload path is discipline-independent) — the
+    same decomposition the non-preemptive masked-argmin engine rides.
+    Each busy period is simulated independently on a dense
+    length-bucketed panel (:func:`_srpt_bucket`): length-1 and length-2
+    periods close in vectorized form (a length-2 period has exactly one
+    preempt-or-not branch), longer ones run the remaining-work panel
+    loop whose per-step cost is the *period length*, not a global
+    window. Ops replicate the heapq reference's (remaining, qid)
+    tie-breaking and float order, so agreement with
+    ``mg1.srpt_event_loop`` is bitwise in practice.
+
+    A busy period longer than ``window`` flags its stream in
+    ``overflow``; flagged rows hold the FIFO schedule (defined but wrong
+    for SRPT) and :func:`srpt_start_finish` replays exactly those
+    streams through the heapq reference. ``fifo_finish`` may pass the
+    precomputed FIFO Lindley finish times to skip the internal pass (the
+    sweep layer shares one pass across all disciplines). Start times are
+    undefined under preemption; callers derive waits as system minus
+    service time.
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    services = np.asarray(services, dtype=np.float64)
+    arrivals, services = np.broadcast_arrays(arrivals, services)
+    shape = arrivals.shape
+    n = shape[-1]
+    B = arrivals.size // n if n else 0
+    if n == 0 or B == 0:
+        return np.zeros(shape), np.zeros(shape[:-1], dtype=bool)
+    a = np.ascontiguousarray(arrivals).reshape(B, n)
+    s = np.ascontiguousarray(services).reshape(B, n)
+    # discipline-independent busy structure from the FIFO Lindley pass
+    if fifo_finish is None:
+        _, fin_f = lindley_numpy(a, s)
+    else:
+        fin_f = np.broadcast_to(fifo_finish, shape).reshape(B, n)
+    new_bp = np.empty((B, n), dtype=bool)
+    new_bp[:, 0] = True
+    new_bp[:, 1:] = a[:, 1:] > fin_f[:, :-1]
+
+    fa, fs = a.ravel(), s.ravel()
+    Bn = B * n
+    f = np.flatnonzero(new_bp.ravel())        # first query of each period
+    L = np.diff(np.append(f, Bn))
+    sb = f // n
+    overflow = np.zeros(B, dtype=bool)
+    overflow[sb[L > window]] = True
+    keep = ~overflow[sb]
+
+    finish = np.empty(Bn)
+    ovf_rows = np.flatnonzero(overflow)
+    for b in ovf_rows:
+        # defined placeholder for flagged streams (see docstring)
+        finish[b * n:(b + 1) * n] = fin_f[b]
+
+    # closed forms: a lone job finishes at arrival + service; a length-2
+    # period has one branch — the second arrival preempts iff its service
+    # is strictly below the head's remaining work at that instant
+    f1 = f[keep & (L == 1)]
+    finish[f1] = fa[f1] + fs[f1]
+    f2 = f[keep & (L == 2)]
+    if f2.size:
+        rem0 = fs[f2] - (fa[f2 + 1] - fa[f2])
+        s1 = fs[f2 + 1]
+        pre = s1 < rem0
+        fin_first = fa[f2 + 1] + np.where(pre, s1, rem0)
+        finish[np.where(pre, f2 + 1, f2)] = fin_first
+        finish[np.where(pre, f2, f2 + 1)] = fin_first + np.where(pre, rem0,
+                                                                 s1)
+
+    # dense panel loop for longer periods, in length ranges (cf. the
+    # non-preemptive engine's bucketing; length 3 gets its own exact
+    # bucket — ``_buckets`` starts at 4)
+    ranges = ([(3, 3)] if window >= 3 else []) + _buckets(window)
+    for lo_b, bound in ranges:
+        sel = keep & (L >= lo_b) & (L <= bound)
+        if not sel.any():
+            continue
+        fb, Lb = f[sel], L[sel]
+        order = np.argsort(-Lb, kind="stable")
+        fb, Lb = fb[order], Lb[order]
+        maxL = int(Lb[0])
+        M = fb.shape[0]
+        offs = np.arange(maxL)
+        idx = np.minimum(fb[:, None] + offs[None, :], Bn - 1)
+        valid = offs[None, :] < Lb[:, None]
+        arr_w = np.where(valid, fa[idx], np.inf)
+        svc_w = np.where(valid, fs[idx], 0.0)
+        fin_o = np.empty((M, maxL))
+        _srpt_bucket(arr_w, svc_w, Lb, fin_o)
+        finish[idx[valid]] = fin_o[valid]
+
+    return finish.reshape(shape), overflow.reshape(shape[:-1])
+
+
+def srpt_start_finish(arrivals, services,
+                      window: int = DEFAULT_WINDOW,
+                      fifo_finish=None) -> tuple:
+    """Exact SRPT trajectories with heapq fallback on window overflow.
+
+    Returns ``(start, finish, overflow)`` shaped like the non-preemptive
+    engines so the sweep layers stay uniform; ``start`` is the *effective*
+    start ``finish - service`` (service as if contiguous, ending at the
+    true completion), making ``start - arrival`` the time in system not
+    being served — the natural preemptive analogue of queueing delay.
+    ``fifo_finish`` is forwarded to :func:`srpt_numpy`.
+    """
+    finish, ovf = srpt_numpy(arrivals, services, window, fifo_finish)
+    if ovf.any():
+        a, s = np.broadcast_arrays(np.asarray(arrivals, dtype=np.float64),
+                                   np.asarray(services, dtype=np.float64))
+        n = a.shape[-1]
+        a2 = a.reshape(-1, n)
+        s2 = s.reshape(-1, n)
+        f2 = finish.reshape(-1, n)
+        for b in np.flatnonzero(ovf.ravel()):
+            f2[b] = srpt_event_loop(a2[b], s2[b])
+        finish = f2.reshape(a.shape)
+    start = finish - np.asarray(services, dtype=np.float64)
+    return start, finish, ovf
+
+
+# --------------------------------------------------------------------------
 # simulation layers
 # --------------------------------------------------------------------------
 
@@ -442,7 +640,9 @@ def simulate_discipline(problem: Problem, lengths, stream: Stream,
 
     Agrees with the heapq reference within ~1e-10 per query on identical
     streams (bitwise in practice), including when the stream overflows
-    ``window`` and takes the fallback.
+    ``window`` and takes the fallback. ``srpt`` runs the preemptive ring
+    kernel (:func:`srpt_numpy`; numpy-only — ``backend`` selects the
+    kernel for the non-preemptive disciplines).
     """
     lengths = np.asarray(lengths, dtype=np.float64)
     if len(stream.queries) == 0:
@@ -451,6 +651,8 @@ def simulate_discipline(problem: Problem, lengths, stream: Stream,
         problem, lengths, stream, discipline, service_time_fn)
     if discipline == "fifo":
         start, finish = _lindley(arrivals, services, backend)
+    elif discipline == "srpt":
+        start, finish, _ = srpt_start_finish(arrivals, services, window)
     else:
         start, finish, _ = windowed_start_finish(arrivals, services, keys,
                                                  window, backend)
@@ -470,9 +672,9 @@ def simulate_batch(problem: Problem, lengths, batch: StreamBatch,
     """
     if discipline == "fifo":
         return simulate_fifo_batch(problem, lengths, batch, backend=backend)
-    if discipline not in DISCIPLINES:
+    if discipline not in ALL_DISCIPLINES:
         raise ValueError(f"unknown discipline {discipline!r} "
-                         f"(expected one of {DISCIPLINES})")
+                         f"(expected one of {ALL_DISCIPLINES})")
     lengths = np.asarray(lengths, dtype=np.float64)
     single = lengths.ndim == 1
     L = lengths[None, :] if single else lengths           # [P, N]
@@ -481,10 +683,13 @@ def simulate_batch(problem: Problem, lengths, batch: StreamBatch,
     services = _service_table(problem, L)[:, batch.types]   # [P, S, n]
     p_query = _accuracy_table(problem, L)[:, batch.types]   # [P, S, n]
     arr = np.broadcast_to(batch.arrivals[None], services.shape)
-    keys = discipline_keys(discipline, arrivals=arr, services=services,
-                           accuracy=p_query)
-    start, finish, _ = windowed_start_finish(arr, services, keys, window,
-                                             backend)
+    if discipline == "srpt":
+        start, finish, _ = srpt_start_finish(arr, services, window)
+    else:
+        keys = discipline_keys(discipline, arrivals=arr, services=services,
+                               accuracy=p_query)
+        start, finish, _ = windowed_start_finish(arr, services, keys,
+                                                 window, backend)
     stats = _batch_stats(problem, batch.arrivals, services, start, finish,
                          p_query, batch.correct_us)
     if single:
@@ -517,7 +722,7 @@ def sweep_disciplines(problem: Problem, policies, lams,
     ``sweep`` helpers, so the clip/NaN-unstable contract is identical.
     """
     for d in disciplines:
-        if d not in DISCIPLINES:
+        if d not in ALL_DISCIPLINES:
             raise ValueError(f"unknown discipline {d!r}")
     names, lengths, rho, masked = _grid_budgets(problem, policies, lams,
                                                 clip_unstable, margin)
@@ -545,7 +750,8 @@ def sweep_disciplines(problem: Problem, policies, lams,
                                           batch.correct_us, st_f, fin_f,
                                           fin_f[..., -1])
         mean_arr = batch.arrivals.mean(axis=-1)
-        non_fifo = [d for d in disciplines if d != "fifo"]
+        non_fifo = [d for d in disciplines
+                    if d != "fifo" and d not in PREEMPTIVE_DISCIPLINES]
 
         def _keys(d):
             if d == "sjf":
@@ -557,6 +763,15 @@ def sweep_disciplines(problem: Problem, policies, lams,
         if "fifo" in disciplines:
             delay["fifo"] = (fifo_stats.mean_wait,
                              fifo_stats.mean_system_time)
+        if "srpt" in disciplines:
+            # preemptive lane: its own busy-period kernel sharing the
+            # Lindley pass; SRPT is still work-conserving, so the shared
+            # (utilization/accuracy/service) columns below remain valid
+            st_p, fin_p, o = srpt_start_finish(arr_b, svc, window,
+                                               fifo_finish=fin_f)
+            delay["srpt"] = (st_p.mean(axis=-1) - mean_arr,
+                             fin_p.mean(axis=-1) - mean_arr)
+            ovf["srpt"][i] = o
         if non_fifo and backend == "numpy":
             # one K-lane busy-period pass: split/setup shared across lanes
             st_k, fin_k, o = _windowed_numpy_multi(

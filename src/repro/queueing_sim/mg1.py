@@ -135,6 +135,82 @@ def event_loop(arrivals: np.ndarray, services: np.ndarray,
     return start, finish
 
 
+def event_loop_mgc(arrivals: np.ndarray, services: np.ndarray,
+                   keys: np.ndarray, c_servers: int) -> tuple:
+    """Reference non-preemptive c-server pass: per-query start/finish.
+
+    The M/G/c generalization of :func:`event_loop`: ``c_servers`` servers
+    share one queue; at every decision instant (earliest server-free time,
+    or the next arrival when the queue is empty) the min-key waiting query
+    starts on the earliest-free server. With FIFO keys this is the pinned
+    oracle for the batched next-free-server kernel in
+    ``queueing_sim.multiserver`` (identical arithmetic: start =
+    max(arrival, min free time), so agreement is to float noise).
+    ``c_servers=1`` replicates :func:`event_loop` exactly.
+    """
+    n = len(arrivals)
+    start = np.zeros(n)
+    finish = np.zeros(n)
+    free = [0.0] * int(c_servers)         # heap of server free times
+    heapq.heapify(free)
+    ready: list[tuple[float, int]] = []   # (key, qid) heap of waiting queries
+    i = 0  # next arrival index
+    served = 0
+    while served < n:
+        t_free = free[0]
+        # admit all arrivals up to the earliest server-free instant
+        while i < n and (arrivals[i] <= t_free or not ready):
+            if arrivals[i] > t_free and not ready:
+                # idle period: jump to next arrival
+                t_free = arrivals[i]
+            heapq.heappush(ready, (float(keys[i]), i))
+            i += 1
+        _, qid = heapq.heappop(ready)
+        t = max(free[0], arrivals[qid])
+        start[qid] = t
+        finish[qid] = t + services[qid]
+        heapq.heapreplace(free, finish[qid])
+        served += 1
+    return start, finish
+
+
+def srpt_event_loop(arrivals: np.ndarray, services: np.ndarray) -> np.ndarray:
+    """Reference preemptive SRPT pass: per-query finish times.
+
+    Shortest-Remaining-Processing-Time: at every instant the server works
+    on the job with the least remaining work, preempting on arrival of a
+    shorter job. Ties break on query index (arrival order), matching the
+    vectorized kernel in ``queueing_sim.disciplines.srpt_numpy``, which is
+    pinned against this loop per query. Start times are not well defined
+    under preemption (service is interrupted); callers derive waits as
+    system time minus service time.
+    """
+    n = len(arrivals)
+    finish = np.zeros(n)
+    heap: list[tuple[float, int]] = []    # (remaining work, qid)
+    t = 0.0
+    i = 0
+    while i < n or heap:
+        if not heap:
+            # idle: jump to the next arrival
+            t = float(arrivals[i])
+            heapq.heappush(heap, (float(services[i]), i))
+            i += 1
+            continue
+        rem, qid = heap[0]
+        if i < n and arrivals[i] < t + rem:
+            # arrival preempts (or queues): charge elapsed work first
+            heapq.heapreplace(heap, (rem - (float(arrivals[i]) - t), qid))
+            t = float(arrivals[i])
+            heapq.heappush(heap, (float(services[i]), i))
+            i += 1
+        else:
+            t = t + rem
+            finish[qid] = t
+            heapq.heappop(heap)
+    return finish
+
+
 def result_from_trajectory(problem: Problem, lengths, types, arrivals,
                            services, correct_us, start,
                            finish) -> SimResult:
@@ -169,22 +245,40 @@ def result_from_trajectory(problem: Problem, lengths, types, arrivals,
 
 def simulate(problem: Problem, lengths, stream: Stream,
              discipline: str = "fifo",
-             service_time_fn: Callable | None = None) -> SimResult:
+             service_time_fn: Callable | None = None,
+             c_servers: int = 1) -> SimResult:
     """Simulate the queue under integer budgets ``lengths``.
 
     discipline: "fifo" (paper), "sjf" (shortest-job-first, non-preemptive),
-    "priority" (highest marginal utility per second first; beyond paper).
+    "priority" (highest marginal utility per second first), or "srpt"
+    (preemptive shortest-remaining-work; both beyond paper).
     ``service_time_fn(query, lengths) -> float`` overrides the analytic
     service model (used to couple the DES to the real decode engine).
+    ``c_servers`` > 1 simulates the M/G/c pod (non-preemptive disciplines
+    only) through :func:`event_loop_mgc`; utilization is then per server
+    (busy time over c * makespan). Waits under "srpt" are reported as
+    system time minus service time (start times are undefined under
+    preemption).
     """
     lengths = np.asarray(lengths, dtype=np.float64)
     if len(stream.queries) == 0:
         return empty_result(problem)
     types, arrivals, services, us, keys = stream_arrays(
         problem, lengths, stream, discipline, service_time_fn)
-    start, finish = event_loop(arrivals, services, keys)
-    return result_from_trajectory(problem, lengths, types, arrivals,
-                                  services, us, start, finish)
+    if discipline == "srpt":
+        if c_servers != 1:
+            raise NotImplementedError("srpt is single-server only")
+        finish = srpt_event_loop(arrivals, services)
+        start = finish - services
+    elif c_servers == 1:
+        start, finish = event_loop(arrivals, services, keys)
+    else:
+        start, finish = event_loop_mgc(arrivals, services, keys, c_servers)
+    res = result_from_trajectory(problem, lengths, types, arrivals,
+                                 services, us, start, finish)
+    if c_servers > 1:
+        res.utilization /= c_servers
+    return res
 
 
 def pk_prediction(problem: Problem, lengths) -> dict:
@@ -200,4 +294,27 @@ def pk_prediction(problem: Problem, lengths) -> dict:
         "mean_system_time": float(mean_system_time(m, problem.server.lam)),
         "mean_service": float(m.es),
         "utilization": float(m.rho),
+    }
+
+
+def mgc_prediction(problem: Problem, lengths, c_servers: int,
+                   correction: str = "lee-longton") -> dict:
+    """Analytic M/G/c (Erlang-C / Lee-Longton) prediction, host f64.
+
+    The c-server analogue of :func:`pk_prediction` (identical at
+    ``c_servers=1``); ``utilization`` is per server, rho / c. See
+    ``core.mgc`` for the approximation's documented error envelope.
+    """
+    from ..core.mgc import mgc_wait_np
+
+    lengths = np.asarray(lengths, dtype=np.float64)
+    tasks, lam = problem.tasks, problem.server.lam
+    t = np.asarray(tasks.t0) + np.asarray(tasks.c) * lengths
+    es = float(np.sum(np.asarray(tasks.pi) * t))
+    w = float(mgc_wait_np(tasks, lengths, lam, c_servers, correction))
+    return {
+        "mean_wait": w,
+        "mean_system_time": w + es,
+        "mean_service": es,
+        "utilization": lam * es / c_servers,
     }

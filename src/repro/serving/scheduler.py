@@ -3,8 +3,11 @@
 The paper's serving discipline: FIFO, one query in service at a time
 (M/G/1). At admission the scheduler stamps the request with the current
 optimal integer budget for its task type (the allocator re-solves online
-as lambda/pi drift). SJF/priority variants are exposed for the ablation
-benchmarks.
+as lambda/pi drift). SJF/priority/SRPT variants are exposed for the
+ablation benchmarks; the admission queue is non-preemptive (a decoding
+request is never cancelled), so ``srpt`` orders waiting work by remaining
+work at admission — the full service time, the same
+``discipline_keys("srpt")`` the DES engines share.
 """
 from __future__ import annotations
 
@@ -15,14 +18,14 @@ from typing import Optional
 import numpy as np
 
 from ..core.allocator import TokenBudgetAllocator
-from ..queueing_sim.disciplines import discipline_keys
+from ..queueing_sim.disciplines import ALL_DISCIPLINES, discipline_keys
 from .request import Phase, Request
 
 
 class Scheduler:
     def __init__(self, allocator: TokenBudgetAllocator,
                  discipline: str = "fifo"):
-        if discipline not in ("fifo", "sjf", "priority"):
+        if discipline not in ALL_DISCIPLINES:
             raise ValueError(discipline)
         self.allocator = allocator
         self.discipline = discipline
@@ -47,8 +50,10 @@ class Scheduler:
         prob = self.allocator._base
         t_service = float(prob.tasks.t0[req.task_index]
                           + prob.tasks.c[req.task_index] * req.budget)
-        if self.discipline == "sjf":
-            key = float(discipline_keys("sjf", services=t_service))
+        if self.discipline in ("sjf", "srpt"):
+            # at admission remaining work == full service, so the srpt
+            # key coincides with sjf (preemption happens only in the DES)
+            key = float(discipline_keys(self.discipline, services=t_service))
         else:  # priority: highest accuracy-per-second first
             k = req.task_index
             p = float(prob.tasks.A[k]

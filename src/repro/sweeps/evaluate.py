@@ -26,11 +26,14 @@ import dataclasses
 
 import numpy as np
 
+from ..core.mgc import mgc_wait_np
 from ..core.params import TaskSet
 from ..queueing_sim.batched import _lindley
 from ..queueing_sim.disciplines import (DEFAULT_WINDOW, discipline_keys,
+                                        srpt_start_finish,
                                         windowed_start_finish)
 from ..queueing_sim.mg1 import accuracy_np
+from ..queueing_sim.multiserver import _dispatch as _mgc_dispatch
 from ..queueing_sim.stats import ci95
 from ..queueing_sim.workload import StreamBatch, generate_streams
 
@@ -62,6 +65,7 @@ class GridEvaluation:
     n_seeds: int
     n_queries: int
     warmup: int                     # queries discarded per stream
+    c: np.ndarray | None = None     # [C] servers per cell (None = all 1)
 
     def objective(self, alpha) -> np.ndarray:
         """Realized J = alpha E[p] - E[T_sys] per cell (affine in alpha).
@@ -79,7 +83,7 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
                    n_queries: int = 10_000, seed: int = 0,
                    backend: str = "numpy", warmup_frac: float = 0.0,
                    base: StreamBatch | None = None,
-                   discipline: str = "fifo",
+                   discipline: str = "fifo", c=1,
                    window: int = DEFAULT_WINDOW,
                    max_chunk_elems: int = 2 ** 24) -> GridEvaluation:
     """Evaluate ``[C]`` cells of ``(lam, lengths[C, N])`` against P-K + DES.
@@ -95,6 +99,14 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
     the paper's FIFO analysis (and ``covered`` is only a validation
     criterion for ``discipline="fifo"``). Unstable cells (rho >= 1) have
     infinite P-K predictions and are never ``covered``.
+
+    ``c`` (int or ``[C]`` per-cell server counts, FIFO only) switches the
+    DES to the batched M/G/c next-free-server kernel and the ``pk_*``
+    columns to the Erlang-C/Lee-Longton prediction (identical to P-K at
+    c = 1; see ``core.mgc`` for the documented approximation error —
+    ``covered`` then absorbs both Monte-Carlo and approximation error, so
+    heavy-traffic cells validate tightest). ``des_utilization`` is per
+    server, and stability is the c-server condition rho / c < 1.
     """
     lam = np.atleast_1d(np.asarray(lam, dtype=np.float64))
     lengths = np.asarray(lengths, dtype=np.float64)
@@ -102,23 +114,33 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
         lengths = np.broadcast_to(lengths[None], (lam.shape[0],) +
                                   lengths.shape)
     C = lam.shape[0]
+    c_cells = np.broadcast_to(np.asarray(c, dtype=np.int64), (C,))
+    multi = bool(np.any(c_cells > 1))
+    if multi and discipline != "fifo":
+        raise ValueError("c > 1 cells are FIFO-only (the masked-argmin "
+                         "engine is single-server)")
     if base is None:
         base = generate_streams(tasks, 1.0, n_seeds, n_queries, seed=seed)
     S, n = base.n_seeds, base.n_queries
     w = int(round(np.clip(warmup_frac, 0.0, 0.9) * n))
 
     t0 = np.asarray(tasks.t0)
-    c = np.asarray(tasks.c)
+    c_slope = np.asarray(tasks.c)
     pi = np.asarray(tasks.pi)
-    t_table = t0 + c * lengths                      # [C, N]
+    t_table = t0 + c_slope * lengths                # [C, N]
     p_table = accuracy_np(tasks, lengths)           # [C, N]
 
-    # analytic P-K per cell (eqs 3, 5, 6), f64 on host
+    # analytic steady state per cell, f64 on host: P-K (eqs 3, 5, 6) on
+    # the single-server path, Erlang-C/Lee-Longton on c-grids
     es = np.sum(pi * t_table, axis=-1)
     es2 = np.sum(pi * t_table * t_table, axis=-1)
     rho = lam * es
-    with np.errstate(divide="ignore", invalid="ignore"):
-        pk_wait = np.where(rho < 1.0, lam * es2 / (2.0 * (1.0 - rho)), np.inf)
+    if multi:
+        pk_wait = mgc_wait_np(tasks, lengths, lam, c_cells)
+    else:
+        with np.errstate(divide="ignore", invalid="ignore"):
+            pk_wait = np.where(rho < 1.0,
+                               lam * es2 / (2.0 * (1.0 - rho)), np.inf)
     pk_sys = pk_wait + es
     pk_acc = np.sum(pi * p_table, axis=-1)
 
@@ -135,8 +157,30 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
         arr = base.arrivals[None] / lam[sl, None, None]        # [c, S, n]
         services = t_table[sl][:, base.types]                  # [c, S, n]
         p_query = p_table[sl][:, base.types]                   # [c, S, n]
-        if discipline == "fifo":
+        if discipline == "fifo" and multi:
+            # split the chunk by server count: c = 1 cells keep the
+            # vectorized Lindley cumsum (the per-query panel recursion is
+            # only needed where a free-server choice actually exists)
+            start = np.empty_like(services)
+            finish = np.empty_like(services)
+            arr_b = np.broadcast_to(arr, services.shape)
+            one = c_cells[sl] == 1
+            if one.any():
+                start[one], finish[one] = _lindley(arr_b[one],
+                                                   services[one], backend)
+            if (~one).any():
+                start[~one], finish[~one] = _mgc_dispatch(
+                    arr_b[~one], services[~one],
+                    np.broadcast_to(c_cells[sl][~one, None],
+                                    services[~one].shape[:-1]),
+                    backend)
+        elif discipline == "fifo":
             start, finish = _lindley(arr, services, backend)
+        elif discipline == "srpt":
+            # preemptive kernel; start is the effective finish - service
+            arr_b = np.broadcast_to(arr, services.shape)
+            start, finish, _ = srpt_start_finish(arr_b, services,
+                                                 window=window)
         else:
             arr_b = np.broadcast_to(arr, services.shape)
             keys = discipline_keys(discipline, arrivals=arr_b,
@@ -157,10 +201,11 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
         t_obs = arr[..., w]
         busy = np.maximum(finish - np.maximum(start, t_obs[..., None]),
                           0.0).sum(axis=-1)
-        # max, not [..., -1]: under SJF/priority the last-arriving query
-        # need not finish last (same value bitwise for FIFO)
+        # max, not [..., -1]: under SJF/priority (or with c > 1 servers)
+        # the last-arriving query need not finish last (same value bitwise
+        # for single-server FIFO)
         span = finish.max(axis=-1) - t_obs
-        des_util[sl] = busy / np.maximum(span, 1e-12)
+        des_util[sl] = busy / np.maximum(span, 1e-12) / c_cells[sl, None]
 
     gap = des_sys.mean(axis=-1) - pk_sys
     ci_sys = ci95(des_sys)
@@ -173,8 +218,9 @@ def evaluate_cells(tasks: TaskSet, lam, lengths, *, n_seeds: int = 8,
         des_accuracy_prob=des_acc_prob.mean(axis=-1),
         des_utilization=des_util.mean(axis=-1),
         ci_wait=ci95(des_wait), ci_system_time=ci_sys,
-        gap_system_time=gap, covered=(np.abs(gap) <= ci_sys) & (rho < 1.0),
-        n_seeds=S, n_queries=n, warmup=w,
+        gap_system_time=gap,
+        covered=(np.abs(gap) <= ci_sys) & (rho < c_cells),
+        n_seeds=S, n_queries=n, warmup=w, c=c_cells,
     )
 
 
@@ -184,8 +230,11 @@ def evaluate_solution(tasks: TaskSet, sol, *, use: str = "int",
 
     ``use`` selects the integer (``"int"``, default — what a server would
     deploy) or continuous (``"cont"``) optimum. Unstable/infeasible cells
-    pass through: their P-K prediction is ``inf`` and ``covered`` is False.
+    pass through: their P-K prediction is ``inf`` and ``covered`` is
+    False. The grid's server axis (``GridSolution.c``) threads through to
+    the DES/analytics automatically unless ``c`` is passed explicitly.
     """
     flat = sol.ravel()
     lengths = flat.lengths_int if use == "int" else flat.lengths_cont
+    kwargs.setdefault("c", np.asarray(flat.c, dtype=np.int64))
     return evaluate_cells(tasks, flat.lam, lengths, **kwargs)

@@ -30,6 +30,7 @@ import numpy as np
 
 from ..compat import enable_x64
 from ..core import fixed_point, integer, pga
+from ..core.mgc import mean_wait_mgc, objective_mgc
 from ..core.objective import grad, objective
 from ..core.params import Problem, ServerParams, TaskSet
 from ..core.queueing import mean_system_time, service_moments
@@ -95,6 +96,7 @@ class GridSolution:
     lam: np.ndarray
     alpha: np.ndarray
     l_max: np.ndarray
+    c: np.ndarray                   # servers per cell (1 = paper's M/G/1)
     # continuous optimum (eq 24 / eq 29)
     lengths_cont: np.ndarray        # [..., N]
     value_cont: np.ndarray
@@ -213,6 +215,81 @@ def _solve_cell(base: TaskArrays, lam, alpha, l_max, scales: _CalibScales,
     }
 
 
+def _solve_cell_mgc(base: TaskArrays, lam, alpha, l_max, c,
+                    scales: _CalibScales, tol: float, max_pga_iters: int,
+                    integer_method: str, c_max: int):
+    """One M/G/c grid cell: PGA on the Lee-Longton objective.
+
+    The Lambert-W fixed point (eq 24) is P-K-specific, so c-grids solve
+    every cell — including c = 1 lanes, whose objective is *identical* to
+    eq 7 — through the traced Armijo-backtracking PGA with the autodiff
+    gradient of ``core.mgc.objective_mgc``, iterates clipped into the
+    c-server stability slab. Returns the same field dict as
+    :func:`_solve_cell` (fp_* diagnostics are inert: the fixed point never
+    runs on this path; the eq 41 bound and Lemma 2 certificates are
+    M/G/1-specific and reported only on c = 1 lanes).
+    """
+    ta = base._replace(A=base.A * scales.A, b=base.b * scales.b,
+                       D=base.D * scales.D, t0=base.t0 * scales.t0,
+                       c=base.c * scales.c)
+    prob = Problem(tasks=ta, server=ServerParams(lam, alpha, l_max))
+
+    feasible = lam * jnp.sum(ta.pi * ta.t0) < c
+
+    def obj_fn(p, lengths):
+        return objective_mgc(p, lengths, c, c_max)
+
+    def grad_fn(p, lengths):
+        return jax.grad(lambda v: objective_mgc(p, v, c, c_max))(lengths)
+
+    pg = pga.solve_pga_backtracking(
+        prob, tol=tol, max_iters=jnp.where(feasible, max_pga_iters, 0),
+        eta0=1e3, objective_fn=obj_fn, grad_fn=grad_fn, c_servers=c)
+    lengths = pg.lengths
+    g = grad_fn(prob, lengths)
+    interior = (lengths > 0) & (lengths < l_max)
+    kkt = jnp.max(jnp.where(interior, jnp.abs(g),
+                            jnp.where(lengths <= 0, jnp.maximum(g, 0),
+                                      jnp.maximum(-g, 0))))
+
+    if integer_method == "exhaustive":
+        ir = integer.exhaustive_policy(prob, lengths, objective_fn=obj_fn)
+    else:
+        ir = integer.round_policy(prob, lengths, objective_fn=obj_fn)
+
+    one = c == 1
+    m_cont = service_moments(ta, lengths, lam)
+    m_int = service_moments(ta, ir.lengths, lam)
+    w_cont = mean_wait_mgc(prob, lengths, c, c_max)
+    w_int = mean_wait_mgc(prob, ir.lengths, c, c_max)
+    return {
+        "lengths_cont": lengths,
+        "value_cont": obj_fn(prob, lengths),
+        "lengths_int": ir.lengths,
+        "value_int": ir.value,
+        "value_lower_bound": jnp.where(
+            one, integer.rounding_lower_bound(prob, lengths), -jnp.inf),
+        "fp_iterations": jnp.asarray(0),
+        "fp_converged": jnp.asarray(False),
+        "fp_residual": jnp.asarray(jnp.inf),
+        "kkt_residual": kkt,
+        "used_pga": feasible,
+        "pga_iterations": pg.iterations,
+        "contraction_Linf": jnp.where(
+            one, fixed_point.contraction_certificate(prob), jnp.inf),
+        "contraction_Linf_slab": jnp.where(
+            one, fixed_point.contraction_certificate(prob, 5e-2), jnp.inf),
+        "rho_cont": m_cont.rho,
+        "rho_int": m_int.rho,
+        "feasible": feasible,
+        "stable": feasible & (m_int.rho < c) & jnp.isfinite(ir.value),
+        "accuracy_cont": jnp.sum(ta.pi * ta.accuracy(lengths)),
+        "accuracy_int": jnp.sum(ta.pi * ta.accuracy(ir.lengths)),
+        "system_time_cont": w_cont + m_cont.es,
+        "system_time_int": w_int + m_int.es,
+    }
+
+
 # jitted grid solvers keyed on the static solve configuration; jit itself
 # then caches per input aval (dtype under/outside x64, cell count C), so
 # repeated solve_grid calls with a new grid of the same shape skip the
@@ -233,7 +310,21 @@ def _grid_solver(tol: float, max_fp_iters: int, max_pga_iters: int,
     return fn
 
 
-def solve_grid_flat(tasks: TaskSet, lam, alpha, l_max,
+def _grid_solver_mgc(tol: float, max_pga_iters: int, integer_method: str,
+                     c_max: int):
+    key = ("mgc", float(tol), int(max_pga_iters), integer_method,
+           int(c_max))
+    fn = _CELL_SOLVER_CACHE.get(key)
+    if fn is None:
+        cell = partial(_solve_cell_mgc, tol=tol,
+                       max_pga_iters=max_pga_iters,
+                       integer_method=integer_method, c_max=c_max)
+        fn = jax.jit(jax.vmap(cell, in_axes=(None, 0, 0, 0, 0, 0)))
+        _CELL_SOLVER_CACHE[key] = fn
+    return fn
+
+
+def solve_grid_flat(tasks: TaskSet, lam, alpha, l_max, c=None,
                     calib: Mapping[str, np.ndarray] | None = None,
                     tol: float = 1e-8, max_fp_iters: int = 500,
                     max_pga_iters: int = 20_000,
@@ -243,6 +334,12 @@ def solve_grid_flat(tasks: TaskSet, lam, alpha, l_max,
     Returns the raw dict of ``[C]``-shaped jnp arrays (still inside the x64
     context's output buffers). Prefer :func:`solve_grid`, which handles
     broadcasting and packs a :class:`GridSolution`.
+
+    ``c`` (``[C]`` server counts, default all-ones) selects the solver
+    path: an all-ones grid runs the historical fixed-point pipeline
+    bit-identically; any cell with c > 1 routes the *whole* grid through
+    the M/G/c PGA pipeline (:func:`_solve_cell_mgc`) so every lane traces
+    the same op sequence under vmap.
     """
     if integer_method is None:
         integer_method = "exhaustive" if tasks.n_tasks <= 16 else "round"
@@ -256,25 +353,42 @@ def solve_grid_flat(tasks: TaskSet, lam, alpha, l_max,
                          f"expected subset of {_CALIB_FIELDS}")
     scales = _CalibScales(*(jnp.asarray(calib.get(f, ones))
                             for f in _CALIB_FIELDS))
-    fn = _grid_solver(tol, max_fp_iters, max_pga_iters, integer_method)
-    return fn(base, lam, jnp.asarray(alpha), jnp.asarray(l_max), scales)
+    c_host = np.ones(lam.shape[0]) if c is None else np.asarray(c)
+    if np.any(c_host < 1) or np.any(c_host != np.round(c_host)):
+        raise ValueError("c must be integer server counts >= 1")
+    if np.all(c_host == 1):
+        fn = _grid_solver(tol, max_fp_iters, max_pga_iters, integer_method)
+        return fn(base, lam, jnp.asarray(alpha), jnp.asarray(l_max), scales)
+    fn = _grid_solver_mgc(tol, max_pga_iters, integer_method,
+                          c_max=int(c_host.max()))
+    return fn(base, lam, jnp.asarray(alpha), jnp.asarray(l_max),
+              jnp.asarray(c_host, dtype=lam.dtype), scales)
 
 
-def solve_grid(tasks: TaskSet, lam, alpha, l_max,
+def solve_grid(tasks: TaskSet, lam, alpha, l_max, c=1,
                calib: Mapping[str, np.ndarray] | None = None,
                tol: float = 1e-8, max_fp_iters: int = 500,
                max_pga_iters: int = 20_000,
                integer_method: str | None = None) -> GridSolution:
-    """Solve a whole ``(lambda, alpha, l_max[, calib])`` operating grid.
+    """Solve a whole ``(lambda, alpha, l_max[, c][, calib])`` operating grid.
 
-    ``lam`` / ``alpha`` / ``l_max`` and every ``calib`` scale are broadcast
-    against each other (so ``lam[:, None, None]``-style meshes work
-    directly); the broadcast shape becomes ``GridSolution.shape``. The full
-    pipeline runs under x64 via ``repro.compat.enable_x64`` — identical
-    control-plane precision to the scalar ``core.allocator.solve``.
+    ``lam`` / ``alpha`` / ``l_max`` / ``c`` and every ``calib`` scale are
+    broadcast against each other (so ``lam[:, None, None]``-style meshes
+    work directly); the broadcast shape becomes ``GridSolution.shape``.
+    The full pipeline runs under x64 via ``repro.compat.enable_x64`` —
+    identical control-plane precision to the scalar
+    ``core.allocator.solve``.
 
-    Infeasible cells (``lam * E[S(0)] >= 1``: the queue is unstable even at
-    zero reasoning tokens, eq 4 has no solution) are flagged via
+    ``c`` is the per-cell replica count of the M/G/c pod (default 1, the
+    paper's M/G/1 — that default runs the historical fixed-point pipeline
+    bit-identically). Grids containing c > 1 cells solve through PGA on
+    the Lee-Longton wait term (``core.mgc``; the Lambert-W fixed point is
+    P-K-specific), with stability and feasibility at the c-server
+    condition rho / c < 1. ``rho_cont`` / ``rho_int`` always record the
+    *offered* load lam E[S].
+
+    Infeasible cells (``lam * E[S(0)] >= c``: the queue is unstable even
+    at zero reasoning tokens, eq 4 has no solution) are flagged via
     ``feasible=False`` and their outputs are not meaningful; clip the
     arrival axis first (see ``repro.sweeps.frontier.heavy_traffic_lams``).
     """
@@ -282,15 +396,17 @@ def solve_grid(tasks: TaskSet, lam, alpha, l_max,
     calib = dict(calib or {})
     arrays = [np.asarray(lam, dtype=np.float64),
               np.asarray(alpha, dtype=np.float64),
-              np.asarray(l_max, dtype=np.float64)]
+              np.asarray(l_max, dtype=np.float64),
+              np.asarray(c, dtype=np.float64)]
     arrays += [np.asarray(v, dtype=np.float64) for v in calib.values()]
     bcast = np.broadcast_arrays(*arrays)
     shape = bcast[0].shape
-    lam_f, alpha_f, lmax_f = (np.ravel(a) for a in bcast[:3])
-    calib_f = {k: np.ravel(v) for k, v in zip(calib, bcast[3:])}
+    lam_f, alpha_f, lmax_f, c_f = (np.ravel(a) for a in bcast[:4])
+    calib_f = {k: np.ravel(v) for k, v in zip(calib, bcast[4:])}
 
     with enable_x64():
-        out = solve_grid_flat(tasks, lam_f, alpha_f, lmax_f, calib=calib_f,
+        out = solve_grid_flat(tasks, lam_f, alpha_f, lmax_f, c=c_f,
+                              calib=calib_f,
                               tol=tol, max_fp_iters=max_fp_iters,
                               max_pga_iters=max_pga_iters,
                               integer_method=integer_method)
@@ -301,6 +417,7 @@ def solve_grid(tasks: TaskSet, lam, alpha, l_max,
 
     return GridSolution(
         lam=bcast[0].copy(), alpha=bcast[1].copy(), l_max=bcast[2].copy(),
+        c=bcast[3].copy(),
         **{k: _reshape(v) for k, v in out.items()})
 
 
@@ -313,10 +430,16 @@ def reference_check(tasks: TaskSet, sol: GridSolution, cells=None,
     ``tol`` of ``core.allocator.solve`` and (by default) identical integer
     budgets. ``cells`` selects flat cell indices (default: all). Only valid
     for grids solved without calibration perturbations (the scalar facade
-    solves the unperturbed ``tasks``). Returns the worst |l* - l*_ref|_inf.
+    solves the unperturbed ``tasks``) and without a multi-server axis (the
+    facade is M/G/1; c-grids cross-check against the DES instead — see
+    ``tests/test_multiserver.py``). Returns the worst |l* - l*_ref|_inf.
     """
     from ..core import allocator
 
+    if not np.all(sol.c == 1):
+        raise ValueError("reference_check requires a c=1 grid (the scalar "
+                         "facade is M/G/1); validate c>1 grids against the "
+                         "multiserver DES")
     flat = sol.ravel()
     if cells is None:
         cells = range(flat.lam.shape[0])

@@ -1,0 +1,233 @@
+"""M/G/c analytics, Cobham priority waits, and delay-SLO allocation.
+
+Pins the contracts of ``core.mgc`` / ``core.queueing`` new in the
+multi-server subsystem:
+
+* c = 1 reduces the Lee-Longton (and Cosmetatos) wait *exactly* to the
+  paper's P-K wait, and ``objective_mgc`` to eq 7;
+* Erlang-C is monotone (more servers wait less) and the traced-c grid
+  form matches the static recursion;
+* the stability mask flips at the c-server boundary rho >= c, and
+  ``stability_clip`` / ``stabilizable`` thread the c-server slab;
+* Cobham's per-class priority waits collapse to P-K for one class and
+  match the batched priority DES per task within CIs;
+* delay-SLO solves return budgets meeting every per-task mean-delay SLO.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import enable_x64
+from repro.core import (Problem, ServerParams, erlang_c, erlang_c_np,
+                        mean_system_time_mgc, mean_wait, mean_wait_mgc,
+                        mgc_wait_np, objective, objective_mgc, paper_problem,
+                        priority_mean_waits, service_moments, solve,
+                        stabilizable, stability_clip)
+from repro.queueing_sim import generate_streams
+from repro.queueing_sim.batched import _accuracy_table, _service_table
+from repro.queueing_sim.disciplines import (discipline_keys,
+                                            windowed_start_finish)
+from repro.queueing_sim.stats import ci95
+
+LSTAR = np.array([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+def _problem_at(prob, lam):
+    sp = prob.server
+    return Problem(tasks=prob.tasks,
+                   server=ServerParams(lam, sp.alpha, sp.l_max))
+
+
+# ----------------------------------------------------------- c=1 reduction
+
+@pytest.mark.parametrize("correction", ["lee-longton", "cosmetatos"])
+def test_c1_reduces_exactly_to_pk(prob, correction):
+    """Erlang-C(1, a) = rho, so both corrections recover eq 5 at c=1."""
+    with enable_x64():
+        l = jnp.asarray(LSTAR)
+        m = service_moments(prob.tasks, l, prob.server.lam)
+        pk = float(mean_wait(m, prob.server.lam))
+        w1 = float(mean_wait_mgc(prob, l, 1, correction=correction))
+        assert abs(w1 - pk) <= 1e-12 * max(pk, 1.0)
+        j = float(objective(prob, l))
+        j1 = float(objective_mgc(prob, l, 1, correction=correction))
+        assert abs(j1 - j) <= 1e-12 * max(abs(j), 1.0)
+        # host mirror agrees with the traced form
+        np.testing.assert_allclose(
+            float(mgc_wait_np(prob.tasks, LSTAR, prob.server.lam, 1,
+                              correction)), w1, rtol=1e-12)
+
+
+def test_erlang_c_monotone_in_c(prob):
+    """P(wait) and E[W] strictly decrease in c at fixed offered load."""
+    a = jnp.asarray(1.7)  # erlangs; needs c >= 2 for stability
+    pws = [float(erlang_c(c, a)) for c in range(2, 8)]
+    assert all(x > y for x, y in zip(pws, pws[1:]))
+    assert all(0.0 < p <= 1.0 for p in pws)
+    lam = 1.7 / float(service_moments(prob.tasks, jnp.asarray(LSTAR),
+                                      1.0).es)
+    p = _problem_at(prob, lam)
+    waits = [float(mean_wait_mgc(p, jnp.asarray(LSTAR), c))
+             for c in range(2, 8)]
+    assert all(x > y for x, y in zip(waits, waits[1:]))
+
+
+def test_erlang_c_traced_matches_static():
+    """Traced-c lanes (static c_max) equal the per-c static recursion."""
+    with enable_x64():
+        a = jnp.linspace(0.2, 3.5, 8)
+        cs = jnp.asarray([1, 2, 3, 4, 6, 8, 2, 5])
+        batched = erlang_c(cs, a, c_max=8)
+        for i in range(8):
+            ref = erlang_c(int(cs[i]), a[i])
+            np.testing.assert_allclose(float(batched[i]), float(ref),
+                                       rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(batched),
+                                   erlang_c_np(np.asarray(cs),
+                                               np.asarray(a)),
+                                   rtol=1e-12)
+
+
+# ------------------------------------------------------- stability masking
+
+def test_objective_masks_rho_at_or_beyond_c(prob):
+    """J_c = -inf exactly when the offered load reaches c servers."""
+    es = float(service_moments(prob.tasks, jnp.asarray(LSTAR), 1.0).es)
+    for c in (1, 2, 4):
+        lam_hot = 1.05 * c / es          # rho = 1.05 c -> unstable
+        lam_ok = 0.9 * c / es
+        assert not np.isfinite(float(objective_mgc(
+            _problem_at(prob, lam_hot), jnp.asarray(LSTAR), c)))
+        assert np.isfinite(float(objective_mgc(
+            _problem_at(prob, lam_ok), jnp.asarray(LSTAR), c)))
+        assert np.isinf(mgc_wait_np(prob.tasks, LSTAR, lam_hot, c))
+
+
+def test_stability_clip_threads_c_servers(prob):
+    """Budgets unstable for one server but stable for four are clipped
+    only against their own pod's slab."""
+    es = float(service_moments(prob.tasks, jnp.asarray(LSTAR), 1.0).es)
+    lam = 2.0 / es                       # offered rho = 2: needs c >= 3
+    l = jnp.asarray(LSTAR)
+    clipped1 = stability_clip(prob.tasks, lam, l, 1e-3)
+    rho1 = float(service_moments(prob.tasks, clipped1, lam).rho)
+    assert rho1 <= 1.0 - 1e-3 + 1e-6     # single-server clip engages (f32)
+    clipped4 = stability_clip(prob.tasks, lam, l, 1e-3, c_servers=4)
+    np.testing.assert_array_equal(np.asarray(clipped4), LSTAR)  # identity
+    # stabilizable thresholds scale with c
+    lam_sat = 1.5 / float(jnp.sum(prob.tasks.pi * prob.tasks.t0))
+    assert not bool(stabilizable(prob.tasks, lam_sat))
+    assert bool(stabilizable(prob.tasks, lam_sat, c_servers=2))
+
+
+# ------------------------------------------------------------------ Cobham
+
+def test_cobham_single_class_is_pk(prob):
+    """All keys equal -> one pooled class -> the P-K wait exactly."""
+    lam = 0.3
+    pw = priority_mean_waits(prob.tasks, LSTAR, lam, keys=np.zeros(6))
+    with enable_x64():
+        pk = float(mean_wait(service_moments(prob.tasks, jnp.asarray(LSTAR),
+                                             lam), lam))
+    np.testing.assert_allclose(float(pw.mean_wait), pk, rtol=1e-12)
+    assert np.all(pw.per_task == pw.per_task[0])
+    assert pw.class_of.max() == 0
+
+
+def test_cobham_orders_with_keys(prob):
+    """Lower key (served first) never waits longer than a higher key."""
+    lam = 0.35
+    pw = priority_mean_waits(prob.tasks, LSTAR, lam)
+    keys = discipline_keys(
+        "priority",
+        services=np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * LSTAR,
+        accuracy=_accuracy_table(prob, LSTAR))
+    order = np.argsort(keys)
+    waits_in_key_order = pw.per_task[order]
+    assert np.all(np.diff(waits_in_key_order) >= -1e-12)
+    # conservation sanity: the arrival-averaged wait is bracketed by the
+    # extreme classes
+    assert waits_in_key_order[0] <= pw.mean_wait <= waits_in_key_order[-1]
+
+
+def test_cobham_matches_priority_des_per_task(prob):
+    """Per-task DES waits under the priority discipline fall within CIs
+    of Cobham's per-class prediction (the eq-5 cross-check, per class)."""
+    t = _service_table(prob, LSTAR)
+    es = float(np.sum(np.asarray(prob.tasks.pi) * t))
+    lam = 0.7 / es
+    n_seeds, n_q, warm = 24, 12_000, 3000
+    batch = generate_streams(prob.tasks, lam, n_seeds, n_q, seed=11)
+    services = t[batch.types]
+    p_query = _accuracy_table(prob, LSTAR)[batch.types]
+    keys = discipline_keys("priority", services=services, accuracy=p_query)
+    start, _, ovf = windowed_start_finish(batch.arrivals, services, keys)
+    assert not ovf.any()
+    waits = start - batch.arrivals                       # [S, n]
+    pred = priority_mean_waits(prob.tasks, LSTAR, lam)
+    tail = slice(warm, None)
+    for k in range(prob.tasks.n_tasks):
+        sel = batch.types[:, tail] == k
+        per_seed = np.array([waits[s, tail][sel[s]].mean()
+                             for s in range(n_seeds)])
+        ci = ci95(per_seed)
+        gap = abs(per_seed.mean() - pred.per_task[k])
+        assert gap <= ci + 0.05 * pred.per_task[k], (
+            f"task {k}: DES {per_seed.mean():.4f} vs Cobham "
+            f"{pred.per_task[k]:.4f} (ci {ci:.4f})")
+
+
+# ------------------------------------------------------------- delay SLOs
+
+def test_slo_solve_meets_constraints(prob):
+    """Tight SLOs produce budgets meeting E[W] + t_k <= slo_k, at a value
+    no better than the unconstrained optimum."""
+    base = solve(prob)
+    slo = np.full(6, 2.5)                # binding: t(l*) alone reaches ~5 s
+    sol = solve(prob, delay_slo=slo)
+    assert sol.method.endswith("+slo")
+    assert sol.slo_satisfied
+    with enable_x64():
+        m = service_moments(prob.tasks, jnp.asarray(sol.lengths_int),
+                            prob.server.lam)
+        w = float(mean_wait(m, prob.server.lam))
+    sys_k = w + np.asarray(prob.tasks.t0) \
+        + np.asarray(prob.tasks.c) * sol.lengths_int
+    assert np.all(sys_k <= slo + 1e-6)
+    assert sol.value_int <= base.value_int + 1e-9
+    assert np.all(sol.lengths_int <= base.lengths_int)
+    # a slack SLO changes nothing
+    loose = solve(prob, delay_slo=np.full(6, 1e4))
+    np.testing.assert_array_equal(loose.lengths_int, base.lengths_int)
+    assert loose.slo_satisfied
+
+
+def test_slo_unsatisfiable_is_flagged(prob):
+    """An SLO below the zero-token floor cannot be met: flagged, l = 0."""
+    floor = float(np.min(np.asarray(prob.tasks.t0)))
+    sol = solve(prob, delay_slo=np.full(6, 0.5 * floor))
+    assert not sol.slo_satisfied
+    np.testing.assert_array_equal(sol.lengths_int, np.zeros(6))
+
+
+def test_allocator_threads_delay_slo(prob):
+    from repro.core import TokenBudgetAllocator
+
+    slo = np.full(6, 2.5)
+    alloc = TokenBudgetAllocator(prob, delay_slo=slo)
+    assert alloc.solution.method.endswith("+slo")
+    assert alloc.solution.slo_satisfied
+    budgets = np.array([alloc.budget_for(k) for k in range(6)])
+    np.testing.assert_array_equal(budgets, alloc.solution.lengths_int)
+
+
+def test_cosmetatos_zero_load_is_zero_wait(prob):
+    """rho = 0 must give a 0 wait (not NaN) under both corrections."""
+    for corr in ("lee-longton", "cosmetatos"):
+        w = mgc_wait_np(prob.tasks, LSTAR, 0.0, 2, corr)
+        assert w == 0.0, (corr, w)

@@ -271,3 +271,116 @@ def test_sweep_discipline_overflow_fallback_consistent(prob):
     assert np.all(b.overflow_frac == 0.0)
     np.testing.assert_array_equal(a.mean_wait, b.mean_wait)
     np.testing.assert_array_equal(a.objective, b.objective)
+
+
+# ------------------------------------------------------- preemptive SRPT
+
+def test_srpt_kernel_matches_reference(prob):
+    """Busy-period kernel finish times equal the preemptive heapq loop
+    exactly (moderate load: every busy period fits the window)."""
+    from repro.queueing_sim import srpt_event_loop, srpt_numpy
+
+    batch = generate_streams(prob.tasks, 0.35, 4, 2500, seed=13)
+    _, services, _ = _arrays(prob, LSTAR, batch)
+    finish, ovf = srpt_numpy(batch.arrivals, services)
+    assert not ovf.any()
+    for i in range(batch.n_seeds):
+        ref = srpt_event_loop(batch.arrivals[i], services[i])
+        np.testing.assert_allclose(finish[i], ref, rtol=0, atol=1e-10)
+
+
+def test_srpt_heavy_traffic_fallback_exact(prob):
+    """Near saturation some busy periods overflow any fixed window; the
+    fallback must make every stream exact anyway."""
+    from repro.queueing_sim import srpt_event_loop, srpt_start_finish
+
+    batch = generate_streams(prob.tasks, 0.55, 4, 2500, seed=13)
+    _, services, _ = _arrays(prob, LSTAR, batch)
+    start, finish, ovf = srpt_start_finish(batch.arrivals, services,
+                                           window=64)
+    assert ovf.any()
+    for i in range(batch.n_seeds):
+        ref = srpt_event_loop(batch.arrivals[i], services[i])
+        np.testing.assert_allclose(finish[i], ref, rtol=0, atol=1e-10)
+    np.testing.assert_array_equal(start, finish - services)
+
+
+@pytest.mark.parametrize("window", [1, 4, 32])
+def test_srpt_overflow_falls_back_to_heapq(prob, window):
+    """Tiny ring windows flag overflow and replay exactly."""
+    from repro.queueing_sim import srpt_numpy, srpt_start_finish
+
+    batch = generate_streams(prob.tasks, 0.55, 3, 1200, seed=21)
+    _, services, _ = _arrays(prob, LSTAR, batch)
+    # window = n: no busy period can overflow, exact baseline
+    full, ovf_full = srpt_numpy(batch.arrivals, services, window=1200)
+    assert not ovf_full.any()
+    start, finish, ovf = srpt_start_finish(batch.arrivals, services,
+                                           window=window)
+    assert ovf.any()          # ring too small at this load
+    np.testing.assert_allclose(finish, full, rtol=0, atol=1e-10)
+    np.testing.assert_allclose(start, finish - services, rtol=0, atol=0)
+
+
+def test_srpt_pathwise_dominates_every_discipline(prob):
+    """SRPT minimizes the number in system pathwise, hence the mean
+    system time, against FIFO/SJF/priority on identical streams."""
+    from repro.queueing_sim import srpt_start_finish
+
+    batch = generate_streams(prob.tasks, 0.55, 6, 3000, seed=17)
+    arrivals, services, keys = _arrays(prob, LSTAR, batch)
+    _, fin_srpt, _ = srpt_start_finish(arrivals, services)
+    sys_srpt = (fin_srpt - arrivals).mean(axis=-1)
+    for d in DISCIPLINES:
+        _, fin_d, _ = windowed_start_finish(arrivals, services, keys[d])
+        assert np.all(sys_srpt <= (fin_d - arrivals).mean(axis=-1) + 1e-9), d
+
+
+def test_simulate_srpt_fast_matches_reference(prob):
+    """mg1.simulate and simulate_discipline agree on srpt aggregates, and
+    wait is reported as system minus service time."""
+    stream = generate_stream(prob.tasks, 0.5, 1500, seed=3)
+    ref = simulate(prob, LSTAR, stream, discipline="srpt")
+    fast = simulate_discipline(prob, LSTAR, stream, discipline="srpt")
+    for f in ("mean_wait", "mean_system_time", "accuracy", "objective"):
+        assert abs(getattr(ref, f) - getattr(fast, f)) <= 1e-9, f
+    assert ref.mean_wait == pytest.approx(
+        ref.mean_system_time - ref.mean_service, rel=1e-12)
+
+
+def test_simulate_batch_srpt_matches_per_stream(prob):
+    batch = generate_streams(prob.tasks, 0.5, 3, 1500, seed=19)
+    stats = simulate_batch(prob, LSTAR, batch, discipline="srpt")
+    for s in range(batch.n_seeds):
+        ref = simulate(prob, LSTAR, batch.stream(s), discipline="srpt")
+        assert abs(stats.mean_system_time[s]
+                   - ref.mean_system_time) <= 1e-9
+
+
+def test_sweep_disciplines_srpt_lane(prob):
+    """The srpt lane rides sweep_disciplines: CRN-paired with FIFO, equal
+    work-conserving columns, and consistent with sweep(discipline=)."""
+    policies = {"opt": LSTAR, "u300": np.full(6, 300.0)}
+    lams = [0.3, 0.5]
+    multi = sweep_disciplines(prob, policies, lams, n_seeds=4,
+                              n_queries=1200, seed=2,
+                              disciplines=("fifo", "srpt"))
+    assert set(multi) == {"fifo", "srpt"}
+    single = sweep(prob, policies, lams, n_seeds=4, n_queries=1200, seed=2,
+                   discipline="srpt")
+    np.testing.assert_allclose(multi["srpt"].mean_wait, single.mean_wait,
+                               atol=1e-9)
+    # preemptive SRPT cuts mean system time vs FIFO on every cell
+    assert np.all(multi["srpt"].mean_system_time
+                  <= multi["fifo"].mean_system_time + 1e-9)
+    # work conservation: shared columns equal across the two lanes
+    np.testing.assert_allclose(multi["srpt"].utilization,
+                               multi["fifo"].utilization, rtol=1e-12)
+    np.testing.assert_allclose(multi["srpt"].accuracy,
+                               multi["fifo"].accuracy, rtol=1e-12)
+
+
+def test_srpt_key_is_service_time(prob):
+    """discipline_keys('srpt') = remaining work at admission = service."""
+    svc = np.array([3.0, 1.0, 2.0])
+    np.testing.assert_array_equal(discipline_keys("srpt", services=svc), svc)

@@ -1,0 +1,300 @@
+"""Batched M/G/c DES: heapq pinning, Erlang-C validation, grid coupling.
+
+Pins the contracts of ``queueing_sim.multiserver`` and the c axis of the
+sweeps layer:
+
+* both next-free-server kernels (numpy panel loop, jax scan) agree with
+  the heapq c-server oracle (``mg1.event_loop_mgc``) within 1e-9 per
+  query, and with the Lindley fast path at c = 1;
+* DES mean waits validate the Erlang-C/Lee-Longton analytics at
+  c in {2, 4}, rho in {0.6, 0.9} — within the DES 95% CI plus the
+  documented approximation allowance (``core.mgc``: the approximation is
+  heavy-traffic exact but under-predicts up to ~15% at moderate load for
+  the paper's bimodal deterministic service mixtures);
+* ``sweep_mgc`` threads the c-server stability contract rho / c < 1;
+* ``solve_grid(c=...)`` solves (lambda x c) grids whose c = 1 lanes match
+  the scalar facade and whose optima improve with pod size, and
+  ``evaluate_solution`` couples every cell back to this DES.
+"""
+import numpy as np
+import pytest
+
+from repro.core import paper_problem, paper_tasks, solve
+from repro.core import Problem, ServerParams
+from repro.core.mgc import mgc_wait_np
+from repro.queueing_sim import (event_loop_mgc, free_server_jax,
+                                free_server_numpy, generate_streams,
+                                lindley_numpy, mgc_prediction, simulate,
+                                simulate_mgc, simulate_mgc_batch, sweep_mgc)
+from repro.queueing_sim.batched import _service_table
+from repro.queueing_sim.stats import ci95
+
+LSTAR = np.array([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
+
+#: Documented Lee-Longton allowance by regime (see ``core.mgc`` docs):
+#: moderate load carries real approximation error; heavy traffic is tight.
+LL_RTOL = {0.6: 0.15, 0.9: 0.05}
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+def _lam_for(prob, lengths, rho, c):
+    es = float(np.sum(np.asarray(prob.tasks.pi)
+                      * _service_table(prob, lengths)))
+    return rho * c / es
+
+
+# ------------------------------------------------------------- kernel pins
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("c", [1, 2, 4])
+def test_kernels_match_heapq_per_query(prob, backend, c):
+    lam = _lam_for(prob, LSTAR, 0.8, c)
+    batch = generate_streams(prob.tasks, lam, 3, 1500, seed=5)
+    services = _service_table(prob, LSTAR)[batch.types]
+    kern = free_server_numpy if backend == "numpy" else free_server_jax
+    start, finish = kern(batch.arrivals, services, c)
+    for i in range(batch.n_seeds):
+        rs, rf = event_loop_mgc(batch.arrivals[i], services[i],
+                                batch.arrivals[i], c)
+        np.testing.assert_allclose(start[i], rs, rtol=0, atol=1e-9)
+        np.testing.assert_allclose(finish[i], rf, rtol=0, atol=1e-9)
+
+
+def test_c1_matches_lindley_fast_path(prob):
+    """c = 1 is the sequential Lindley recursion (closed form reorders
+    float additions, so the agreement bound is round-off, not bitwise)."""
+    lam = _lam_for(prob, LSTAR, 0.7, 1)
+    batch = generate_streams(prob.tasks, lam, 4, 4000, seed=2)
+    services = _service_table(prob, LSTAR)[batch.types]
+    st1, fi1 = free_server_numpy(batch.arrivals, services, 1)
+    st2, fi2 = lindley_numpy(batch.arrivals, services)
+    np.testing.assert_allclose(fi1, fi2, rtol=0, atol=1e-9)
+    np.testing.assert_allclose(st1, st2, rtol=0, atol=1e-9)
+
+
+def test_per_stream_server_counts(prob):
+    """A [S] vector of server counts runs each stream on its own pod."""
+    lam = _lam_for(prob, LSTAR, 0.5, 1)
+    batch = generate_streams(prob.tasks, lam, 4, 1000, seed=9)
+    services = _service_table(prob, LSTAR)[batch.types]
+    cvec = np.array([1, 2, 3, 4])
+    st, fi = free_server_numpy(batch.arrivals, services, cvec)
+    for s, c in enumerate(cvec):
+        _, fi_ref = free_server_numpy(batch.arrivals[s], services[s], int(c))
+        np.testing.assert_array_equal(fi[s], fi_ref)
+
+
+def test_more_servers_never_wait_longer(prob):
+    """Pathwise: adding a server can only lower every start time."""
+    lam = _lam_for(prob, LSTAR, 0.9, 2)
+    batch = generate_streams(prob.tasks, lam, 4, 3000, seed=3)
+    services = _service_table(prob, LSTAR)[batch.types]
+    prev = None
+    for c in (1, 2, 3, 4):
+        st, _ = free_server_numpy(batch.arrivals, services, c)
+        if prev is not None:
+            assert np.all(st <= prev + 1e-9)
+        prev = st
+
+
+def test_simulate_mgc_matches_heapq_aggregates(prob):
+    lam = _lam_for(prob, LSTAR, 0.8, 2)
+    batch = generate_streams(prob.tasks, lam, 1, 2000, seed=4)
+    stream = batch.stream(0)
+    fast = simulate_mgc(prob, LSTAR, stream, 2)
+    ref = simulate(prob, LSTAR, stream, c_servers=2)
+    for f in ("mean_wait", "mean_system_time", "utilization", "accuracy"):
+        assert abs(getattr(fast, f) - getattr(ref, f)) <= 1e-9, f
+    assert 0.0 < fast.utilization <= 1.0
+
+
+# -------------------------------------------------- Erlang-C validation
+
+@pytest.mark.parametrize("c", [2, 4])
+@pytest.mark.parametrize("rho", [0.6, 0.9])
+def test_des_validates_lee_longton(prob, c, rho):
+    """DES mean wait within 95% CI + documented allowance of the analytic
+    Erlang-C/Lee-Longton prediction (tight in heavy traffic)."""
+    lam = _lam_for(prob, LSTAR, rho, c)
+    n_seeds, n_q, warm = 16, 8000, 2000
+    batch = generate_streams(prob.tasks, lam, n_seeds, n_q, seed=0)
+    services = _service_table(prob, LSTAR)[batch.types]
+    start, _ = free_server_numpy(batch.arrivals, services, c)
+    waits = (start - batch.arrivals)[:, warm:].mean(axis=1)
+    pred = float(mgc_wait_np(prob.tasks, LSTAR, lam, c))
+    gap = abs(waits.mean() - pred)
+    assert gap <= ci95(waits) + LL_RTOL[rho] * pred, (
+        f"c={c} rho={rho}: DES {waits.mean():.4f} +- {ci95(waits):.4f} "
+        f"vs Lee-Longton {pred:.4f}")
+
+
+def test_mgc_prediction_matches_wait_np(prob):
+    p = Problem(tasks=prob.tasks,
+                server=ServerParams(_lam_for(prob, LSTAR, 0.7, 2),
+                                    prob.server.alpha, prob.server.l_max))
+    d = mgc_prediction(p, LSTAR, 2)
+    np.testing.assert_allclose(
+        d["mean_wait"],
+        float(mgc_wait_np(p.tasks, LSTAR, p.server.lam, 2)), rtol=1e-12)
+    assert d["utilization"] == pytest.approx(0.7, rel=1e-9)
+    assert d["mean_system_time"] == pytest.approx(
+        d["mean_wait"] + d["mean_service"], rel=1e-12)
+
+
+# -------------------------------------------------------------- sweep_mgc
+
+def test_sweep_mgc_threads_c_stability(prob):
+    """Arrival rates past single-server saturation stay unclipped and
+    stable on a 4-server pod; the same grid at c = 1 is NaN-masked."""
+    lam_hot = _lam_for(prob, LSTAR, 0.5, 4)     # offered rho = 2.0
+    policies = {"opt": LSTAR}
+    sw4 = sweep_mgc(prob, policies, [lam_hot], 4, n_seeds=4, n_queries=2000)
+    assert sw4.c_servers == 4
+    assert bool(sw4.stable[0, 0])
+    np.testing.assert_array_equal(sw4.lengths[0, 0], LSTAR)  # no clip
+    assert np.isfinite(sw4.mean_wait[0, 0])
+    assert 0.0 < sw4.utilization[0, 0] <= 1.0
+    # the same grid at c = 1 must clip budgets into the single-server slab
+    sw1 = sweep_mgc(prob, policies, [lam_hot], 1, n_seeds=4, n_queries=2000)
+    assert np.all(sw1.lengths[0, 0] <= LSTAR)
+    assert sw1.lengths[0, 0].sum() < LSTAR.sum()         # clip engaged
+    assert sw1.rho_analytic[0, 0] < 1.0
+    # and a rate past even the zero-token single-server saturation is
+    # NaN-masked at c = 1 while a 4-server pod still serves it
+    es0 = float(np.sum(np.asarray(prob.tasks.pi)
+                       * np.asarray(prob.tasks.t0)))
+    lam_sat = 1.5 / es0
+    sw1s = sweep_mgc(prob, policies, [lam_sat], 1, n_seeds=2,
+                     n_queries=500)
+    assert not bool(sw1s.stable[0, 0])
+    assert np.isnan(sw1s.mean_wait[0, 0])
+    sw4s = sweep_mgc(prob, policies, [lam_sat], 4, n_seeds=2,
+                     n_queries=500)
+    assert bool(sw4s.stable[0, 0])
+    assert np.isfinite(sw4s.mean_wait[0, 0])
+
+
+def test_simulate_mgc_batch_policy_stack(prob):
+    lam = _lam_for(prob, LSTAR, 0.6, 2)
+    batch = generate_streams(prob.tasks, lam, 5, 2000, seed=8)
+    policies = np.stack([LSTAR, np.full(6, 100.0)])
+    stats = simulate_mgc_batch(prob, policies, batch, 2)
+    assert stats.mean_wait.shape == (2, 5)
+    one = simulate_mgc_batch(prob, LSTAR, batch, 2)
+    np.testing.assert_array_equal(one.mean_system_time,
+                                  stats.mean_system_time[0])
+
+
+# ----------------------------------------------------- solver-grid c axis
+
+@pytest.fixture(scope="module")
+def c_grid():
+    tasks = paper_tasks()
+    lams = np.array([0.1, 0.35])
+    cs = np.array([1, 2, 4])
+    return tasks, solve_grid_c(tasks, lams, cs)
+
+
+def solve_grid_c(tasks, lams, cs):
+    from repro.sweeps import solve_grid
+
+    return solve_grid(tasks, lams[:, None], 30.0, 32768.0, c=cs[None, :])
+
+
+def test_grid_c_axis_shapes_and_stability(c_grid):
+    _, sol = c_grid
+    assert sol.shape == (2, 3)
+    np.testing.assert_array_equal(sol.c[0], [1, 2, 4])
+    assert sol.feasible.all() and sol.stable.all()
+    assert np.all(sol.rho_int < sol.c)
+    assert np.all(sol.kkt_residual < 1e-4)
+
+
+def test_grid_c1_lanes_match_scalar_facade(c_grid):
+    """The PGA-on-mgc pipeline at c = 1 solves the paper's problem: same
+    integer budgets as ``core.allocator.solve``, continuous within 1e-3
+    (different solver, same optimum)."""
+    tasks, sol = c_grid
+    for i, lam in enumerate(np.asarray(sol.lam[:, 0])):
+        ref = solve(Problem(tasks=tasks,
+                            server=ServerParams(float(lam), 30.0, 32768.0)))
+        assert np.max(np.abs(sol.lengths_cont[i, 0]
+                             - ref.lengths_cont)) < 1e-3
+        np.testing.assert_array_equal(sol.lengths_int[i, 0],
+                                      ref.lengths_int)
+
+
+def test_grid_value_monotone_in_c(c_grid):
+    """More replicas at the same arrival rate never lower the optimum."""
+    _, sol = c_grid
+    assert np.all(np.diff(sol.value_int, axis=1) >= -1e-9)
+    # and the marginal value of a replica shrinks as waits vanish
+    gains = np.diff(sol.value_int, axis=1)
+    assert np.all(gains[:, 1] <= gains[:, 0] + 1e-9)
+
+
+def test_grid_c_infeasible_cells_flagged():
+    tasks = paper_tasks()
+    es0 = float(np.sum(np.asarray(tasks.pi) * np.asarray(tasks.t0)))
+    lam = 1.5 / es0                       # rho_0 = 1.5: needs c >= 2
+    sol = solve_grid_c(tasks, np.array([lam]), np.array([1, 2]))
+    assert not bool(sol.feasible[0, 0])
+    assert bool(sol.feasible[0, 1]) and bool(sol.stable[0, 1])
+
+
+def test_grid_c_rejects_non_integer():
+    from repro.sweeps import solve_grid
+
+    with pytest.raises(ValueError):
+        solve_grid(paper_tasks(), 0.1, 30.0, 1024.0, c=1.5)
+
+
+def test_evaluate_solution_threads_c(c_grid):
+    from repro.sweeps import evaluate_solution
+
+    tasks, sol = c_grid
+    ev = evaluate_solution(tasks, sol, n_seeds=8, n_queries=6000, seed=1,
+                           warmup_frac=0.2)
+    np.testing.assert_array_equal(ev.c, sol.ravel().c.astype(np.int64))
+    # every cell's DES within CI + the documented moderate-load allowance
+    ok = np.abs(ev.gap_system_time) <= ev.ci_system_time \
+        + 0.15 * ev.pk_system_time
+    assert ok.all(), (ev.gap_system_time, ev.ci_system_time)
+    assert np.all(ev.des_utilization < 1.0)
+    # per-server utilization tracks rho / c
+    np.testing.assert_allclose(ev.des_utilization,
+                               ev.pk_rho / ev.c, rtol=0.15)
+
+
+def test_simulate_mgc_rejects_srpt(prob):
+    """Preemption is single-server only; a silent SJF-as-SRPT run would
+    be ~2x off, so the multiserver facade must refuse loudly."""
+    batch = generate_streams(prob.tasks, 0.3, 1, 50, seed=0)
+    with pytest.raises(NotImplementedError):
+        simulate_mgc(prob, LSTAR, batch.stream(0), 2, discipline="srpt")
+
+
+def test_evaluate_cells_srpt_is_preemptive(prob):
+    """evaluate_cells(discipline='srpt') must run the preemptive kernel,
+    not relabel the SJF ordering."""
+    from repro.queueing_sim import simulate
+    from repro.sweeps import evaluate_cells
+
+    lam = _lam_for(prob, LSTAR, 0.7, 1)
+    ev = evaluate_cells(prob.tasks, [lam], LSTAR, n_seeds=2,
+                        n_queries=1500, seed=4, discipline="srpt")
+    sjf = evaluate_cells(prob.tasks, [lam], LSTAR, n_seeds=2,
+                        n_queries=1500, seed=4, discipline="sjf")
+    # cross-check against the reference preemptive DES on one stream
+    batch = generate_streams(prob.tasks, lam, 2, 1500, seed=4)
+    refs = [simulate(prob, LSTAR, batch.stream(s), discipline="srpt")
+            for s in range(2)]
+    # rescale: evaluate_cells uses unit-rate CRN streams, so compare
+    # qualitatively — SRPT must beat SJF and sit near the reference scale
+    assert ev.des_system_time[0] < sjf.des_system_time[0]
+    ref_sys = np.mean([r.mean_system_time for r in refs])
+    assert ev.des_system_time[0] == pytest.approx(ref_sys, rel=0.35)

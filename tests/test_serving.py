@@ -167,3 +167,37 @@ def test_server_with_real_engine(prob):
     rep = srv.run(stream)
     assert rep.n == 12
     assert rep.tokens_generated > 0
+
+
+def test_srpt_scheduler_orders_by_remaining_work(prob, stream):
+    """The srpt admission queue pops shortest service first (remaining =
+    full service at admission), via the shared discipline_keys."""
+    from repro.core import TokenBudgetAllocator
+    from repro.serving.request import Request
+    from repro.serving.scheduler import Scheduler
+
+    alloc = TokenBudgetAllocator(prob)
+    sched = Scheduler(alloc, discipline="srpt")
+    for q in stream.queries[:40]:
+        r = Request(rid=q.qid, task_index=q.task,
+                    prompt=np.ones(q.prompt_len, dtype=np.int32),
+                    arrival_t=q.arrival, correct_u=q.correct_u)
+        sched.admit(r, now=q.arrival, observe=False)
+    tasks = prob.tasks
+    services = []
+    while True:
+        r = sched.next_request()
+        if r is None:
+            break
+        services.append(float(tasks.t0[r.task_index]
+                              + tasks.c[r.task_index] * r.budget))
+    assert len(services) == 40
+    assert np.all(np.diff(services) >= -1e-12)
+
+
+def test_scheduler_rejects_unknown_discipline(prob):
+    from repro.core import TokenBudgetAllocator
+    from repro.serving.scheduler import Scheduler
+
+    with pytest.raises(ValueError):
+        Scheduler(TokenBudgetAllocator(prob), discipline="lifo")
