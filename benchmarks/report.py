@@ -57,6 +57,15 @@ GATES = {
         ("timings.queries_per_s",
          lambda d: d["timings"]["queries_per_s"], 0.02),
     ],
+    "BENCH_replay.json": [
+        ("virtual.queries_per_s",
+         lambda d: d["virtual"]["queries_per_s"], 0.02),
+        # accuracy of the online lambda estimator at the end of the run;
+        # scale-free in [0, 1], so the floor is a fraction of the committed
+        # full-run accuracy, not of a throughput
+        ("estimation.lam_accuracy",
+         lambda d: d["estimation"]["lam_accuracy"], 0.5),
+    ],
 }
 
 

@@ -199,8 +199,15 @@ class TokenBudgetAllocator:
         self._lock = threading.Lock()
         self._ewma_decay = math.log(2.0) / ewma_halflife
         self._lam_est = problem.server.lam
+        # EWMA of inter-arrival GAPS, seeded at the assumed operating point;
+        # lambda is estimated as 1 / gap_est (never as an average of 1/gap:
+        # for exponential gaps E[1/X] = inf, so the reciprocal-gap EWMA is
+        # divergent/biased and a single near-zero gap would spike the rate
+        # estimate by ~w/gap and trigger a spurious re-solve)
+        self._gap_est = 1.0 / problem.server.lam
         self._pi_est = np.asarray(problem.tasks.pi, dtype=np.float64).copy()
         self._last_arrival_t: float | None = None
+        self._n_observed = 0
         self._resolve_rel_tol = resolve_rel_tol
         # re-solving retraces the jitted solvers (the problem constants are
         # baked in); cap the cadence so the control plane stays cheap
@@ -224,19 +231,41 @@ class TokenBudgetAllocator:
 
     # ------------------------------------------------------------ learning
     def observe_arrival(self, task_index: int, t_now: float) -> None:
-        """EWMA update of (lambda, pi) from the live stream; maybe re-solve."""
+        """EWMA update of (lambda, pi) from the live stream; maybe re-solve.
+
+        The rate estimate averages inter-arrival gaps and inverts the mean
+        (lambda_hat = 1 / E^[gap]); see ``repro.serving.estimators`` for the
+        windowed/EWMA estimator family this mirrors. Averaging reciprocal
+        gaps instead is statistically divergent (E[1/X] = inf under
+        exponential gaps) and numerically fragile (one near-zero gap moves
+        the estimate by ~w/gap); a near-zero gap now moves the gap EWMA by
+        at most w * gap_est.
+        """
         with self._lock:
             if self._last_arrival_t is not None:
-                gap = max(t_now - self._last_arrival_t, 1e-9)
+                gap = max(t_now - self._last_arrival_t, 0.0)
                 w = 1.0 - math.exp(-self._ewma_decay)
-                self._lam_est = (1 - w) * self._lam_est + w * (1.0 / gap)
+                self._gap_est = (1 - w) * self._gap_est + w * gap
+                self._lam_est = 1.0 / max(self._gap_est, 1e-12)
                 onehot = np.zeros_like(self._pi_est)
                 onehot[task_index] = 1.0
                 self._pi_est = (1 - w) * self._pi_est + w * onehot
                 self._pi_est /= self._pi_est.sum()
             self._last_arrival_t = t_now
+            self._n_observed += 1
             self._arrivals_since_resolve += 1
             self._maybe_resolve()
+
+    def estimator_state(self) -> dict:
+        """Snapshot of the online estimates (exposed via ``ServingReport``)."""
+        with self._lock:
+            return {
+                "lam": float(self._lam_est),
+                "gap": float(self._gap_est),
+                "pi": [float(p) for p in self._pi_est],
+                "n_arrivals": int(self._n_observed),
+                "n_resolves": int(self.n_resolves),
+            }
 
     def _maybe_resolve(self) -> None:
         if self._arrivals_since_resolve < self._min_resolve_interval:

@@ -34,8 +34,10 @@ from .mg1 import (SimResult, event_loop, event_loop_mgc, mgc_prediction,
 from .multiserver import (free_server_jax, free_server_numpy, simulate_mgc,
                           simulate_mgc_batch, sweep_mgc)
 from .stats import ci95
-from .workload import (Query, Stream, StreamBatch, empirical_mixture,
-                       generate_stream, generate_streams)
+from .workload import (DriftTrace, Query, Segment, Stream, StreamBatch,
+                       empirical_mixture, generate_drift_trace,
+                       generate_stream, generate_streams,
+                       trace_from_stream_batch)
 
 __all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
            "Query", "generate_stream", "empirical_mixture", "StreamBatch",
@@ -48,4 +50,5 @@ __all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
            "srpt_numpy", "srpt_start_finish", "srpt_event_loop",
            "event_loop_mgc", "mgc_prediction", "free_server_numpy",
            "free_server_jax", "simulate_mgc", "simulate_mgc_batch",
-           "sweep_mgc", "ci95"]
+           "sweep_mgc", "ci95", "Segment", "DriftTrace",
+           "generate_drift_trace", "trace_from_stream_batch"]

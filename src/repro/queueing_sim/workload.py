@@ -112,6 +112,104 @@ class StreamBatch:
         return Stream(queries=queries, lam=self.lam, horizon=horizon)
 
 
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One stationary piece of a piecewise-stationary workload."""
+
+    n_queries: int
+    lam: float
+    pi: tuple | None = None    # mixture override; None = tasks.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftTrace:
+    """A single flat query trace with piecewise-stationary (lam, pi).
+
+    The replay harness (``serving.replay``) consumes this: the estimators
+    never see ``segments`` / ``segment_ids`` — those exist only so tests
+    and benchmarks can score tracking against the ground-truth schedule.
+    A one-segment trace is an ordinary stationary Poisson stream.
+    """
+
+    arrivals: np.ndarray      # [n] float64, absolute arrival times
+    types: np.ndarray         # [n] int, task-type index k
+    prompt_lens: np.ndarray   # [n] int
+    correct_us: np.ndarray    # [n] float64
+    segment_ids: np.ndarray   # [n] int, which Segment each query came from
+    segments: tuple           # of Segment (ground truth, not estimator input)
+    seed: int
+
+    @property
+    def n(self) -> int:
+        return int(self.arrivals.shape[0])
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def horizon(self) -> float:
+        return float(self.arrivals[-1]) if self.n else 0.0
+
+    def to_stream(self) -> Stream:
+        """Materialize as a legacy :class:`Stream` (serving-engine input)."""
+        queries = tuple(
+            Query(qid=j, task=int(self.types[j]),
+                  arrival=float(self.arrivals[j]),
+                  prompt_len=int(self.prompt_lens[j]),
+                  correct_u=float(self.correct_us[j]))
+            for j in range(self.n)
+        )
+        return Stream(queries=queries, lam=self.segments[0].lam,
+                      horizon=self.horizon)
+
+
+def generate_drift_trace(tasks: TaskSet, segments, seed: int = 0,
+                         prompt_len_range=(16, 128)) -> DriftTrace:
+    """Piecewise-stationary workload: each :class:`Segment` draws its gaps
+    at its own lambda and its types from its own pi, arrivals continuing
+    cumulatively across segment boundaries (the stream never resets)."""
+    segments = tuple(segments)
+    if not segments:
+        raise ValueError("need at least one segment")
+    rng = np.random.default_rng(seed)
+    arr, typ, pl, us, sid = [], [], [], [], []
+    t = 0.0
+    for s_idx, seg in enumerate(segments):
+        if seg.n_queries <= 0 or seg.lam <= 0:
+            raise ValueError("segments need n_queries > 0 and lam > 0")
+        gaps = rng.exponential(1.0 / seg.lam, size=seg.n_queries)
+        a = t + np.cumsum(gaps)
+        t = float(a[-1])
+        pi = np.asarray(tasks.pi if seg.pi is None else seg.pi,
+                        dtype=np.float64)
+        pi = pi / pi.sum()
+        arr.append(a)
+        typ.append(rng.choice(tasks.n_tasks, size=seg.n_queries, p=pi))
+        pl.append(rng.integers(prompt_len_range[0], prompt_len_range[1] + 1,
+                               size=seg.n_queries))
+        us.append(rng.uniform(size=seg.n_queries))
+        sid.append(np.full(seg.n_queries, s_idx, dtype=np.int64))
+    return DriftTrace(
+        arrivals=np.concatenate(arr), types=np.concatenate(typ),
+        prompt_lens=np.concatenate(pl), correct_us=np.concatenate(us),
+        segment_ids=np.concatenate(sid), segments=segments, seed=seed)
+
+
+def trace_from_stream_batch(batch: StreamBatch, i: int) -> DriftTrace:
+    """Replicate ``i`` of a :class:`StreamBatch` as a one-segment
+    :class:`DriftTrace` — the common-random-numbers bridge between the
+    batched DES and the replay harness (identical arrivals/types/uniforms
+    feed both, so their FIFO waits must agree to float round-off)."""
+    seg = Segment(n_queries=batch.n_queries, lam=batch.lam)
+    return DriftTrace(
+        arrivals=np.array(batch.arrivals[i], dtype=np.float64),
+        types=np.array(batch.types[i], dtype=np.int64),
+        prompt_lens=np.array(batch.prompt_lens[i], dtype=np.int64),
+        correct_us=np.array(batch.correct_us[i], dtype=np.float64),
+        segment_ids=np.zeros(batch.n_queries, dtype=np.int64),
+        segments=(seg,), seed=batch.seed)
+
+
 def generate_streams(tasks: TaskSet, lam: float, n_seeds: int,
                      n_queries: int, seed: int = 0,
                      prompt_len_range=(16, 128)) -> StreamBatch:

@@ -1,11 +1,31 @@
-"""Serving runtime: allocator-driven FIFO LLM server with budget enforcement."""
+"""Serving runtime: allocator-driven FIFO LLM server with budget enforcement.
+
+The closed control loop added in this package:
+
+* ``estimators`` — online (lambda, pi, E[S], E[S^2], latency-curve)
+  estimation from the observed request stream (EWMA or sliding-window).
+* ``replay`` — the trace-replay digital twin: blocks of a recorded trace
+  are served (virtual latency model or real chunked-scan decodes), the
+  observations feed the estimators, and token budgets are re-solved on a
+  cadence through ``sweeps.solve_grid`` — no oracle operating point.
+"""
 from .continuous import ContinuousBatchingEngine
 from .engine import DecodeEngine
-from .metrics import ServingReport, summarize
+from .estimators import (EstimatorState, LatencyCalibrator, MixtureEstimator,
+                         OnlineEstimators, RateEstimator,
+                         ServiceMomentEstimator)
+from .metrics import ServingReport, empty_report, summarize
+from .replay import (BlockRecord, Controller, ReplayConfig, ReplayHarness,
+                     ReplayResult)
 from .request import CompletedRequest, Phase, Request
 from .scheduler import Scheduler
 from .server import LLMServer, ServerConfig
 
-__all__ = ["DecodeEngine", "ContinuousBatchingEngine", "LLMServer", "ServerConfig", "Scheduler",
+__all__ = ["DecodeEngine", "ContinuousBatchingEngine", "LLMServer",
+           "ServerConfig", "Scheduler",
            "Request", "CompletedRequest", "Phase", "ServingReport",
-           "summarize"]
+           "summarize", "empty_report",
+           "RateEstimator", "MixtureEstimator", "ServiceMomentEstimator",
+           "LatencyCalibrator", "OnlineEstimators", "EstimatorState",
+           "ReplayConfig", "ReplayHarness", "ReplayResult", "Controller",
+           "BlockRecord"]

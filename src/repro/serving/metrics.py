@@ -26,12 +26,32 @@ class ServingReport:
     per_task_system_time: dict
     tokens_generated: int
     n_resolves: int
+    # online-estimator snapshot (lambda/pi/moment estimates at the end of
+    # the run); None when the producer has no estimation loop
+    estimator_state: dict | None = None
+
+
+def empty_report(n_resolves: int = 0,
+                 estimator_state: dict | None = None) -> ServingReport:
+    """Zeroed :class:`ServingReport` for an empty completed list.
+
+    Same contract as ``mg1.empty_result`` / ``mg1.simulate`` on an empty
+    stream: means over zero requests are reported as 0.0, not an error."""
+    return ServingReport(
+        n=0, mean_wait=0.0, mean_service=0.0, mean_system_time=0.0,
+        p50_system_time=0.0, p99_system_time=0.0, utilization=0.0,
+        accuracy=0.0, mean_accuracy_prob=0.0, objective=0.0,
+        per_task_budget={}, per_task_system_time={}, tokens_generated=0,
+        n_resolves=n_resolves, estimator_state=estimator_state)
 
 
 def summarize(problem: Problem, completed: Sequence[CompletedRequest],
-              horizon: float, n_resolves: int = 0) -> ServingReport:
+              horizon: float, n_resolves: int = 0,
+              estimator_state: dict | None = None) -> ServingReport:
     if not completed:
-        raise ValueError("no completed requests")
+        # empty-stream contract shared with the simulators (see
+        # ``mg1.empty_result``): zeroed statistics, never a ValueError
+        return empty_report(n_resolves, estimator_state)
     waits = np.array([c.wait_time for c in completed])
     serv = np.array([c.service_time for c in completed])
     syst = np.array([c.system_time for c in completed])
@@ -65,4 +85,5 @@ def summarize(problem: Problem, completed: Sequence[CompletedRequest],
         per_task_system_time=per_sys,
         tokens_generated=int(sum(c.n_tokens for c in completed)),
         n_resolves=n_resolves,
+        estimator_state=estimator_state,
     )

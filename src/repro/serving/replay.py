@@ -1,0 +1,404 @@
+"""Trace-replay digital twin: the closed allocator<->engine loop.
+
+This module closes the loop the rest of the repo leaves open. The solver
+stack (``core.allocator``, ``sweeps.solve_grid``) maps a *known* operating
+point (lambda, pi, t0, c) to optimal token budgets; the serving stack
+(``serving.server``) executes budgets against a stream. In production
+neither lambda nor the latency curve is known — the controller must learn
+them from the stream it is serving. The replay harness runs exactly that
+loop over a recorded trace:
+
+    trace block  ->  stamp budgets (current solution + exploration jitter)
+                 ->  services (virtual latency model | real engine decode)
+                 ->  Lindley FIFO queueing (exact, vectorized, with carry)
+                 ->  fold observations into ``serving.estimators``
+                 ->  re-solve token allocation via ``sweeps.solve_grid``
+                 ->  next block
+
+**Zero oracle parameters**: the controller (:class:`Controller`) is
+constructed from the offline-calibrated accuracy curves (A, b, D — fit
+from benchmark data, paper Table I) and the objective constants (alpha,
+l_max) only. It never reads ``problem.server.lam``, ``problem.tasks.pi``,
+``problem.tasks.t0`` or ``problem.tasks.c`` — those live in the *plant*
+(:class:`ReplayHarness`), which is the physics being controlled. Arrival
+rate and mixture come from :class:`~.estimators.RateEstimator` /
+:class:`~.estimators.MixtureEstimator`; the latency curve comes from the
+:class:`~.estimators.LatencyCalibrator` (WLS of observed service on the
+stamped budget), which is identifiable because a small fraction of budgets
+is jittered (exploration).
+
+Two service lanes:
+
+* ``run_virtual`` — services from the calibrated latency model
+  t_k(l) = t0_k + c_k l. Queueing is bit-exact against the batched DES
+  on common random numbers (pinned in ``tests/test_replay.py``); millions
+  of simulated queries cost a handful of numpy passes.
+* ``run_engine`` — services are wall-clock times of real chunked-scan
+  decodes (:class:`~.engine.DecodeEngine`), replayed through the same
+  Lindley recursion: a digital twin driven by measured latencies, the
+  measured accuracy-vs-system-time point landing on (or off) the DES/P-K
+  predicted frontier (``benchmarks/replay_bench.py``).
+
+Block boundaries are the control cadence: every request in a block is
+budgeted by the solution computed at the block's start, mirroring a
+server that re-solves on a timer rather than per arrival.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from ..core.params import Problem, TaskSet
+from ..core.queueing import mean_system_time, service_moments
+from ..queueing_sim.batched import lindley_numpy
+from ..queueing_sim.workload import DriftTrace
+from .estimators import EstimatorState, OnlineEstimators
+from .metrics import ServingReport
+
+__all__ = ["ReplayConfig", "Controller", "BlockRecord", "ReplayResult",
+           "ReplayHarness"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    """Knobs of the closed replay loop."""
+
+    block_size: int = 256          # requests per control interval
+    l_init: int = 64               # uninformed initial budget (all tasks)
+    warmup_blocks: int = 1         # blocks before the first re-solve
+    resolve_every: int = 1         # re-solve cadence, in blocks
+    # estimator memory
+    est_mode: str = "ewma"         # "ewma" | "window"
+    est_halflife: float = 2048.0   # observations (ewma mode)
+    est_window: int = 8192         # observations (window mode)
+    # exploration (latency-curve identifiability)
+    explore_frac: float = 0.05     # fraction of budgets jittered
+    explore_rel: float = 0.25      # jitter spread, relative to the budget
+    explore_min_spread: int = 4    # ...but at least this many tokens
+    seed: int = 0                  # exploration RNG seed
+    # stability guard on the estimated operating point
+    rho_cap: float = 0.95          # solve at min(lam_hat, rho_cap/E[S(0)]_hat)
+    min_services: int = 32         # observations before trusting estimates
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRecord:
+    """One control interval of the closed loop (for tracking plots/tests)."""
+
+    index: int
+    n: int
+    t_start: float                 # first arrival in the block
+    t_end: float                   # last arrival in the block
+    budgets: np.ndarray            # [N] deployed budgets during the block
+    resolved: bool                 # did a re-solve happen after this block?
+    mean_wait: float
+    mean_service: float
+    estimator: dict                # EstimatorState.as_dict() after the block
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayResult:
+    """Per-request trajectories plus the control-loop history."""
+
+    arrivals: np.ndarray           # [n]
+    types: np.ndarray              # [n]
+    budgets: np.ndarray            # [n] stamped (post-jitter) budgets
+    services: np.ndarray           # [n] virtual-model or measured seconds
+    waits: np.ndarray              # [n]
+    system_times: np.ndarray       # [n] wait + service
+    correct: np.ndarray            # [n] bool, Bernoulli(p_k(l)) via trace u
+    accuracy_prob: np.ndarray      # [n] p_k(l) at the stamped budget
+    blocks: tuple                  # of BlockRecord
+    final_budgets: np.ndarray      # [N] the last deployed per-task solution
+    n_resolves: int
+    estimator_state: dict          # final EstimatorState.as_dict()
+    mode: str                      # "virtual" | "engine"
+
+    @property
+    def n(self) -> int:
+        return int(self.arrivals.shape[0])
+
+    def measured(self, warmup_frac: float = 0.2) -> dict:
+        """Post-warmup measured operating point (the twin's observation)."""
+        i0 = int(self.n * warmup_frac)
+        sel = slice(i0, None)
+        syst = self.system_times[sel]
+        se = float(syst.std(ddof=1) / np.sqrt(max(syst.shape[0], 2)))
+        return {
+            "n": int(syst.shape[0]),
+            "accuracy": float(self.correct[sel].mean()),
+            "accuracy_prob": float(self.accuracy_prob[sel].mean()),
+            "mean_wait": float(self.waits[sel].mean()),
+            "mean_service": float(self.services[sel].mean()),
+            "mean_system_time": float(syst.mean()),
+            "ci95_system_time": 1.96 * se,
+        }
+
+    def report(self, problem: Problem) -> ServingReport:
+        """Summarize as a :class:`ServingReport` (array path; no per-request
+        object materialization, so million-query replays stay cheap)."""
+        syst = self.system_times
+        horizon = float(self.arrivals[-1] + self.system_times[-1] -
+                        self.waits[-1]) if self.n else 0.0
+        per_budget, per_sys = {}, {}
+        for k in range(problem.tasks.n_tasks):
+            sel = self.types == k
+            if sel.any():
+                per_budget[problem.tasks.names[k]] = \
+                    float(self.budgets[sel].mean())
+                per_sys[problem.tasks.names[k]] = float(syst[sel].mean())
+        if self.n == 0:
+            from .metrics import empty_report
+            return empty_report(self.n_resolves, self.estimator_state)
+        return ServingReport(
+            n=self.n,
+            mean_wait=float(self.waits.mean()),
+            mean_service=float(self.services.mean()),
+            mean_system_time=float(syst.mean()),
+            p50_system_time=float(np.percentile(syst, 50)),
+            p99_system_time=float(np.percentile(syst, 99)),
+            utilization=float(self.services.sum() / max(horizon, 1e-9)),
+            accuracy=float(self.correct.mean()),
+            mean_accuracy_prob=float(self.accuracy_prob.mean()),
+            objective=float(problem.server.alpha * self.accuracy_prob.mean()
+                            - syst.mean()),
+            per_task_budget=per_budget,
+            per_task_system_time=per_sys,
+            tokens_generated=int(self.budgets.sum()),
+            n_resolves=self.n_resolves,
+            estimator_state=self.estimator_state,
+        )
+
+
+class Controller:
+    """The learning half of the loop: estimators + cadenced re-solve.
+
+    Constructed from offline-calibrated accuracy curves and objective
+    constants ONLY (A, b, D, names, alpha, l_max) — it cannot see the
+    plant's lambda / pi / t0 / c even by accident. ``observe`` folds one
+    control block of per-request measurements; ``resolve`` re-optimizes
+    token budgets at the current estimated operating point through the
+    jitted grid solver (one compile, ~ms per subsequent re-solve).
+    """
+
+    def __init__(self, names, A, b, D, alpha: float, l_max: float,
+                 cfg: ReplayConfig):
+        self.names = tuple(names)
+        self.A = np.asarray(A, dtype=np.float64)
+        self.b = np.asarray(b, dtype=np.float64)
+        self.D = np.asarray(D, dtype=np.float64)
+        self.alpha = float(alpha)
+        self.l_max = float(l_max)
+        self.cfg = cfg
+        self.n_tasks = self.A.shape[0]
+        self.est = OnlineEstimators(self.n_tasks, halflife=cfg.est_halflife,
+                                    mode=cfg.est_mode, window=cfg.est_window)
+        self.budgets = np.full(self.n_tasks, int(cfg.l_init), dtype=np.int64)
+        self.n_resolves = 0
+
+    @classmethod
+    def from_problem(cls, problem: Problem, cfg: ReplayConfig) -> "Controller":
+        """Extract exactly the offline-calibrated fields (and nothing else)."""
+        t = problem.tasks
+        return cls(t.names, t.A, t.b, t.D, problem.server.alpha,
+                   problem.server.l_max, cfg)
+
+    def observe(self, arrivals, types, budgets, services) -> None:
+        self.est.observe_block(arrivals, types, budgets, services)
+
+    def state(self) -> EstimatorState:
+        return self.est.state()
+
+    def ready(self) -> bool:
+        s = self.est
+        return (s.moments.n >= self.cfg.min_services
+                and s.rate.lam is not None and s.moments.es is not None)
+
+    def resolve(self) -> bool:
+        """Re-solve budgets at the estimated operating point. Returns True
+        if a new solution was deployed (False while estimates are unripe or
+        the estimated point is degenerate)."""
+        if not self.ready():
+            return False
+        st = self.est.state()
+        tasks_hat = TaskSet(names=self.names, A=self.A, b=self.b, D=self.D,
+                            t0=st.t0, c=st.c, pi=st.pi)
+        try:
+            tasks_hat.validate()
+        except ValueError:
+            return False
+        # stability guard: never hand the solver an infeasible cell — cap
+        # the arrival-rate estimate below saturation of the ZERO-token
+        # budget under the *estimated* latency curve
+        es0_hat = float(np.sum(st.pi * st.t0))
+        lam = min(st.lam, self.cfg.rho_cap / max(es0_hat, 1e-9))
+        if not np.isfinite(lam) or lam <= 0:
+            return False
+        from ..sweeps.solver_grid import solve_grid
+        sol = solve_grid(tasks_hat, lam, self.alpha, self.l_max)
+        if not bool(sol.feasible):
+            return False
+        self.budgets = np.asarray(sol.lengths_int, dtype=np.int64)
+        self.n_resolves += 1
+        return True
+
+
+class ReplayHarness:
+    """The plant: replays a trace against the controller, virtual or real."""
+
+    def __init__(self, problem: Problem, cfg: Optional[ReplayConfig] = None,
+                 engine=None):
+        self.problem = problem
+        self.cfg = cfg or ReplayConfig()
+        self.engine = engine
+        self.controller = Controller.from_problem(problem, self.cfg)
+
+    # ------------------------------------------------------------- internals
+    def _stamp_budgets(self, types: np.ndarray,
+                       rng: np.random.Generator,
+                       fixed_lengths) -> np.ndarray:
+        """Per-request budgets: current solution + exploration jitter."""
+        base = (np.asarray(fixed_lengths, dtype=np.int64)
+                if fixed_lengths is not None else self.controller.budgets)
+        l = base[types].astype(np.int64)
+        if fixed_lengths is not None or self.cfg.explore_frac <= 0:
+            return l
+        mask = rng.random(l.shape[0]) < self.cfg.explore_frac
+        spread = np.maximum(self.cfg.explore_min_spread,
+                            np.round(self.cfg.explore_rel * l)).astype(np.int64)
+        jitter = rng.integers(-1, 2, size=l.shape[0]) * spread
+        lj = np.clip(l + np.where(mask, jitter, 0), 0,
+                     int(self.problem.server.l_max))
+        return lj.astype(np.int64)
+
+    def _virtual_services(self, types, budgets) -> np.ndarray:
+        t0 = np.asarray(self.problem.tasks.t0)
+        c = np.asarray(self.problem.tasks.c)
+        return t0[types] + c[types] * budgets
+
+    def _engine_services(self, types, budgets, prompt_len: int,
+                         max_extra_tokens: int) -> np.ndarray:
+        """Wall-clock one real decode per request (B = 1, fixed prompt
+        shape so prefill compiles once)."""
+        prompt = (np.arange(prompt_len) % 97 + 1).astype(np.int32)[None, :]
+        out = np.empty(budgets.shape[0])
+        for i, l in enumerate(budgets):
+            w0 = time.perf_counter()
+            res = self.engine.generate(prompt, [int(l)],
+                                       max_extra_tokens=max_extra_tokens)
+            out[i] = time.perf_counter() - w0
+            assert int(res["n_reasoning"][0]) == min(
+                int(l), int(res["n_generated"][0]))
+        return out
+
+    def _accuracy(self, types, budgets, correct_us):
+        t = self.problem.tasks
+        p = (np.asarray(t.A)[types]
+             * (1 - np.exp(-np.asarray(t.b)[types] * budgets))
+             + np.asarray(t.D)[types])
+        return p, correct_us < p
+
+    def _run(self, trace: DriftTrace, mode: str, fixed_lengths,
+             prompt_len: int, max_extra_tokens: int) -> ReplayResult:
+        cfg, ctl = self.cfg, self.controller
+        n = trace.n
+        rng = np.random.default_rng(cfg.seed)
+        budgets = np.zeros(n, dtype=np.int64)
+        services = np.zeros(n)
+        waits = np.zeros(n)
+        blocks = []
+        prev_finish = 0.0
+        adaptive = fixed_lengths is None
+        for b0 in range(0, n, cfg.block_size):
+            b1 = min(b0 + cfg.block_size, n)
+            idx = slice(b0, b1)
+            a = trace.arrivals[idx]
+            k = trace.types[idx]
+            l = self._stamp_budgets(k, rng, fixed_lengths)
+            if mode == "virtual":
+                s = self._virtual_services(k, l)
+            else:
+                s = self._engine_services(k, l, prompt_len, max_extra_tokens)
+            # Lindley continuation: bumping the block's first arrival to the
+            # previous block's last departure reproduces the recursion of a
+            # single global pass exactly (start_i = max(a_i, finish_{i-1}))
+            a_eff = a.copy()
+            a_eff[0] = max(a_eff[0], prev_finish)
+            start, finish = lindley_numpy(a_eff, s)
+            prev_finish = float(finish[-1])
+            budgets[idx], services[idx] = l, s
+            waits[idx] = start - a
+            resolved = False
+            if adaptive:
+                ctl.observe(a, k, l, s)
+                n_done = len(blocks) + 1      # blocks observed so far
+                if (n_done > cfg.warmup_blocks
+                        and (n_done - cfg.warmup_blocks)
+                        % cfg.resolve_every == 0):
+                    resolved = ctl.resolve()
+            blocks.append(BlockRecord(
+                index=len(blocks), n=b1 - b0,
+                t_start=float(a[0]), t_end=float(a[-1]),
+                budgets=ctl.budgets.copy() if adaptive
+                else np.asarray(fixed_lengths, dtype=np.int64),
+                resolved=resolved,
+                mean_wait=float(waits[idx].mean()),
+                mean_service=float(s.mean()),
+                estimator=ctl.state().as_dict()))
+        p, correct = self._accuracy(trace.types, budgets, trace.correct_us)
+        return ReplayResult(
+            arrivals=trace.arrivals.copy(), types=trace.types.copy(),
+            budgets=budgets, services=services, waits=waits,
+            system_times=waits + services, correct=correct,
+            accuracy_prob=p, blocks=tuple(blocks),
+            final_budgets=(ctl.budgets.copy() if adaptive
+                           else np.asarray(fixed_lengths, dtype=np.int64)),
+            n_resolves=ctl.n_resolves,
+            estimator_state=ctl.state().as_dict(), mode=mode)
+
+    # ------------------------------------------------------------------ API
+    def run_virtual(self, trace: DriftTrace,
+                    fixed_lengths=None) -> ReplayResult:
+        """Closed-loop replay with services from the calibrated latency
+        model. ``fixed_lengths`` ([N] budgets) disables adaptation and
+        pins the policy — the CRN bridge to the batched DES."""
+        if trace.n == 0:
+            raise ValueError("empty trace")
+        return self._run(trace, "virtual", fixed_lengths, 0, 0)
+
+    def run_engine(self, trace: DriftTrace, prompt_len: int = 8,
+                   max_extra_tokens: int = 0,
+                   fixed_lengths=None) -> ReplayResult:
+        """Closed-loop replay with services measured from real chunked-scan
+        decodes. Issues one warmup decode (compile) before the clock."""
+        if self.engine is None:
+            raise ValueError("run_engine requires a DecodeEngine")
+        if trace.n == 0:
+            raise ValueError("empty trace")
+        prompt = (np.arange(prompt_len) % 97 + 1).astype(np.int32)[None, :]
+        self.engine.generate(prompt, [int(self.cfg.l_init)],
+                             max_extra_tokens=max_extra_tokens)
+        return self._run(trace, "engine", fixed_lengths, prompt_len,
+                         max_extra_tokens)
+
+    def predicted(self, lam: float, lengths=None) -> dict:
+        """P-K prediction (eqs 5-6) at the plant's TRUE parameters for the
+        deployed budgets — what the twin *should* measure if the loop
+        converged and the physics matches the model."""
+        lengths = self.controller.budgets if lengths is None else lengths
+        lengths = np.asarray(lengths, dtype=np.float64)
+        t = self.problem.tasks
+        m = service_moments(t, lengths, lam)
+        acc = float(np.sum(np.asarray(t.pi)
+                           * np.asarray(t.accuracy(lengths))))
+        return {
+            "lengths": [int(v) for v in lengths],
+            "accuracy": acc,
+            "mean_system_time": float(mean_system_time(m, lam)),
+            "rho": float(m.rho),
+            "es": float(m.es),
+            "es2": float(m.es2),
+        }

@@ -64,6 +64,15 @@ class Scheduler:
         self._seq += 1
         heapq.heappush(self._heap, (key, self._seq, req))
 
+    def reset(self) -> None:
+        """Drop any still-queued requests (start of a fresh ``run``).
+
+        The cumulative ``n_admitted`` counter and the allocator's online
+        estimates are deliberately preserved."""
+        self._fifo.clear()
+        self._heap.clear()
+        self._seq = 0
+
     def next_request(self) -> Optional[Request]:
         if self.discipline == "fifo":
             return self._fifo.popleft() if self._fifo else None

@@ -51,14 +51,18 @@ class ServerConfig:
 
 
 class LLMServer:
-    def __init__(self, problem: Problem, server_cfg: ServerConfig = ServerConfig(),
+    def __init__(self, problem: Problem,
+                 server_cfg: Optional[ServerConfig] = None,
                  engine: Optional["DecodeEngine | ContinuousBatchingEngine"] = None,
                  allocator: Optional[TokenBudgetAllocator] = None):
         self.problem = problem
-        self.cfg = server_cfg
+        # construct the default per instance: a shared `ServerConfig()`
+        # default argument is evaluated once at def time, so mutating one
+        # server's config would leak into every later server
+        self.cfg = ServerConfig() if server_cfg is None else server_cfg
         self.engine = engine
         self.allocator = allocator or TokenBudgetAllocator(problem)
-        self.scheduler = Scheduler(self.allocator, server_cfg.discipline)
+        self.scheduler = Scheduler(self.allocator, self.cfg.discipline)
         self.completed: list = []
 
     # ----------------------------------------------------------------- core
@@ -123,7 +127,18 @@ class LLMServer:
         return self._service_time(reqs)
 
     def run(self, stream: Stream) -> ServingReport:
-        """Process the whole stream under FIFO (or ablation) discipline."""
+        """Process the whole stream under FIFO (or ablation) discipline.
+
+        Re-entrant: per-run state (the completed list and any requests
+        still queued in the scheduler from an aborted run) is reset at
+        entry, so back-to-back ``run`` calls each serve exactly their own
+        stream. Allocator state (online lambda/pi estimates, the current
+        solution) deliberately persists across runs — that is the online
+        adaptation loop. An empty stream returns the zeroed report (same
+        contract as ``mg1.simulate``).
+        """
+        self.completed = []
+        self.scheduler.reset()
         queries = list(stream.queries)
         n = len(queries)
         i = 0                       # next arrival
@@ -170,4 +185,5 @@ class LLMServer:
                     n_tokens=int(r.generated),
                     correct=bool(r.correct_u < pk)))
         return summarize(self.problem, self.completed, horizon,
-                         self.allocator.n_resolves)
+                         self.allocator.n_resolves,
+                         estimator_state=self.allocator.estimator_state())

@@ -42,9 +42,9 @@ implementation; ``tests/test_solver_grid.py`` pins per-cell agreement
 (continuous optima to 1e-6, identical integer budgets).
 """
 from .evaluate import GridEvaluation, evaluate_cells, evaluate_solution
-from .frontier import (heavy_traffic_lams, heavy_traffic_slice,
-                       max_sustainable_lambda, pareto_front, pareto_mask,
-                       saturation_rate)
+from .frontier import (frontier_comparison, heavy_traffic_lams,
+                       heavy_traffic_slice, max_sustainable_lambda,
+                       pareto_front, pareto_mask, saturation_rate)
 from .solver_grid import (GridSolution, TaskArrays, reference_check,
                           solve_grid, solve_grid_flat)
 
@@ -53,5 +53,5 @@ __all__ = [
     "reference_check",
     "GridEvaluation", "evaluate_cells", "evaluate_solution",
     "pareto_mask", "pareto_front", "saturation_rate", "heavy_traffic_lams",
-    "heavy_traffic_slice", "max_sustainable_lambda",
+    "heavy_traffic_slice", "max_sustainable_lambda", "frontier_comparison",
 ]

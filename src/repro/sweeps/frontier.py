@@ -24,7 +24,7 @@ from .solver_grid import GridSolution, solve_grid
 
 __all__ = ["pareto_mask", "pareto_front", "saturation_rate",
            "heavy_traffic_lams", "heavy_traffic_slice",
-           "max_sustainable_lambda"]
+           "max_sustainable_lambda", "frontier_comparison"]
 
 
 def pareto_mask(accuracy, system_time) -> np.ndarray:
@@ -150,3 +150,55 @@ def max_sustainable_lambda(tasks: TaskSet, alpha, l_max,
         "lengths": np.asarray(lengths[best]),
         "solution": sol,
     }
+
+
+def frontier_comparison(measured_accuracy, measured_system_time,
+                        predicted_accuracy, predicted_system_time,
+                        ci_system_time=None) -> dict:
+    """Score measured operating points against their analytic predictions.
+
+    The closed-loop replay harness (``serving.replay``) produces MEASURED
+    (accuracy, E[T_sys]) points from the real engine or the virtual plant;
+    the solver stack produces the P-K/DES PREDICTED points for the same
+    deployed budgets. This packs the element-wise comparison the
+    ``benchmarks/replay_bench.py`` frontier report needs:
+
+    * per-point absolute and relative system-time gaps,
+    * CI coverage (``|gap| <= ci_system_time``) when measurement CIs are
+      supplied,
+    * Pareto masks of both point sets in the joint (max accuracy,
+      min time) order — a measured point that stays on the joint frontier
+      alongside its prediction is operating where the model says it should.
+    """
+    ma = np.asarray(measured_accuracy, dtype=np.float64).ravel()
+    mt = np.asarray(measured_system_time, dtype=np.float64).ravel()
+    pa = np.asarray(predicted_accuracy, dtype=np.float64).ravel()
+    pt = np.asarray(predicted_system_time, dtype=np.float64).ravel()
+    if not (ma.shape == mt.shape == pa.shape == pt.shape):
+        raise ValueError("measured/predicted arrays must share one shape")
+    gap_t = mt - pt
+    rel_t = gap_t / np.maximum(np.abs(pt), 1e-12)
+    gap_a = ma - pa
+    out = {
+        "n": int(ma.shape[0]),
+        "measured_accuracy": ma, "measured_system_time": mt,
+        "predicted_accuracy": pa, "predicted_system_time": pt,
+        "gap_system_time": gap_t, "rel_gap_system_time": rel_t,
+        "gap_accuracy": gap_a,
+        "max_rel_gap_system_time": float(np.max(np.abs(rel_t)))
+            if ma.size else 0.0,
+        "max_gap_accuracy": float(np.max(np.abs(gap_a))) if ma.size else 0.0,
+    }
+    if ci_system_time is not None:
+        ci = np.asarray(ci_system_time, dtype=np.float64).ravel()
+        covered = np.abs(gap_t) <= ci
+        out["ci_system_time"] = ci
+        out["covered"] = covered
+        out["coverage"] = float(covered.mean()) if covered.size else 1.0
+    # joint frontier: stack both sets, mask each half
+    acc = np.concatenate([ma, pa])
+    t = np.concatenate([mt, pt])
+    joint = pareto_mask(acc, t)
+    out["measured_on_joint_front"] = joint[:ma.shape[0]]
+    out["predicted_on_joint_front"] = joint[ma.shape[0]:]
+    return out

@@ -1,0 +1,145 @@
+"""Online estimator unit tests: convergence on stationary segments, batch
+equivalence, drift tracking, and latency-curve identifiability."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.estimators import (LatencyCalibrator, MixtureEstimator,
+                                      OnlineEstimators, RateEstimator,
+                                      ServiceMomentEstimator, _EwmaMean)
+
+
+def test_ewma_batch_equals_sequential():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=500)
+    a = _EwmaMean(halflife=64.0)
+    a.update(x)
+    b = _EwmaMean(halflife=64.0)
+    for v in x:
+        b.update([v])
+    assert a.mean == pytest.approx(b.mean, rel=1e-12)
+    # and chunked updates match too
+    c = _EwmaMean(halflife=64.0)
+    for chunk in np.array_split(x, 7):
+        c.update(chunk)
+    assert c.mean == pytest.approx(a.mean, rel=1e-12)
+
+
+@pytest.mark.parametrize("mode", ["ewma", "window"])
+def test_rate_estimator_converges(mode):
+    """lambda_hat -> lambda on a stationary Poisson stream. This is the
+    estimator contract the allocator fix relies on: mean the GAPS, then
+    invert — an EWMA of 1/gap has no finite target (E[1/X] = inf)."""
+    lam = 0.37
+    rng = np.random.default_rng(1)
+    ts = np.cumsum(rng.exponential(1.0 / lam, size=50_000))
+    est = RateEstimator(halflife=4096.0, mode=mode, window=16_384)
+    for chunk in np.array_split(ts, 100):
+        est.observe_arrivals(chunk)
+    assert est.lam == pytest.approx(lam, rel=0.06)
+
+
+def test_rate_estimator_survives_tiny_gap():
+    """A single near-zero gap must perturb, not destroy, the estimate —
+    the failure mode of reciprocal-gap averaging."""
+    lam = 1.0
+    rng = np.random.default_rng(2)
+    ts = np.cumsum(rng.exponential(1.0, size=5000))
+    est = RateEstimator(halflife=1024.0)
+    est.observe_arrivals(ts)
+    before = est.lam
+    est.observe(float(ts[-1]) + 1e-15)
+    assert est.lam == pytest.approx(before, rel=0.01)
+    assert est.lam == pytest.approx(lam, rel=0.2)
+
+
+def test_rate_estimator_tracks_drift_step():
+    """After a lambda step, the EWMA forgets the old regime within a few
+    half-lives and lands near the new rate."""
+    rng = np.random.default_rng(3)
+    t1 = np.cumsum(rng.exponential(1.0 / 0.1, size=8000))
+    t2 = t1[-1] + np.cumsum(rng.exponential(1.0 / 0.4, size=8000))
+    est = RateEstimator(halflife=1024.0)
+    est.observe_arrivals(t1)
+    assert est.lam == pytest.approx(0.1, rel=0.1)
+    est.observe_arrivals(t2)
+    assert est.lam == pytest.approx(0.4, rel=0.1)
+
+
+@pytest.mark.parametrize("mode", ["ewma", "window"])
+def test_mixture_estimator_converges(mode):
+    pi = np.array([0.5, 0.3, 0.15, 0.05])
+    rng = np.random.default_rng(4)
+    types = rng.choice(4, size=40_000, p=pi)
+    est = MixtureEstimator(4, halflife=8192.0, mode=mode, window=32_768)
+    for chunk in np.array_split(types, 50):
+        est.observe_types(chunk)
+    assert np.max(np.abs(est.pi - pi)) < 0.02
+
+
+def test_service_moment_estimator_and_pk():
+    """E[S], E[S^2] on a known two-point service mixture; pk_wait matches
+    the hand-evaluated Pollaczek-Khinchine formula."""
+    rng = np.random.default_rng(5)
+    s = np.where(rng.random(60_000) < 0.5, 1.0, 3.0)
+    est = ServiceMomentEstimator(halflife=16_384.0)
+    est.observe_services(s)
+    assert est.es == pytest.approx(2.0, rel=0.02)
+    assert est.es2 == pytest.approx(5.0, rel=0.02)
+    lam = 0.3
+    expect = lam * est.es2 / (2 * (1 - lam * est.es))
+    assert est.pk_wait(lam) == pytest.approx(expect, rel=1e-12)
+    assert est.pk_wait(1.0) == math.inf          # rho >= 1
+
+
+def test_latency_calibrator_exact_recovery():
+    """Deterministic services at two distinct budgets identify (t0, c)
+    exactly — the virtual-plant identifiability argument for exploration
+    jitter (2 support points suffice when services are noise-free)."""
+    t0_true, c_true = np.array([0.1, 0.2]), np.array([0.01, 0.03])
+    cal = LatencyCalibrator(2, halflife=512.0)
+    types = np.array([0, 0, 1, 1, 0, 1])
+    budgets = np.array([100, 200, 50, 150, 100, 50])
+    services = t0_true[types] + c_true[types] * budgets
+    cal.observe(types, budgets, services)
+    t0, c, ident = cal.params()
+    assert ident.all()
+    np.testing.assert_allclose(t0, t0_true, rtol=1e-9)
+    np.testing.assert_allclose(c, c_true, rtol=1e-9)
+
+
+def test_latency_calibrator_prior_until_identified():
+    """One support point cannot identify the slope: the prior slope is
+    kept, the intercept tracks the observed mean, and estimates stay in
+    the solver's validity domain (c > 0)."""
+    cal = LatencyCalibrator(1, t0_prior=0.1, c_prior=0.01)
+    t0, c, ident = cal.params()
+    assert not ident[0] and t0[0] == 0.1 and c[0] == 0.01
+    cal.observe([0, 0], [50, 50], [0.6, 0.6])
+    t0, c, ident = cal.params()
+    assert not ident[0]
+    assert c[0] == 0.01
+    assert t0[0] == pytest.approx(0.6 - 0.01 * 50)
+    assert c[0] > 0 and t0[0] > 0
+
+
+def test_online_estimators_state_snapshot():
+    """The bundled bank folds a block and serializes a JSON-able state."""
+    import json
+
+    est = OnlineEstimators(3)
+    st = est.state()
+    assert math.isnan(st.lam) and st.n_services == 0
+    arr = np.array([1.0, 2.5, 3.0, 4.2])
+    typ = np.array([0, 1, 2, 1])
+    bud = np.array([10, 20, 30, 20])
+    srv = np.array([0.2, 0.4, 0.6, 0.4])
+    est.observe_block(arr, typ, bud, srv)
+    st = est.state()
+    assert st.n_arrivals == 4 and st.n_services == 4
+    assert st.lam > 0 and st.es > 0 and st.es2 >= st.es ** 2 * 0.99
+    d = st.as_dict()
+    json.dumps(d)                                 # must be serializable
+    assert set(d) >= {"lam", "pi", "es", "es2", "rho", "pk_wait",
+                      "t0", "c", "identified", "n_arrivals", "n_services"}

@@ -1,0 +1,177 @@
+"""Trace-replay digital twin: CRN agreement with the batched DES, closed-
+loop convergence without oracle parameters, drift response, block-carry
+exactness, and the real-engine lane."""
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.core.allocator import solve
+from repro.core.params import Problem, ServerParams, TaskSet
+from repro.queueing_sim import (Segment, generate_drift_trace,
+                                generate_streams, trace_from_stream_batch)
+from repro.queueing_sim.batched import lindley_numpy
+from repro.serving import Controller, ReplayConfig, ReplayHarness
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+@pytest.fixture(scope="module")
+def oracle_lengths(prob):
+    return np.asarray(solve(prob).lengths_int, dtype=np.int64)
+
+
+@pytest.mark.parametrize("rho", [0.6, 0.9])
+def test_virtual_replay_pins_batched_des(prob, oracle_lengths, rho):
+    """Fixed-policy virtual replay on common random numbers reproduces the
+    batched Lindley DES waits to float round-off (the acceptance gate:
+    well within any 95% CI, because it is the same recursion on the same
+    draws)."""
+    t0 = np.asarray(prob.tasks.t0)
+    c = np.asarray(prob.tasks.c)
+    es = float(np.sum(np.asarray(prob.tasks.pi)
+                      * (t0 + c * oracle_lengths)))
+    lam = rho / es
+    batch = generate_streams(prob.tasks, lam, n_seeds=2, n_queries=4000,
+                             seed=29)
+    s = t0[batch.types[0]] + c[batch.types[0]] * oracle_lengths[
+        batch.types[0]]
+    start, _ = lindley_numpy(batch.arrivals[0], s)
+    des_waits = start - batch.arrivals[0]
+    res = ReplayHarness(prob, ReplayConfig(block_size=333)).run_virtual(
+        trace_from_stream_batch(batch, 0), fixed_lengths=oracle_lengths)
+    np.testing.assert_allclose(res.waits, des_waits, rtol=0, atol=1e-8)
+
+
+def test_block_carry_is_exact(prob, oracle_lengths):
+    """Waits must not depend on the control-interval size: the Lindley
+    carry across block boundaries reproduces one global pass."""
+    trace = generate_drift_trace(prob.tasks, [Segment(3000, 0.2)], seed=31)
+    runs = [ReplayHarness(prob, ReplayConfig(block_size=bs)).run_virtual(
+        trace, fixed_lengths=oracle_lengths) for bs in (64, 997, 3000)]
+    for r in runs[1:]:
+        np.testing.assert_allclose(r.waits, runs[0].waits,
+                                   rtol=0, atol=1e-9)
+
+
+def test_closed_loop_converges_to_oracle(prob, oracle_lengths):
+    """The full loop — estimate (lambda, pi, t0, c) online, re-solve on a
+    cadence — lands within a few tokens of the clairvoyant solution."""
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(20_000, prob.server.lam)], seed=7)
+    res = ReplayHarness(prob, ReplayConfig(block_size=512)).run_virtual(trace)
+    assert res.n_resolves > 10
+    assert np.max(np.abs(res.final_budgets - oracle_lengths)) <= 16
+    est = res.estimator_state
+    assert est["lam"] == pytest.approx(prob.server.lam, rel=0.1)
+    np.testing.assert_allclose(est["c"], np.asarray(prob.tasks.c),
+                               rtol=0.05)
+
+
+def test_controller_sees_zero_oracle_parameters(prob, oracle_lengths):
+    """The controller is built from the offline accuracy curves and the
+    objective constants ONLY. A plant description with scrambled latency
+    curve, mixture and arrival rate must produce the *identical*
+    controller — and the loop still converges to the TRUE oracle because
+    everything else is learned from the stream."""
+    lying = Problem(
+        tasks=TaskSet(names=prob.tasks.names, A=prob.tasks.A,
+                      b=prob.tasks.b, D=prob.tasks.D,
+                      t0=np.asarray(prob.tasks.t0) * 17.0,
+                      c=np.asarray(prob.tasks.c)[::-1].copy(),
+                      pi=np.eye(prob.tasks.n_tasks)[0]),
+        server=ServerParams(123.0, prob.server.alpha, prob.server.l_max))
+    cfg = ReplayConfig(block_size=512)
+    honest = Controller.from_problem(prob, cfg)
+    misled = Controller.from_problem(lying, cfg)
+    np.testing.assert_array_equal(honest.A, misled.A)
+    assert honest.alpha == misled.alpha and honest.l_max == misled.l_max
+
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(15_000, prob.server.lam)], seed=7)
+    h = ReplayHarness(prob, cfg)
+    h.controller = misled        # plant stays true; controller was "lied to"
+    res = h.run_virtual(trace)
+    assert np.max(np.abs(res.final_budgets - oracle_lengths)) <= 16
+
+
+def test_drift_response(prob):
+    """Piecewise-stationary lambda: the estimators track the step and the
+    deployed budgets shrink under the heavier load."""
+    lam0 = prob.server.lam
+    trace = generate_drift_trace(
+        prob.tasks, [Segment(6000, lam0), Segment(6000, 3 * lam0)], seed=13)
+    cfg = ReplayConfig(block_size=256, est_halflife=512.0)
+    res = ReplayHarness(prob, cfg).run_virtual(trace)
+    mid = [b for b in res.blocks if (b.index + 1) * cfg.block_size <= 6000]
+    end = res.blocks[-1]
+    assert mid[-1].estimator["lam"] == pytest.approx(lam0, rel=0.15)
+    assert end.estimator["lam"] == pytest.approx(3 * lam0, rel=0.15)
+    # heavier traffic => strictly less total reasoning budget deployed
+    assert end.budgets.sum() < mid[-1].budgets.sum()
+
+
+def test_replay_report_and_predicted(prob):
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(4000, prob.server.lam)], seed=37)
+    h = ReplayHarness(prob, ReplayConfig(block_size=512))
+    res = h.run_virtual(trace)
+    rep = res.report(prob)
+    assert rep.n == 4000
+    assert rep.estimator_state is not None
+    assert rep.mean_system_time == pytest.approx(
+        res.system_times.mean(), rel=1e-12)
+    pred = h.predicted(prob.server.lam)
+    assert rep.mean_system_time == pytest.approx(
+        pred["mean_system_time"], rel=0.25)
+    m = res.measured()
+    assert m["n"] == 3200 and m["ci95_system_time"] > 0
+
+
+def test_empty_trace_raises(prob):
+    h = ReplayHarness(prob)
+    empty = generate_drift_trace(prob.tasks, [Segment(1, 0.1)], seed=0)
+    with pytest.raises(ValueError):
+        h.run_virtual(empty.__class__(
+            arrivals=np.zeros(0), types=np.zeros(0, dtype=np.int64),
+            prompt_lens=np.zeros(0, dtype=np.int64),
+            correct_us=np.zeros(0), segment_ids=np.zeros(0, dtype=np.int64),
+            segments=(Segment(1, 0.1),), seed=0))
+
+
+def test_engine_lane_real_decodes(prob):
+    """A small real chunked-scan decode replay: wall-clock services drive
+    the Lindley twin, budgets are enforced per decode, and the estimator
+    calibrates a positive latency curve from measured wall times."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params, reduced
+    from repro.serving import DecodeEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"), d_model=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, params, cache_capacity=64, chunk=8)
+    small = Problem(tasks=prob.tasks,
+                    server=ServerParams(prob.server.lam, 2.0, 24.0))
+    rcfg = ReplayConfig(block_size=8, l_init=8, min_services=4,
+                        explore_frac=0.5, explore_min_spread=4,
+                        est_halflife=16.0)
+    trace = generate_drift_trace(prob.tasks, [Segment(24, 5.0)], seed=41,
+                                 prompt_len_range=(8, 8))
+    res = ReplayHarness(small, rcfg, engine=eng).run_engine(
+        trace, prompt_len=8, max_extra_tokens=0)
+    assert res.mode == "engine"
+    assert res.n == 24
+    assert (res.services > 0).all()
+    assert (res.budgets <= 24).all()
+    est = res.estimator_state
+    assert est["es"] > 0 and est["n_services"] == 24
+    assert np.all(np.asarray(est["t0"]) > 0)
+    # waits obey the Lindley recursion on the measured services
+    start = res.arrivals + res.waits
+    finish = start + res.services
+    assert np.all(start[1:] >= np.maximum(res.arrivals[1:], finish[:-1])
+                  - 1e-9)

@@ -201,3 +201,86 @@ def test_scheduler_rejects_unknown_discipline(prob):
 
     with pytest.raises(ValueError):
         Scheduler(TokenBudgetAllocator(prob), discipline="lifo")
+
+
+# ---------------------------------------------------------------------------
+# Serving-path correctness regressions (closed-loop PR satellites)
+# ---------------------------------------------------------------------------
+
+def test_observe_arrival_lambda_converges(prob):
+    """Regression: the allocator's online rate estimate must average the
+    inter-arrival GAPS and invert, never average 1/gap — E[1/X] diverges
+    for exponential gaps, so the old reciprocal EWMA was biased upward
+    without bound on long streams (one near-zero gap spiked it by ~w/gap).
+    On a long Poisson stream the estimate must settle near the true rate."""
+    from repro.core.allocator import TokenBudgetAllocator
+
+    lam = prob.server.lam
+    rng = np.random.default_rng(42)
+    alloc = TokenBudgetAllocator(prob)
+    t = 0.0
+    for gap in rng.exponential(1.0 / lam, size=20_000):
+        t += gap
+        alloc.observe_arrival(int(rng.integers(0, 6)), t)
+    est = alloc.estimator_state()
+    assert est["lam"] == pytest.approx(lam, rel=0.1)
+    # one pathological near-zero gap must not blow the estimate up
+    alloc.observe_arrival(0, t + 1e-12)
+    assert alloc.estimator_state()["lam"] == pytest.approx(lam, rel=0.1)
+
+
+def test_server_configs_not_shared(prob):
+    """Regression: ``LLMServer(prob)`` used a shared mutable default
+    ``ServerConfig()`` — mutating one server's config leaked into every
+    other server constructed without an explicit config."""
+    a = LLMServer(prob)
+    b = LLMServer(prob)
+    assert a.cfg is not b.cfg
+    a.cfg.batch_size = 64
+    a.cfg.mode = "wall"
+    assert b.cfg.batch_size == 1
+    assert b.cfg.mode == "virtual"
+
+
+def test_server_run_reentrant(prob):
+    """Regression: ``run`` never reset ``self.completed``, so a second run
+    summarized both streams' requests and inflated every statistic."""
+    srv = LLMServer(prob, ServerConfig(online_adaptation=False))
+    s = generate_stream(prob.tasks, prob.server.lam, 400, seed=21)
+    first = srv.run(s)
+    second = srv.run(s)
+    assert first.n == second.n == 400
+    assert second.mean_system_time == pytest.approx(
+        first.mean_system_time, rel=1e-12)
+    assert second.mean_wait == pytest.approx(first.mean_wait, rel=1e-12)
+
+
+def test_summarize_empty_returns_zeroed_report(prob):
+    """Regression: ``summarize`` raised ValueError on an empty completed
+    list (numpy mean of []); the contract is a zeroed report, matching
+    ``mg1.empty_result``."""
+    from repro.serving import empty_report, summarize
+
+    rep = summarize(prob, [], horizon=0.0)
+    assert rep.n == 0
+    assert rep.mean_system_time == 0.0
+    assert rep.per_task_budget == {}
+    zero = empty_report(n_resolves=3, estimator_state={"lam": 1.0})
+    assert zero.n_resolves == 3
+    assert zero.estimator_state == {"lam": 1.0}
+    # the server path: an empty stream runs end to end
+    from repro.queueing_sim.workload import Stream
+    srv = LLMServer(prob, ServerConfig(online_adaptation=False))
+    rep2 = srv.run(Stream(queries=(), lam=prob.server.lam, horizon=0.0))
+    assert rep2.n == 0 and rep2.estimator_state is not None
+
+
+def test_report_exposes_estimator_state(prob, stream):
+    """The online loop's estimates surface through ``ServingReport``."""
+    srv = LLMServer(prob, ServerConfig(online_adaptation=True))
+    rep = srv.run(stream)
+    st = rep.estimator_state
+    assert st is not None
+    assert st["n_arrivals"] == len(stream)
+    assert st["lam"] == pytest.approx(prob.server.lam, rel=0.25)
+    assert len(st["pi"]) == prob.tasks.n_tasks
