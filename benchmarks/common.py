@@ -1,30 +1,74 @@
-"""Shared benchmark utilities: CSV emission + timing."""
+"""Shared benchmark utilities: CSV emission + timing.
+
+``timed`` records EVERY repeat sample, not just the summary scalar: the
+returned value is a :class:`TimedUS` float (min or mean, unchanged
+contract — call sites keep doing arithmetic on it) that additionally
+carries ``samples``/``min``/``median``/``p95`` and a JSON-able ``stats``
+dict, so ``BENCH_*.json`` artifacts can gate variance regressions (a p95
+blow-up on a stable min), not only mean shifts.
+"""
 from __future__ import annotations
 
-import time
+import statistics
 
 
 def emit(name: str, value, derived: str = "") -> None:
     print(f"{name},{value},{derived}", flush=True)
 
 
+class TimedUS(float):
+    """Per-call microseconds with the full repeat-sample distribution.
+
+    Behaves exactly like the float ``timed`` used to return (min if
+    ``best`` else mean); the per-sample attributes ride along for
+    reporting.
+    """
+
+    samples: tuple
+    min: float
+    median: float
+    p95: float
+    mean: float
+
+    def __new__(cls, value: float, samples_us):
+        self = super().__new__(cls, value)
+        s = sorted(float(v) for v in samples_us)
+        self.samples = tuple(s)
+        self.min = s[0]
+        self.median = statistics.median(s)
+        # nearest-rank p95: the worst sample until repeat >= 20
+        self.p95 = s[min(len(s) - 1, max(0, -(-len(s) * 95 // 100) - 1))]
+        self.mean = statistics.fmean(s)
+        return self
+
+    @property
+    def stats(self) -> dict:
+        """JSON-able summary for ``BENCH_*.json`` timing entries."""
+        return {"min_us": self.min, "median_us": self.median,
+                "p95_us": self.p95, "mean_us": self.mean,
+                "n_samples": len(self.samples)}
+
+
 def timed(fn, *args, repeat: int = 3, warmup: int = 1, best: bool = False,
           **kwargs):
-    """Returns (result, microseconds per call).
+    """Returns (result, microseconds per call) — a :class:`TimedUS`.
 
     ``warmup`` untimed calls run first so jit compilation (and any
     first-call cache/tracing work) is excluded from the timed repeats —
     per-call figures like ``decode_us_per_token`` must never average in
     compile time. ``best=True`` reports the FASTEST repeat instead of the
     mean (the standard microbenchmark estimator: rejects scheduler noise
-    on shared/small machines instead of averaging it in).
+    on shared/small machines instead of averaging it in); either way the
+    full sample list is preserved on the returned value.
     """
+    from repro.obs.trace import monotonic
+
     for _ in range(max(warmup, 0)):
         out = fn(*args, **kwargs)
     times = []
     for _ in range(repeat):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         out = fn(*args, **kwargs)
-        times.append(time.perf_counter() - t0)
+        times.append(monotonic() - t0)
     us = (min(times) if best else sum(times) / len(times)) * 1e6
-    return out, us
+    return out, TimedUS(us, [t * 1e6 for t in times])

@@ -78,6 +78,10 @@ def bench_arch(arch: str, repeat: int, grid: dict) -> dict:
         "greedy_equal": True,
         "decode_us_per_token_loop": us_loop / toks,
         "decode_us_per_token_scan": us_scan / toks,
+        # full repeat-sample distributions (min/median/p95): variance
+        # regressions are gateable, not just mean shifts
+        "timing_loop": us_loop.stats,
+        "timing_scan": us_scan.stats,
     }
 
 

@@ -63,12 +63,25 @@ def virtual_lane(prob, n_queries: int) -> dict:
                          / np.asarray(prob.tasks.c)))
     m = res.measured()
     pred = h.predicted(lam)
+    # tail scoring: measured wait percentiles (exact, from the report)
+    # vs the M/G/1 exponential-tail prediction at the deployed budgets
+    rep = res.report(prob)
+    comp = frontier_comparison(
+        [m["accuracy_prob"]], [m["mean_system_time"]],
+        [pred["accuracy"]], [pred["mean_system_time"]],
+        measured_percentiles=rep.wait_percentiles,
+        predicted_percentiles=pred["wait_percentiles"],
+        drift=rep.drift)
     emit("replay.virtual.queries_per_s", f"{n_queries / elapsed:.0f}",
          f"n={n_queries}, resolves={res.n_resolves}")
     emit("replay.virtual.budget_linf_gap", gap,
          f"final={list(res.final_budgets)}, oracle={list(oracle)}")
     emit("replay.virtual.lam_accuracy", f"{lam_acc:.4f}",
          f"lam_hat={est['lam']:.5f}, true={lam}")
+    emit("replay.virtual.p90_wait_rel_gap",
+         f"{comp['rel_gap_percentiles'].get('p90', 0.0):.3f}",
+         f"measured={rep.wait_percentiles.get('p90', 0.0):.3f}s, "
+         f"exp-tail={pred['wait_percentiles'].get('p90', 0.0):.3f}s")
     return {
         "n_queries": n_queries,
         "elapsed_s": elapsed,
@@ -81,6 +94,9 @@ def virtual_lane(prob, n_queries: int) -> dict:
         "predicted_system_time": pred["mean_system_time"],
         "measured_accuracy_prob": m["accuracy_prob"],
         "predicted_accuracy": pred["accuracy"],
+        "measured_wait_percentiles": rep.wait_percentiles,
+        "predicted_wait_percentiles": pred["wait_percentiles"],
+        "rel_gap_percentiles": comp["rel_gap_percentiles"],
         "estimation": {
             "lam_hat": est["lam"], "lam_true": lam,
             "lam_accuracy": lam_acc,

@@ -1,0 +1,97 @@
+"""Observability walkthrough: trace a serving run, open it in Perfetto.
+
+Instruments the closed-loop replay harness end to end with the ``obs``
+subsystem and shows each output surface:
+
+1. **Request tracing** — every completed request becomes a span tree
+   (admit -> prefill -> decode -> retire) on the simulated-clock
+   timeline, with controller re-solves marked as instants and wall-clock
+   solver spans on a second track. The trace is written as standard
+   Chrome trace-event JSON: drag ``obs_trace.json`` onto
+   https://ui.perfetto.dev (or ``chrome://tracing``) and you get a
+   zoomable per-request waterfall of the whole run, plus a
+   tokens-in-flight counter track.
+2. **Streaming histograms** — wait / service / system-time distributions
+   folded per control block into log-bucketed histograms (exact-bound
+   percentiles, <3.2% relative error at the default 5 bits).
+3. **Drift monitor** — predicted-vs-measured wait comparison at the
+   estimator's operating point; in ``resolve_mode="drift"`` the
+   controller re-solves on the alarm rather than a blind block cadence.
+4. **Compile guards** — every jitted entry point is labeled through
+   ``compat.jit``; after the run, one trace per entry point proves the
+   ragged budgets never caused a recompile storm.
+
+    PYTHONPATH=src python examples/observe_serving.py
+"""
+import json
+
+import numpy as np
+
+from repro.core import paper_problem
+from repro.obs import (MetricsRegistry, Tracer, jax_hooks,
+                       validate_request_trees)
+from repro.queueing_sim import Segment, generate_drift_trace
+from repro.serving import ReplayConfig, ReplayHarness
+
+TRACE_PATH = "obs_trace.json"
+
+
+def main():
+    prob = paper_problem()
+    # a drifting workload: arrival rate more than doubles mid-stream
+    trace = generate_drift_trace(
+        prob.tasks, [Segment(3000, 0.2), Segment(3000, 0.45)], seed=42)
+
+    tracer = Tracer()
+    metrics = MetricsRegistry()
+    harness = ReplayHarness(
+        prob,
+        ReplayConfig(block_size=128, resolve_mode="drift"),
+        tracer=tracer, metrics=metrics)
+    result = harness.run_virtual(trace)
+    report = result.report(prob)
+
+    print("=== run ===")
+    print(f"requests served      : {report.n}")
+    print(f"controller re-solves : {result.n_resolves} "
+          f"(drift-gated, not cadence)")
+    print(f"mean wait            : {report.mean_wait:.3f} s")
+
+    print("\n=== streaming percentiles (per-block histogram folds) ===")
+    snap = metrics.snapshot()
+    for name in ("replay.wait", "replay.system_time"):
+        d = snap[name].as_dict()
+        print(f"{name:<20} p50={d['p50']:.3f}  p90={d['p90']:.3f}  "
+              f"p99={d['p99']:.3f}  (n={d['n']})")
+    print("exact report fields  :", {k: round(v, 3) for k, v in
+                                     report.wait_percentiles.items()})
+
+    print("\n=== drift monitor (predicted vs measured) ===")
+    last = report.drift
+    print(f"reason={last['reason']}  rel_err={last['rel_err']:.3f}  "
+          f"rho={last['rho']:.3f}  strikes={last['strikes']}")
+
+    print("\n=== compile guards ===")
+    print(json.dumps(jax_hooks.snapshot(), indent=2))
+    print("(a virtual-clock replay dispatches no engine, so counts are "
+          "empty; real-token runs show one trace per labeled jit entry "
+          "point — see tests/test_obs_jax_hooks.py)")
+
+    # the acceptance contract: a complete, well-formed span tree for
+    # EVERY request, programmatically checked before export
+    info = validate_request_trees(tracer.to_chrome(), range(trace.n))
+    tracer.dump(TRACE_PATH)
+    print(f"\n=== trace ===\n{info['n_events']} events, "
+          f"{info['n_requests']} validated request trees")
+    print(f"wrote {TRACE_PATH} — open it at https://ui.perfetto.dev "
+          "(Ctrl+O / drag-and-drop), then:")
+    print("  * process 'queueing timeline (virtual clock)': per-request "
+          "admit/prefill/decode spans + re-solve instants;")
+    print("  * process 'engine (wall clock)': controller.resolve solver "
+          "spans;")
+    print("  * the replay.tokens_in_flight counter track shows load "
+          "ramping at the drift point.")
+
+
+if __name__ == "__main__":
+    main()

@@ -52,7 +52,7 @@ def donation_supported() -> bool:
     return deleted and not warned
 
 
-def jit(fun, *, donate_argnums=(), **kwargs):
+def jit(fun, *, donate_argnums=(), label=None, **kwargs):
     """``jax.jit`` that requests buffer donation only where it is honored.
 
     The serving engines route every cache-threading entry point (prefill
@@ -60,7 +60,17 @@ def jit(fun, *, donate_argnums=(), **kwargs):
     is updated in place on backends that support donation, and silently
     falls back to copying semantics (no per-call warnings) on backends
     that do not.
+
+    ``label`` registers the entry point with ``obs.jax_hooks``: the python
+    function is wrapped so each JAX *trace* (compilation) increments the
+    label's counter, making retraces observable and assertable
+    (``obs.jax_hooks.assert_max_compiles``). Per-call cost after tracing
+    is zero — jit caches the traced computation, the wrapper only runs
+    while tracing.
     """
+    if label is not None:
+        from .obs import jax_hooks
+        fun = jax_hooks.count_traces(fun, label)
     if donate_argnums and donation_supported():
         return jax.jit(fun, donate_argnums=donate_argnums, **kwargs)
     return jax.jit(fun, **kwargs)

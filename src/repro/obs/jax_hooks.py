@@ -1,0 +1,118 @@
+"""Recompile and host<->device transfer counters for jitted entry points.
+
+``compat.jit(fn, label="engine.step")`` threads every jitted entry point
+through :func:`count_traces`: the *python* function is wrapped before
+``jax.jit`` sees it, and since JAX only invokes the underlying python
+function while tracing, each wrapper invocation is exactly one trace (one
+compilation per distinct input signature). That turns claims like "one
+compile serves all budgets" (chunked-scan decode, PR 4) into asserted
+invariants: run the workload, then ``assert_max_compiles("engine.scan",
+1)`` — a silent retrace (shape leak, weak-type flip, forgotten static
+arg) fails loudly instead of shipping a 100x slowdown.
+
+:func:`to_host` is the counted device->host transfer point: it wraps
+``np.asarray`` / ``jax.device_get`` and increments a per-label counter,
+so benchmark lanes can audit how many host syncs a decode path performs
+per request.
+
+Disabled-path cost contract: counting is always on (a dict increment per
+*compilation*, not per call — compilation is seconds, the increment is
+nanoseconds) and the per-call overhead of the wrapper is zero after
+tracing because JAX caches the traced computation keyed on the wrapper.
+``to_host`` adds one dict increment per host sync, which the <3% decode
+overhead gate in ``benchmarks/obs_bench.py`` covers.
+
+The registry is process-global (compilation caches are process-global
+too); tests isolate with :func:`reset`.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+
+__all__ = ["count_traces", "trace_counts", "transfer_counts", "to_host",
+           "assert_max_compiles", "reset", "snapshot"]
+
+_lock = threading.Lock()
+_trace_counts: dict = {}      # label -> number of traces (compilations)
+_transfer_counts: dict = {}   # label -> number of device->host transfers
+
+
+def count_traces(fn, label: str):
+    """Wrap ``fn`` so each JAX trace of it increments ``label``'s counter.
+
+    Must wrap the *python* function BEFORE ``jax.jit`` — jit invokes the
+    wrapped function only during tracing, so wrapper invocations count
+    compilations exactly. ``functools.wraps`` preserves the signature so
+    ``static_argnames`` on the jit still resolves.
+    """
+    @functools.wraps(fn)
+    def counted(*args, **kwargs):
+        with _lock:
+            _trace_counts[label] = _trace_counts.get(label, 0) + 1
+        return fn(*args, **kwargs)
+
+    return counted
+
+
+def trace_counts() -> dict:
+    """``{label: n_traces}`` for every labeled jitted entry point."""
+    with _lock:
+        return dict(_trace_counts)
+
+
+def transfer_counts() -> dict:
+    """``{label: n_transfers}`` for every labeled host-sync site."""
+    with _lock:
+        return dict(_transfer_counts)
+
+
+def to_host(x, label: str = "to_host"):
+    """Counted device->host transfer: ``np.asarray`` + counter increment.
+
+    The audit point for host syncs on the decode fast path — each call is
+    one device->host round trip (a blocking sync when ``x`` is a device
+    array).
+    """
+    import numpy as np
+
+    with _lock:
+        _transfer_counts[label] = _transfer_counts.get(label, 0) + 1
+    return np.asarray(x)
+
+
+def assert_max_compiles(label: str, max_compiles: int) -> int:
+    """Assert ``label`` compiled at most ``max_compiles`` times; returns
+    the observed count.
+
+    The regression guard for "one compile serves all budgets": a retrace
+    means some input signature leaked into the traced computation.
+    """
+    n = trace_counts().get(label, 0)
+    if n > max_compiles:
+        raise AssertionError(
+            f"jitted entry point {label!r} compiled {n} times "
+            f"(allowed {max_compiles}); a retrace leaked into the fast "
+            f"path — check for shape/dtype/static-arg churn")
+    return n
+
+
+def reset(label: str | None = None) -> None:
+    """Clear counters (all labels, or just one) — test isolation hook.
+
+    Note this clears the *counters*, not JAX's compilation cache: a
+    function already compiled for a signature will not re-trace, so after
+    ``reset()`` counts reflect only NEW signatures.
+    """
+    with _lock:
+        if label is None:
+            _trace_counts.clear()
+            _transfer_counts.clear()
+        else:
+            _trace_counts.pop(label, None)
+            _transfer_counts.pop(label, None)
+
+
+def snapshot() -> dict:
+    """JSON-able ``{"traces": {...}, "transfers": {...}}``."""
+    return {"traces": trace_counts(), "transfers": transfer_counts()}

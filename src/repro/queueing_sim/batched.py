@@ -278,11 +278,21 @@ def simulate_fifo(problem: Problem, lengths, stream: Stream,
 
 
 def simulate_fifo_batch(problem: Problem, lengths, batch: StreamBatch,
-                        backend: str = "numpy") -> BatchStats:
+                        backend: str = "numpy", metrics=None) -> BatchStats:
     """Simulate a policy stack against a seed batch in one call.
 
     ``lengths``: ``[N]`` or ``[P, N]`` token budgets; ``batch``: ``[S, n]``
     streams. Returns :class:`BatchStats` with shape ``[S]`` or ``[P, S]``.
+
+    ``metrics`` (an ``obs.metrics.MetricsRegistry``) folds the full
+    per-query wait / system-time distributions into the ``des.wait`` /
+    ``des.system_time`` streaming histograms — one vectorized pass over
+    the whole ``[P, S, n]`` tensor, so percentile-grade statistics ride a
+    sweep for a few integer passes. Because histogram snapshots merge
+    associatively, per-seed lanes folded separately (e.g. by
+    ``obs.metrics.histogram_per_lane``) combine bit-identically with this
+    whole-tensor fold. ``metrics=None`` (default) costs one ``is None``
+    check.
     """
     lengths = np.asarray(lengths, dtype=np.float64)
     single = lengths.ndim == 1
@@ -291,6 +301,11 @@ def simulate_fifo_batch(problem: Problem, lengths, batch: StreamBatch,
     p_table = _accuracy_table(problem, L)                # [P, N]
     services = t_table[:, batch.types]                   # [P, S, n]
     start, finish = _lindley(batch.arrivals, services, backend)
+    if metrics is not None:
+        metrics.histogram("des.wait").record_many(start - batch.arrivals)
+        metrics.histogram("des.system_time").record_many(
+            finish - batch.arrivals)
+        metrics.counter("des.queries").inc(start.size)
     stats = _batch_stats_tabular(problem, t_table, p_table, batch.types,
                                  batch.arrivals, batch.correct_us, start,
                                  finish, finish[..., -1])

@@ -40,6 +40,7 @@ it would produce alone.
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -66,7 +67,7 @@ class Slot:
 class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params, max_slots: int = 4,
                  capacity: int = 512, chunk: int = 8,
-                 use_decode_kernel: bool = False):
+                 use_decode_kernel: bool = False, tracer=None):
         if use_decode_kernel:
             cfg = dataclasses.replace(cfg, use_decode_kernel=True)
         self.cfg = cfg
@@ -74,16 +75,24 @@ class ContinuousBatchingEngine:
         self.max_slots = max_slots
         self.capacity = capacity
         self.chunk = chunk
+        # optional wall-span tracing of admission/decode dispatches; one
+        # `is not None` check per dispatch when disabled. Jit labels feed
+        # the obs.jax_hooks compile counters (per compile, not per call).
+        self.tracer = tracer
         from ..models import init_decode_cache
         # per-slot positions: broadcast every `length` leaf to [L..., B]
         self.cache = self._with_vector_lengths(
             init_decode_cache(cfg, max_slots, capacity))
         self.slots: list = [None] * max_slots
-        self._prefill = jax.jit(self._prefill_impl)
-        self._step = compat.jit(self._step_impl, donate_argnums=(2,))
+        self._prefill = compat.jit(self._prefill_impl,
+                                   label="continuous.prefill")
+        self._step = compat.jit(self._step_impl, donate_argnums=(2,),
+                                label="continuous.step")
         self._scan = compat.jit(self._scan_impl, donate_argnums=(2,),
-                                static_argnames=("chunk",))
-        self._insert = compat.jit(self._insert_impl, donate_argnums=(1,))
+                                static_argnames=("chunk",),
+                                label="continuous.scan")
+        self._insert = compat.jit(self._insert_impl, donate_argnums=(1,),
+                                  label="continuous.insert")
 
     # ------------------------------------------------------------ internals
     def _with_vector_lengths(self, cache):
@@ -228,11 +237,16 @@ class ContinuousBatchingEngine:
             tokens = np.zeros((len(group), S), dtype=np.int32)
             for r, (_, req) in enumerate(group):
                 tokens[r, :lengths[r]] = req[1]
-            firsts, row_cache = self._prefill(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths))
-            slot_idx = jnp.asarray([slot for slot, _ in group], jnp.int32)
-            self.cache = self._insert(row_cache, self.cache, slot_idx,
-                                      jnp.asarray(lengths))
+            ctx = (self.tracer.span("continuous.admit", cat="engine",
+                                    args={"rows": len(group), "S": S})
+                   if self.tracer is not None else nullcontext())
+            with ctx:
+                firsts, row_cache = self._prefill(
+                    self.params, jnp.asarray(tokens), jnp.asarray(lengths))
+                slot_idx = jnp.asarray([slot for slot, _ in group],
+                                       jnp.int32)
+                self.cache = self._insert(row_cache, self.cache, slot_idx,
+                                          jnp.asarray(lengths))
             firsts = np.asarray(firsts)
             for r, (slot, (rid, _, budget, max_extra)) in enumerate(group):
                 first = int(firsts[r])
@@ -288,9 +302,14 @@ class ContinuousBatchingEngine:
         remaining = jnp.asarray(
             [s.budget + s.max_extra - s.generated if s else 0
              for s in self.slots], jnp.int32)
-        toks, self.cache = self._scan(self.params, token, self.cache,
-                                      alive, remaining, chunk=chunk)
-        toks = np.asarray(toks)                      # [chunk, S]
+        ctx = (self.tracer.span("continuous.decode_chunk", cat="engine",
+                                args={"chunk": chunk,
+                                      "occupancy": self.n_active})
+               if self.tracer is not None else nullcontext())
+        with ctx:
+            toks, self.cache = self._scan(self.params, token, self.cache,
+                                          alive, remaining, chunk=chunk)
+            toks = np.asarray(toks)                  # [chunk, S]
         finished = []
         for i, s in enumerate(self.slots):
             if s is None:

@@ -42,6 +42,7 @@ import numpy as np
 from .. import compat
 from ..models import decode_step, forward, sample
 from ..models.config import ModelConfig
+from ..obs import jax_hooks
 
 Array = jnp.ndarray
 
@@ -49,7 +50,8 @@ Array = jnp.ndarray
 class DecodeEngine:
     def __init__(self, cfg: ModelConfig, params, cache_capacity: int = 512,
                  temperature: float = 0.0, chunk: int = 16,
-                 use_scan: bool = True, use_decode_kernel: bool = False):
+                 use_scan: bool = True, use_decode_kernel: bool = False,
+                 tracer=None):
         if use_decode_kernel:
             cfg = dataclasses.replace(cfg, use_decode_kernel=True)
         self.cfg = cfg
@@ -58,11 +60,19 @@ class DecodeEngine:
         self.temperature = temperature
         self.chunk = chunk
         self.use_scan = use_scan
-        self._prefill = jax.jit(self._prefill_impl,
-                                static_argnames=("capacity",))
-        self._step = compat.jit(self._step_impl, donate_argnums=(2,))
+        # observability: wall spans around prefill/chunk dispatches when a
+        # Tracer is attached; disabled path is one `is not None` per
+        # dispatch. The jit labels feed obs.jax_hooks compile counters
+        # unconditionally (increments happen per COMPILE, not per call).
+        self.tracer = tracer
+        self._prefill = compat.jit(self._prefill_impl,
+                                   static_argnames=("capacity",),
+                                   label="engine.prefill")
+        self._step = compat.jit(self._step_impl, donate_argnums=(2,),
+                                label="engine.step")
         self._scan = compat.jit(self._scan_impl, donate_argnums=(2,),
-                                static_argnames=("chunk", "eos_token"))
+                                static_argnames=("chunk", "eos_token"),
+                                label="engine.scan")
 
     # ------------------------------------------------------------- internals
     def _prefill_impl(self, params, tokens, prefix_embeds, *, capacity):
@@ -135,10 +145,19 @@ class DecodeEngine:
         assert budgets.shape == (B,)
         total = budgets + max_extra_tokens
         T = int(total.max())
-        logits, cache = self._prefill(
-            self.params, jnp.asarray(prompts, jnp.int32),
-            None if prefix_embeds is None else jnp.asarray(prefix_embeds),
-            capacity=self.capacity)
+        if self.tracer is not None:
+            with self.tracer.span("engine.prefill", cat="engine",
+                                  args={"B": B, "S": S}):
+                logits, cache = self._prefill(
+                    self.params, jnp.asarray(prompts, jnp.int32),
+                    None if prefix_embeds is None
+                    else jnp.asarray(prefix_embeds),
+                    capacity=self.capacity)
+        else:
+            logits, cache = self._prefill(
+                self.params, jnp.asarray(prompts, jnp.int32),
+                None if prefix_embeds is None else jnp.asarray(prefix_embeds),
+                capacity=self.capacity)
         greedy = self.temperature <= 0.0
         if key is None and not greedy:
             key = jax.random.PRNGKey(seed)
@@ -167,11 +186,22 @@ class DecodeEngine:
         budgets_d = jnp.asarray(budgets)
         pieces = []
         emitted = 0
+        tracer = self.tracer
         while emitted < T:
-            toks, token, cache, alive, n_gen, key = self._scan(
-                self.params, token, cache, alive, n_gen, total_d, budgets_d,
-                key, chunk=chunk, eos_token=eos_token)
-            pieces.append(np.asarray(toks))
+            if tracer is not None:
+                with tracer.span("engine.decode_chunk", cat="engine",
+                                 args={"chunk": chunk, "emitted": emitted}):
+                    toks, token, cache, alive, n_gen, key = self._scan(
+                        self.params, token, cache, alive, n_gen, total_d,
+                        budgets_d, key, chunk=chunk, eos_token=eos_token)
+                    # device->host sync is part of the dispatch span: the
+                    # host blocks here until the chunk's tokens land
+                    pieces.append(jax_hooks.to_host(toks, "engine.chunk"))
+            else:
+                toks, token, cache, alive, n_gen, key = self._scan(
+                    self.params, token, cache, alive, n_gen, total_d,
+                    budgets_d, key, chunk=chunk, eos_token=eos_token)
+                pieces.append(np.asarray(toks))
             emitted += chunk
             if not bool(np.any(np.asarray(alive))):   # one sync per chunk
                 break

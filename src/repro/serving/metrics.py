@@ -9,6 +9,25 @@ import numpy as np
 from ..core.params import Problem
 from .request import CompletedRequest
 
+#: percentiles every report carries (keys "p50", "p90", "p99", "p99_9")
+REPORT_PERCENTILES = (50.0, 90.0, 99.0, 99.9)
+
+
+def percentile_summary(values) -> dict:
+    """Exact-percentile dict for a report field; {} on empty input.
+
+    Same keys AND same order-statistic semantics (inverted CDF) as
+    ``obs.metrics.HistogramSnapshot.percentiles``, so exact (array-path)
+    and streaming (histogram-path) producers are interchangeable in
+    ``ServingReport`` up to the histogram's bucket error.
+    """
+    v = np.asarray(values, dtype=np.float64)
+    if v.size == 0:
+        return {}
+    return {f"p{q:g}".replace(".", "_"):
+            float(np.percentile(v, q, method="inverted_cdf"))
+            for q in REPORT_PERCENTILES}
+
 
 @dataclasses.dataclass
 class ServingReport:
@@ -29,6 +48,14 @@ class ServingReport:
     # online-estimator snapshot (lambda/pi/moment estimates at the end of
     # the run); None when the producer has no estimation loop
     estimator_state: dict | None = None
+    # percentile summaries of the wait / system-time distributions
+    # ({"p50": ..., "p90": ..., "p99": ..., "p99_9": ...}); None from
+    # legacy producers that only report means
+    wait_percentiles: dict | None = None
+    system_time_percentiles: dict | None = None
+    # last predicted-vs-measured drift check (obs.monitor
+    # DriftReport.as_dict()); None when no monitor ran
+    drift: dict | None = None
 
 
 def empty_report(n_resolves: int = 0,
@@ -47,7 +74,8 @@ def empty_report(n_resolves: int = 0,
 
 def summarize(problem: Problem, completed: Sequence[CompletedRequest],
               horizon: float, n_resolves: int = 0,
-              estimator_state: dict | None = None) -> ServingReport:
+              estimator_state: dict | None = None,
+              drift: dict | None = None) -> ServingReport:
     if not completed:
         # empty-stream contract shared with the simulators (see
         # ``mg1.empty_result``): zeroed statistics, never a ValueError
@@ -86,4 +114,7 @@ def summarize(problem: Problem, completed: Sequence[CompletedRequest],
         tokens_generated=int(sum(c.n_tokens for c in completed)),
         n_resolves=n_resolves,
         estimator_state=estimator_state,
+        wait_percentiles=percentile_summary(waits),
+        system_time_percentiles=percentile_summary(syst),
+        drift=drift,
     )

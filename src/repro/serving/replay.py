@@ -46,17 +46,18 @@ server that re-solves on a timer rather than per arrival.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import numpy as np
 
 from ..core.params import Problem, TaskSet
 from ..core.queueing import mean_system_time, service_moments
+from ..obs.monitor import DriftMonitor
+from ..obs.trace import VIRTUAL_PID, timecall
 from ..queueing_sim.batched import lindley_numpy
 from ..queueing_sim.workload import DriftTrace
 from .estimators import EstimatorState, OnlineEstimators
-from .metrics import ServingReport
+from .metrics import ServingReport, percentile_summary
 
 __all__ = ["ReplayConfig", "Controller", "BlockRecord", "ReplayResult",
            "ReplayHarness"]
@@ -70,6 +71,13 @@ class ReplayConfig:
     l_init: int = 64               # uninformed initial budget (all tasks)
     warmup_blocks: int = 1         # blocks before the first re-solve
     resolve_every: int = 1         # re-solve cadence, in blocks
+    # re-solve trigger: "cadence" = blind block clock (above);
+    # "drift" = one bootstrap resolve after warmup, then only when the
+    # obs.monitor predicted-vs-measured drift alarm fires
+    resolve_mode: str = "cadence"
+    drift_rel_tol: float = 0.25    # mean-wait relative error per strike
+    drift_patience: int = 2        # consecutive strikes before firing
+    drift_min_samples: int = 64    # waits in window before checks are live
     # estimator memory
     est_mode: str = "ewma"         # "ewma" | "window"
     est_halflife: float = 2048.0   # observations (ewma mode)
@@ -97,6 +105,9 @@ class BlockRecord:
     mean_wait: float
     mean_service: float
     estimator: dict                # EstimatorState.as_dict() after the block
+    # predicted-vs-measured drift check after this block
+    # (obs.monitor DriftReport.as_dict()); None outside drift mode
+    drift: dict | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +181,10 @@ class ReplayResult:
             tokens_generated=int(self.budgets.sum()),
             n_resolves=self.n_resolves,
             estimator_state=self.estimator_state,
+            wait_percentiles=percentile_summary(self.waits),
+            system_time_percentiles=percentile_summary(syst),
+            drift=next((b.drift for b in reversed(self.blocks)
+                        if b.drift is not None), None),
         )
 
 
@@ -250,11 +265,22 @@ class ReplayHarness:
     """The plant: replays a trace against the controller, virtual or real."""
 
     def __init__(self, problem: Problem, cfg: Optional[ReplayConfig] = None,
-                 engine=None):
+                 engine=None, tracer=None, metrics=None, monitor=None):
         self.problem = problem
         self.cfg = cfg or ReplayConfig()
         self.engine = engine
         self.controller = Controller.from_problem(problem, self.cfg)
+        # observability: tracer (obs.trace.Tracer) emits per-request span
+        # trees + re-solve spans; metrics (obs.metrics.MetricsRegistry)
+        # folds wait/service/system-time histograms per block. Both are
+        # None by default — one `is not None` check per block when off.
+        self.tracer = tracer
+        self.metrics = metrics
+        if monitor is None and self.cfg.resolve_mode == "drift":
+            monitor = DriftMonitor(rel_tol=self.cfg.drift_rel_tol,
+                                   patience=self.cfg.drift_patience,
+                                   min_samples=self.cfg.drift_min_samples)
+        self.monitor = monitor
 
     # ------------------------------------------------------------- internals
     def _stamp_budgets(self, types: np.ndarray,
@@ -286,13 +312,59 @@ class ReplayHarness:
         prompt = (np.arange(prompt_len) % 97 + 1).astype(np.int32)[None, :]
         out = np.empty(budgets.shape[0])
         for i, l in enumerate(budgets):
-            w0 = time.perf_counter()
-            res = self.engine.generate(prompt, [int(l)],
-                                       max_extra_tokens=max_extra_tokens)
-            out[i] = time.perf_counter() - w0
+            # measured through the shared monotonic timing helper — same
+            # semantics as LLMServer wall mode and the serving benches
+            res, out[i] = timecall(self.engine.generate, prompt, [int(l)],
+                                   max_extra_tokens=max_extra_tokens)
             assert int(res["n_reasoning"][0]) == min(
                 int(l), int(res["n_generated"][0]))
         return out
+
+    def _resolve_traced(self, ctl: Controller, ts_virtual: float) -> bool:
+        """Controller re-solve, wall-span traced + marked on the virtual
+        timeline when a tracer is attached."""
+        if self.tracer is None:
+            return ctl.resolve()
+        with self.tracer.span("controller.resolve", cat="controller"):
+            resolved = ctl.resolve()
+        if resolved:
+            self.tracer.instant("resolve", ts_s=ts_virtual, tid=1,
+                                pid=VIRTUAL_PID, cat="controller",
+                                args={"budgets":
+                                      [int(v) for v in ctl.budgets]})
+        return resolved
+
+    def _trace_block(self, b0: int, a, k, l, s, start, finish) -> None:
+        """Emit one control block's per-request span trees.
+
+        Virtual-timeline tree per request (rid = global trace index):
+        request = [arrival, finish] with children tiling it — admit
+        (queueing wait), prefill (the latency model's fixed cost t0_k,
+        capped at the realized service), decode (the remainder) — and a
+        retire instant at the finish. ``validate_request_trees`` asserts
+        exactly this shape for every completed request.
+        """
+        t = self.tracer
+        t0 = np.asarray(self.problem.tasks.t0)
+        pf = np.minimum(t0[k], s)
+        for i in range(a.shape[0]):
+            rid = b0 + i
+            args = {"rid": rid}
+            t.complete("request", float(a[i]), float(finish[i] - a[i]),
+                       pid=VIRTUAL_PID, cat="request",
+                       args={"rid": rid, "task": int(k[i]),
+                             "budget": int(l[i])})
+            t.complete("admit", float(a[i]), float(start[i] - a[i]),
+                       pid=VIRTUAL_PID, cat="request", args=args)
+            t.complete("prefill", float(start[i]), float(pf[i]),
+                       pid=VIRTUAL_PID, cat="request", args=args)
+            t.complete("decode", float(start[i] + pf[i]),
+                       float(finish[i] - start[i] - pf[i]),
+                       pid=VIRTUAL_PID, cat="request", args=args)
+            t.instant("retire", float(finish[i]), pid=VIRTUAL_PID,
+                      cat="request", args=args)
+        t.counter("replay.tokens_in_flight", ts_s=float(a[-1]),
+                  pid=VIRTUAL_PID, tokens=float(np.sum(l)))
 
     def _accuracy(self, types, budgets, correct_us):
         t = self.problem.tasks
@@ -331,14 +403,38 @@ class ReplayHarness:
             prev_finish = float(finish[-1])
             budgets[idx], services[idx] = l, s
             waits[idx] = start - a
+            if self.metrics is not None:
+                self.metrics.histogram("replay.wait").record_many(waits[idx])
+                self.metrics.histogram("replay.service").record_many(s)
+                self.metrics.histogram("replay.system_time").record_many(
+                    finish - a)
+                self.metrics.counter("replay.requests").inc(b1 - b0)
+            if self.tracer is not None:
+                self._trace_block(b0, a, k, l, s, start, finish)
             resolved = False
+            drift_rec = None
             if adaptive:
                 ctl.observe(a, k, l, s)
                 n_done = len(blocks) + 1      # blocks observed so far
-                if (n_done > cfg.warmup_blocks
-                        and (n_done - cfg.warmup_blocks)
-                        % cfg.resolve_every == 0):
-                    resolved = ctl.resolve()
+                if self.monitor is not None:
+                    self.monitor.observe(waits[idx])
+                if cfg.resolve_mode == "drift" and self.monitor is not None:
+                    rep = self.monitor.check(ctl.state().as_dict())
+                    drift_rec = rep.as_dict()
+                    # bootstrap: the very first resolve still runs on the
+                    # warmup clock (no drift exists against the uninformed
+                    # l_init point), after which only the alarm re-solves
+                    due = (rep.fired
+                           or (ctl.n_resolves == 0
+                               and n_done > cfg.warmup_blocks))
+                else:
+                    due = (n_done > cfg.warmup_blocks
+                           and (n_done - cfg.warmup_blocks)
+                           % cfg.resolve_every == 0)
+                if due:
+                    resolved = self._resolve_traced(ctl, float(a[-1]))
+                    if resolved and self.monitor is not None:
+                        self.monitor.note_resolve()
             blocks.append(BlockRecord(
                 index=len(blocks), n=b1 - b0,
                 t_start=float(a[0]), t_end=float(a[-1]),
@@ -347,7 +443,8 @@ class ReplayHarness:
                 resolved=resolved,
                 mean_wait=float(waits[idx].mean()),
                 mean_service=float(s.mean()),
-                estimator=ctl.state().as_dict()))
+                estimator=ctl.state().as_dict(),
+                drift=drift_rec))
         p, correct = self._accuracy(trace.types, budgets, trace.correct_us)
         return ReplayResult(
             arrivals=trace.arrivals.copy(), types=trace.types.copy(),
@@ -388,17 +485,29 @@ class ReplayHarness:
         """P-K prediction (eqs 5-6) at the plant's TRUE parameters for the
         deployed budgets — what the twin *should* measure if the loop
         converged and the physics matches the model."""
+        from ..core.queueing import mean_wait
+        from ..obs.monitor import predicted_wait_quantile
         lengths = self.controller.budgets if lengths is None else lengths
         lengths = np.asarray(lengths, dtype=np.float64)
         t = self.problem.tasks
         m = service_moments(t, lengths, lam)
         acc = float(np.sum(np.asarray(t.pi)
                            * np.asarray(t.accuracy(lengths))))
+        w = float(mean_wait(m, lam))
+        rho = float(m.rho)
         return {
             "lengths": [int(v) for v in lengths],
             "accuracy": acc,
             "mean_system_time": float(mean_system_time(m, lam)),
-            "rho": float(m.rho),
+            "mean_wait": w,
+            # exponential-tail wait quantiles (same approximation the
+            # drift monitor scores against) — the predicted side of
+            # frontier_comparison's percentile gaps
+            "wait_percentiles": {
+                f"p{q:g}".replace(".", "_"):
+                    predicted_wait_quantile(q, w, rho)
+                for q in (50.0, 90.0, 99.0, 99.9)},
+            "rho": rho,
             "es": float(m.es),
             "es2": float(m.es2),
         }

@@ -24,13 +24,13 @@ decode path end to end.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import numpy as np
 
 from ..core.allocator import TokenBudgetAllocator
 from ..core.params import Problem
+from ..obs.trace import VIRTUAL_PID, timecall
 from ..queueing_sim.workload import Stream
 from .continuous import ContinuousBatchingEngine
 from .engine import DecodeEngine
@@ -54,7 +54,8 @@ class LLMServer:
     def __init__(self, problem: Problem,
                  server_cfg: Optional[ServerConfig] = None,
                  engine: Optional["DecodeEngine | ContinuousBatchingEngine"] = None,
-                 allocator: Optional[TokenBudgetAllocator] = None):
+                 allocator: Optional[TokenBudgetAllocator] = None,
+                 tracer=None, metrics=None):
         self.problem = problem
         # construct the default per instance: a shared `ServerConfig()`
         # default argument is evaluated once at def time, so mutating one
@@ -64,6 +65,12 @@ class LLMServer:
         self.allocator = allocator or TokenBudgetAllocator(problem)
         self.scheduler = Scheduler(self.allocator, self.cfg.discipline)
         self.completed: list = []
+        # observability (obs.trace.Tracer / obs.metrics.MetricsRegistry);
+        # both default to None and every recording site is guarded with a
+        # single `is not None` check, so the uninstrumented path pays one
+        # pointer comparison per would-be event
+        self.tracer = tracer
+        self.metrics = metrics
 
     # ----------------------------------------------------------------- core
     def _service_time(self, reqs) -> float:
@@ -100,9 +107,8 @@ class LLMServer:
             # degenerate budget+extra of 0 still yields one token)
             assert r.generated == max(r.budget + self.cfg.max_extra_tokens, 1)
 
-    def _execute(self, reqs) -> float:
-        """Run the engine (optional) and return the service duration."""
-        wall0 = time.perf_counter()
+    def _engine_work(self, reqs) -> None:
+        """Execute the engine (or the virtual token accounting) for a batch."""
         if self.cfg.generate_tokens and isinstance(self.engine,
                                                    ContinuousBatchingEngine):
             self._run_continuous(reqs)
@@ -122,8 +128,18 @@ class LLMServer:
         else:
             for r in reqs:
                 r.generated = r.budget + self.cfg.max_extra_tokens
+
+    def _execute(self, reqs) -> float:
+        """Run the engine (optional) and return the service duration.
+
+        Wall mode measures through ``obs.trace.timecall`` — the same
+        monotonic-clock helper ``ReplayHarness`` uses for its real-engine
+        twin — so both wall paths share one timing semantics.
+        """
         if self.cfg.mode == "wall":
-            return time.perf_counter() - wall0
+            _, dur = timecall(self._engine_work, reqs)
+            return dur
+        self._engine_work(reqs)
         return self._service_time(reqs)
 
     def run(self, stream: Stream) -> ServingReport:
@@ -170,6 +186,14 @@ class LLMServer:
             server_free_at = finish
             horizon = max(horizon, finish)
             p = self.problem.tasks
+            if self.metrics is not None:
+                self.metrics.histogram("server.batch_occupancy").record(
+                    len(batch))
+                self.metrics.gauge("server.queue_depth").set(len(pending))
+                self.metrics.counter("server.batches").inc()
+            if self.tracer is not None:
+                self.tracer.counter("server.queue_depth", ts_s=start,
+                                    depth=len(pending))
             for r in batch:
                 r.start_t = start
                 r.finish_t = finish
@@ -184,6 +208,40 @@ class LLMServer:
                     system_time=r.system_time,
                     n_tokens=int(r.generated),
                     correct=bool(r.correct_u < pk)))
+                if self.metrics is not None:
+                    self.metrics.histogram("server.wait").record(r.wait_time)
+                    self.metrics.histogram("server.system_time").record(
+                        r.system_time)
+                    self.metrics.counter("server.requests").inc()
+                if self.tracer is not None:
+                    self._trace_request(r, start, finish, dur)
         return summarize(self.problem, self.completed, horizon,
                          self.allocator.n_resolves,
                          estimator_state=self.allocator.estimator_state())
+
+    def _trace_request(self, r, start: float, finish: float,
+                       dur: float) -> None:
+        """Emit one request's virtual-timeline span tree.
+
+        request = [arrival, finish]; children tile it: admit (queueing
+        wait), prefill (the latency model's fixed cost t0_k, capped at the
+        batch's service time), decode (the remainder), retire instant at
+        finish — the tree shape ``obs.trace.validate_request_trees``
+        asserts for every completed request.
+        """
+        t = self.tracer
+        t0_k = float(np.asarray(self.problem.tasks.t0)[r.task_index])
+        pf = min(t0_k, dur)
+        args = {"rid": r.rid}
+        t.complete("request", r.arrival_t, finish - r.arrival_t,
+                   pid=VIRTUAL_PID, cat="request",
+                   args={"rid": r.rid, "task": int(r.task_index),
+                         "budget": int(r.budget)})
+        t.complete("admit", r.arrival_t, start - r.arrival_t,
+                   pid=VIRTUAL_PID, cat="request", args=args)
+        t.complete("prefill", start, pf, pid=VIRTUAL_PID, cat="request",
+                   args=args)
+        t.complete("decode", start + pf, finish - start - pf,
+                   pid=VIRTUAL_PID, cat="request", args=args)
+        t.instant("retire", finish, pid=VIRTUAL_PID, cat="request",
+                  args=args)

@@ -154,7 +154,10 @@ def max_sustainable_lambda(tasks: TaskSet, alpha, l_max,
 
 def frontier_comparison(measured_accuracy, measured_system_time,
                         predicted_accuracy, predicted_system_time,
-                        ci_system_time=None) -> dict:
+                        ci_system_time=None,
+                        measured_percentiles=None,
+                        predicted_percentiles=None,
+                        drift=None) -> dict:
     """Score measured operating points against their analytic predictions.
 
     The closed-loop replay harness (``serving.replay``) produces MEASURED
@@ -168,7 +171,16 @@ def frontier_comparison(measured_accuracy, measured_system_time,
       supplied,
     * Pareto masks of both point sets in the joint (max accuracy,
       min time) order — a measured point that stays on the joint frontier
-      alongside its prediction is operating where the model says it should.
+      alongside its prediction is operating where the model says it should,
+    * tail comparison: ``measured_percentiles`` / ``predicted_percentiles``
+      ({"p50": ..., "p99": ...} dicts, e.g. from
+      ``ServingReport.system_time_percentiles`` and the M/G/1
+      exponential-tail prediction) yield per-percentile relative gaps —
+      Yang et al. (2407.05347): the tail, not the mean, is what batched
+      decode moves,
+    * ``drift`` passes a final ``obs.monitor`` DriftReport dict through to
+      the scored record, so frontier artifacts carry the loop's
+      model-mismatch verdict alongside the gaps.
     """
     ma = np.asarray(measured_accuracy, dtype=np.float64).ravel()
     mt = np.asarray(measured_system_time, dtype=np.float64).ravel()
@@ -195,6 +207,21 @@ def frontier_comparison(measured_accuracy, measured_system_time,
         out["ci_system_time"] = ci
         out["covered"] = covered
         out["coverage"] = float(covered.mean()) if covered.size else 1.0
+    if measured_percentiles is not None:
+        out["measured_percentiles"] = dict(measured_percentiles)
+    if predicted_percentiles is not None:
+        out["predicted_percentiles"] = dict(predicted_percentiles)
+    if measured_percentiles and predicted_percentiles:
+        gaps = {}
+        for key in measured_percentiles.keys() & predicted_percentiles.keys():
+            mq, pq = float(measured_percentiles[key]), \
+                float(predicted_percentiles[key])
+            gaps[key] = (mq - pq) / max(abs(pq), 1e-12)
+        out["rel_gap_percentiles"] = gaps
+        out["max_rel_gap_percentile"] = (max(abs(v) for v in gaps.values())
+                                         if gaps else 0.0)
+    if drift is not None:
+        out["drift"] = dict(drift)
     # joint frontier: stack both sets, mask each half
     acc = np.concatenate([ma, pa])
     t = np.concatenate([mt, pt])

@@ -1,0 +1,225 @@
+"""Streaming-histogram exactness, mergeability, and registry contracts.
+
+Pins the promises made by ``obs.metrics``:
+
+* ``percentile`` stays within the documented ``2**-bits`` relative error
+  of the exact ``np.percentile(..., method="inverted_cdf")`` order
+  statistic on adversarial shapes (heavy-tail lognormal, far-separated
+  bimodal, constant);
+* snapshot merging is associative (bucket counts / n / extrema exactly;
+  ``total`` up to float-summation ulp) and ``histogram_per_lane`` +
+  ``merge_snapshots`` is bit-identical to single-stream recording;
+* the empty-stream contract shared with ``mg1.empty_result``: statistics
+  over nothing are zeros, never an error; non-positive observations land
+  in an exact zero bucket;
+* the DES folds per-block metrics that reproduce the exact waits.
+"""
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.obs.metrics import (DEFAULT_PERCENTILES, Counter, Gauge,
+                               HistogramSnapshot, MetricsRegistry,
+                               NullRegistry, StreamingHistogram,
+                               histogram_per_lane, merge_snapshots)
+
+QS = (50.0, 90.0, 99.0, 99.9)
+
+
+def _distributions(rng, n=50_000):
+    return {
+        "lognormal_heavy": rng.lognormal(0.0, 2.0, n),
+        "bimodal": np.concatenate([
+            rng.normal(1.0, 0.05, n // 2).clip(1e-9),
+            rng.normal(1000.0, 20.0, n // 2)]),
+        "constant": np.full(n // 10, 3.7),
+        "uniform": rng.uniform(0.0, 10.0, n),
+        "tiny_scale": rng.lognormal(-20.0, 1.5, n),
+    }
+
+
+# ----------------------------------------------------------- percentile bound
+
+@pytest.mark.parametrize("bits", [3, 5, 8])
+def test_percentile_within_bucket_bound(bits):
+    rng = np.random.default_rng(0)
+    bound = 2.0 ** -bits
+    for name, x in _distributions(rng).items():
+        h = StreamingHistogram(bits=bits)
+        h.record_many(x)
+        for q in QS:
+            exact = float(np.percentile(x, q, method="inverted_cdf"))
+            got = h.percentile(q)
+            err = abs(got - exact) / abs(exact)
+            assert err <= bound, (name, q, got, exact, err)
+
+
+def test_constant_stream_reproduced_exactly():
+    h = StreamingHistogram()
+    h.record_many(np.full(1000, 2.5))
+    for q in QS:
+        assert h.percentile(q) == 2.5
+    assert h.mean == pytest.approx(2.5)
+
+
+def test_percentile_clipped_to_observed_range():
+    h = StreamingHistogram()
+    h.record_many(np.array([1.0, 1.0, 1.0, 100.0]))
+    assert h.percentile(100.0) <= 100.0
+    assert h.percentile(0.0) >= 1.0
+
+
+def test_scalar_record_matches_record_many():
+    rng = np.random.default_rng(1)
+    v = rng.lognormal(0, 1, 500)
+    v[:7] = -1.0  # nonpositive -> zero bucket
+    h1, h2 = StreamingHistogram(), StreamingHistogram()
+    for t in v:
+        h1.record(t)
+    h2.record_many(v)
+    s1, s2 = h1.snapshot(), h2.snapshot()
+    assert s1.counts == s2.counts
+    assert (s1.n, s1.zeros, s1.vmin, s1.vmax) == \
+        (s2.n, s2.zeros, s2.vmin, s2.vmax)
+    # sequential vs pairwise summation differ only in the last ulps
+    assert s1.total == pytest.approx(s2.total, rel=1e-12)
+
+
+# ------------------------------------------------------------------- merging
+
+def test_per_lane_fold_bit_identical_to_whole_tensor():
+    rng = np.random.default_rng(2)
+    x = rng.lognormal(0, 2, (4, 5000))
+    x[0, :100] = 0.0
+    lanes = histogram_per_lane(x, axis=0)
+    whole = StreamingHistogram()
+    whole.record_many(x)
+    m = merge_snapshots(lanes)
+    w = whole.snapshot()
+    assert m.counts == w.counts
+    assert (m.n, m.zeros, m.vmin, m.vmax) == (w.n, w.zeros, w.vmin, w.vmax)
+
+
+def test_merge_associative():
+    rng = np.random.default_rng(3)
+    lanes = histogram_per_lane(rng.lognormal(0, 2, (3, 2000)), axis=0)
+    a = lanes[0].merge(lanes[1]).merge(lanes[2])
+    b = lanes[0].merge(lanes[1].merge(lanes[2]))
+    assert a.counts == b.counts
+    assert (a.n, a.zeros, a.vmin, a.vmax) == (b.n, b.zeros, b.vmin, b.vmax)
+    assert a.total == pytest.approx(b.total, rel=1e-12)
+
+
+def test_merge_commutative_and_merge_from():
+    rng = np.random.default_rng(4)
+    lanes = histogram_per_lane(rng.lognormal(0, 1, (2, 1000)), axis=0)
+    assert lanes[0].merge(lanes[1]).counts == lanes[1].merge(lanes[0]).counts
+    h = StreamingHistogram()
+    h.merge_from(lanes[0])
+    h.merge_from(lanes[1])
+    assert h.snapshot().counts == lanes[0].merge(lanes[1]).counts
+
+
+def test_merge_bits_mismatch_raises():
+    a = StreamingHistogram(bits=5)
+    b = StreamingHistogram(bits=6)
+    a.record(1.0)
+    b.record(1.0)
+    with pytest.raises(ValueError):
+        a.snapshot().merge(b.snapshot())
+    with pytest.raises(ValueError):
+        a.merge_from(b.snapshot())
+
+
+# ----------------------------------------------------- empty / edge contracts
+
+def test_empty_histogram_is_zeros_not_error():
+    h = StreamingHistogram()
+    assert h.n == 0
+    assert h.mean == 0.0
+    for q in QS:
+        assert h.percentile(q) == 0.0
+    d = h.snapshot().as_dict()
+    assert d["n"] == 0 and d["p50"] == 0.0 and d["max"] == 0.0
+    h.record_many(np.array([]))  # no-op, no crash
+    assert h.n == 0
+
+
+def test_nonpositive_counted_as_exact_zeros():
+    h = StreamingHistogram()
+    h.record_many(np.array([0.0, -1.0, -0.5, 5.0]))
+    s = h.snapshot()
+    assert s.zeros == 3 and s.n == 4
+    # 3 of 4 observations are zero -> p50 sits in the zero atom
+    assert h.percentile(50.0) == 0.0
+    assert h.percentile(99.0) == pytest.approx(5.0)
+
+
+def test_nan_counts_as_zero_inf_rejected():
+    h = StreamingHistogram()
+    h.record_many(np.array([np.nan, 1.0]))
+    assert h.snapshot().zeros == 1
+    with pytest.raises(ValueError):
+        h.record_many(np.array([np.inf]))
+
+
+def test_bits_out_of_range_rejected():
+    with pytest.raises(ValueError):
+        StreamingHistogram(bits=13)
+
+
+def test_percentile_keys_format():
+    h = StreamingHistogram()
+    h.record_many(np.ones(10))
+    keys = set(h.percentiles(DEFAULT_PERCENTILES))
+    assert keys == {"p50", "p90", "p99", "p99_9"}
+
+
+# ------------------------------------------------------------------- registry
+
+def test_registry_instruments_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("a").inc(3)
+    reg.gauge("g").set(2.5)
+    reg.histogram("h").record_many(np.ones(4))
+    assert reg.counter("a") is reg.counter("a")
+    snap = reg.snapshot()
+    assert snap["a"] == 3 and snap["g"] == 2.5
+    assert isinstance(snap["h"], HistogramSnapshot)
+    d = reg.as_dict()
+    assert d["h"]["n"] == 4 and d["h"]["mean"] == pytest.approx(1.0)
+
+
+def test_null_registry_is_inert():
+    reg = NullRegistry()
+    reg.counter("a").inc(5)
+    reg.gauge("g").set(1.0)
+    reg.histogram("h").record_many(np.ones(100))
+    reg.histogram("h").record(1.0)
+    assert reg.snapshot() == {}
+    assert not reg.enabled
+    assert isinstance(reg.counter("x"), Counter)
+    assert isinstance(reg.gauge("x"), Gauge)
+
+
+# --------------------------------------------------------- DES metrics fold
+
+def test_batched_des_folds_exact_waits():
+    from repro.queueing_sim import generate_streams, simulate_fifo_batch
+
+    prob = paper_problem()
+    lengths = np.array([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
+    batch = generate_streams(prob.tasks, prob.server.lam, n_seeds=4,
+                             n_queries=2000, seed=0)
+    reg = MetricsRegistry()
+    res = simulate_fifo_batch(prob, lengths, batch, metrics=reg)
+    snap = reg.snapshot()
+    waits = snap["des.wait"]
+    assert waits.n == 2000 * 4
+    assert snap["des.queries"] == 2000 * 4
+    # the folded histogram's exact mean must agree with the simulator's own
+    # aggregate (equal queries per seed, so pooled mean == mean of means)
+    assert waits.mean == pytest.approx(float(np.mean(res.mean_wait)),
+                                       rel=1e-9)
+    assert snap["des.system_time"].mean == pytest.approx(
+        float(np.mean(res.mean_system_time)), rel=1e-9)

@@ -1,0 +1,149 @@
+"""Predicted-vs-measured drift monitor: alarm semantics + replay wiring.
+
+Pins the ``obs.monitor`` contracts:
+
+* quiet on a matched operating point: M/M/1 waits sampled at the same
+  ``(lambda, E[S], E[S^2])`` the estimator state reports never fire;
+* fires after ``patience`` consecutive over-tolerance checks when the
+  measured waits contradict the state (and resets on ``note_resolve``);
+* ``insufficient-data`` below ``min_samples``, cold estimator states
+  (``None`` fields) predict zero instead of crashing;
+* the exponential-tail quantile matches the closed form and is 0 inside
+  the ``1 - rho`` atom;
+* end-to-end: ``ReplayHarness`` drift mode re-solves on the alarm — at
+  least once (bootstrap), fewer times than blind cadence on the same
+  drifting trace — and block records carry the structured report.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.obs.monitor import (DriftMonitor, DriftReport,
+                               predicted_wait_quantile)
+from repro.queueing_sim import Segment, generate_drift_trace
+from repro.serving import ReplayConfig, ReplayHarness
+
+
+def _mm1_waits(rng, lam, mu, n):
+    """Exact Lindley recursion waits of an M/M/1 sample path."""
+    a = rng.exponential(1.0 / lam, n)
+    s = rng.exponential(1.0 / mu, n)
+    w = np.empty(n)
+    w[0] = 0.0
+    for i in range(1, n):
+        w[i] = max(w[i - 1] + s[i - 1] - a[i], 0.0)
+    return w
+
+
+def _state(lam, mu):
+    es = 1.0 / mu
+    return {"lam": lam, "es": es, "es2": 2.0 * es * es, "c_servers": 1}
+
+
+# ------------------------------------------------------------------ quantile
+
+def test_predicted_wait_quantile_closed_form():
+    rho, w = 0.8, 2.0
+    # inside the 1-rho atom the quantile is exactly zero
+    assert predicted_wait_quantile(10.0, w, rho) == 0.0
+    q = predicted_wait_quantile(90.0, w, rho)
+    assert q == pytest.approx((w / rho) * math.log(rho / 0.1))
+    assert predicted_wait_quantile(90.0, w, 0.0) == 0.0
+    assert predicted_wait_quantile(90.0, 0.0, rho) == 0.0
+
+
+# ------------------------------------------------------------- alarm logic
+
+def test_quiet_on_matched_mm1():
+    rng = np.random.default_rng(0)
+    lam, mu = 0.6, 1.0        # rho = 0.6: fast mixing, low transient bias
+    mon = DriftMonitor(rel_tol=0.25, patience=2, min_samples=64)
+    state = _state(lam, mu)
+    # one continuous sample path (waits autocorrelate; restarting each
+    # window at an empty queue would bias every window low)
+    waits = _mm1_waits(rng, lam, mu, 30_000)
+    for chunk in np.array_split(waits[5_000:], 5):   # drop the warm-up
+        mon.observe(chunk)
+        rep = mon.check(state)
+        assert not rep.fired
+        assert rep.reason == "ok"
+    # P-K at the true point: rel err small on 25k stationary samples
+    assert rep.rel_err < 0.15
+
+
+def test_fires_after_patience_on_mismatch():
+    rng = np.random.default_rng(1)
+    lam, mu = 0.8, 1.0
+    mon = DriftMonitor(rel_tol=0.25, patience=2, min_samples=64)
+    # estimator believes light traffic; reality is heavy
+    stale = _state(0.3, mu)
+    mon.observe(_mm1_waits(rng, lam, mu, 4000))
+    r1 = mon.check(stale)
+    assert not r1.fired and r1.strikes == 1       # first strike only
+    mon.observe(_mm1_waits(rng, lam, mu, 4000))
+    r2 = mon.check(stale)
+    assert r2.fired and r2.reason == "drift" and r2.strikes == 2
+    assert isinstance(r2, DriftReport)
+    assert r2.as_dict()["fired"] is True
+    # the controller acts -> window and strikes reset
+    mon.note_resolve()
+    r3 = mon.check(stale)
+    assert r3.reason == "insufficient-data" and r3.strikes == 0
+    assert len(mon.history) == 3
+
+
+def test_insufficient_data_never_fires():
+    mon = DriftMonitor(min_samples=64, patience=1, rel_tol=0.01)
+    mon.observe(np.ones(10))
+    rep = mon.check(_state(0.8, 1.0))
+    assert not rep.fired and rep.reason == "insufficient-data"
+    assert rep.n == 10
+
+
+def test_cold_estimator_state_predicts_zero():
+    mon = DriftMonitor(min_samples=1)
+    mon.observe(np.ones(5))
+    rep = mon.check({"lam": None, "es": None, "es2": None})
+    assert rep.predicted_wait == 0.0
+    assert np.isfinite(rep.rel_err)
+
+
+def test_unstable_state_predicts_zero():
+    mon = DriftMonitor(min_samples=1)
+    mon.observe(np.ones(5))
+    rep = mon.check(_state(2.0, 1.0))   # rho = 2 >= 1
+    assert rep.predicted_wait == 0.0 and rep.rho == pytest.approx(2.0)
+
+
+def test_multiserver_prediction_uses_lee_longton():
+    mon = DriftMonitor(min_samples=1)
+    es = 1.0
+    state = {"lam": 1.5, "es": es, "es2": 2.0 * es * es, "c_servers": 2}
+    mon.observe(np.ones(5))
+    rep = mon.check(state)
+    # stable at c=2 (rho = 0.75) -> finite positive prediction
+    assert rep.predicted_wait > 0.0 and rep.rho == pytest.approx(0.75)
+
+
+# ------------------------------------------------------------- replay wiring
+
+def test_replay_drift_mode_resolves_on_evidence():
+    prob = paper_problem()
+    trace = generate_drift_trace(
+        prob.tasks, [Segment(1200, 0.2), Segment(1200, 0.45)], seed=7)
+    cadence = ReplayHarness(prob, ReplayConfig(block_size=64))
+    res_cad = cadence.run_virtual(trace)
+    drift = ReplayHarness(prob, ReplayConfig(block_size=64,
+                                             resolve_mode="drift"))
+    res_dft = drift.run_virtual(trace)
+
+    assert res_dft.n_resolves >= 1                      # bootstrap happened
+    assert res_dft.n_resolves < res_cad.n_resolves      # alarm, not clock
+    # block records carry the structured report once checks are live
+    reports = [b.drift for b in res_dft.blocks if b.drift is not None]
+    assert reports, "drift mode must attach DriftReport dicts to blocks"
+    assert {"fired", "reason", "rel_err", "rho"} <= set(reports[-1])
+    # the last report flows into the ServingReport
+    assert res_dft.report(prob).drift == reports[-1]
