@@ -69,6 +69,18 @@ GATES = {
         ("estimation.lam_accuracy",
          lambda d: d["estimation"]["lam_accuracy"], 0.5),
     ],
+    "BENCH_paged.json": [
+        # admission density at equal KV memory: machine-independent
+        # ratio, so the smoke floor is a fraction of the committed run
+        # (the >1.0 strict assert lives in the bench itself)
+        ("occupancy.paged_vs_slot",
+         lambda d: d["occupancy"]["paged_vs_slot_mean_ratio"], 0.6),
+        # corrected analytics vs occupancy-dependent DES: absolute
+        # ceiling = the documented envelope (bench asserts its own
+        # mode-specific bound too)
+        ("analytics.rel_err",
+         lambda d: d["analytics"]["rel_err"], 0.35, "ceil_abs"),
+    ],
     "BENCH_obs.json": [
         # histogram ingest must stay vectorized (order-of-magnitude floor)
         ("hist.updates_per_s", lambda d: d["hist"]["updates_per_s"], 0.02),

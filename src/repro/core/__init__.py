@@ -10,6 +10,9 @@ Public API:
     TokenBudgetAllocator, solve                     -- end-to-end facade
 """
 from .allocator import Solution, TokenBudgetAllocator, solve
+from .batch_service import (BatchServiceResult, StepLatencyModel,
+                            batch_service_wait, corrected_taskset,
+                            fit_step_latency, occupancy_fixed_point)
 from .calibration import calibrate_taskset, fit_accuracy, fit_latency
 from .fixed_point import (contraction_certificate, fixed_point_map,
                           solve_fixed_point)
@@ -39,4 +42,6 @@ __all__ = [
     "priority_mean_waits", "calibrate_taskset", "fit_accuracy",
     "fit_latency", "erlang_c", "erlang_c_np", "mean_wait_mgc",
     "mean_system_time_mgc", "mgc_wait_np", "objective_mgc", "solve_mgc",
+    "StepLatencyModel", "fit_step_latency", "occupancy_fixed_point",
+    "corrected_taskset", "batch_service_wait", "BatchServiceResult",
 ]

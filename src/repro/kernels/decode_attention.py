@@ -63,6 +63,109 @@ def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, n_bt: int, block_size: int,
+                  n_blocks_pool: int, sm_scale: float):
+    """Online-softmax decode over a slot's block list.
+
+    ``bt_ref`` / ``pos_ref`` are scalar-prefetched (SMEM): the block table
+    feeds the k/v BlockSpec index maps — each grid step DMAs exactly the
+    one physical block the slot's logical block ``j`` maps to — and the
+    kernel only masks. Same accumulator scheme as :func:`_kernel`.
+    """
+    b = pl.program_id(0)
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                # [G, hd]
+    k = k_ref[0, :, 0]                             # [bs, hd]
+    v = v_ref[0, :, 0]
+    pos = pos_ref[b]
+    # logical position of each row of this block; sentinel blocks (table
+    # entry == pool size) are fully masked
+    off = jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)[0]
+    ok = (cj * block_size + off <= pos) & (bt_ref[b, cj] < n_blocks_pool)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    s = jnp.where(ok[None, :], s, NEG_INF)         # [G, bs]
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(cj == n_bt - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
+                           interpret: bool = False):
+    """One query token per slot over a paged KV pool.
+
+    Layouts (one layer):
+        q            [B, nkv, G, hd]
+        k/v_pool     [P, bs, nkv, hd]
+        block_tables [B, n_bt] int32 (entry P = unassigned sentinel)
+        pos          [B] int32 position of the NEW token (slots <= pos
+                     attend; the new token's KV must already be written)
+    Returns [B, nkv, G, hd].
+
+    The block table and positions ride scalar prefetch
+    (``PrefetchScalarGridSpec``): the k/v index maps read
+    ``block_tables[b, j]`` so the kernel streams exactly the slot's own
+    physical blocks — the pool itself is never gathered or densified.
+    """
+    B, nkv, G, hd = q.shape
+    P, bs = k_pool.shape[0], k_pool.shape[1]
+    n_bt = block_tables.shape[1]
+    kernel = functools.partial(_paged_kernel, n_bt=n_bt, block_size=bs,
+                               n_blocks_pool=P,
+                               sm_scale=1.0 / (hd ** 0.5))
+
+    def kv_map(b, h, j, bt, pos):
+        return (jnp.minimum(bt[b, j], P - 1), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, nkv, n_bt),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, bt, pos:
+                         (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+            pl.BlockSpec((1, bs, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, bt, pos:
+                               (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pallas_tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), jnp.asarray(pos, jnp.int32),
+      q, k_pool, v_pool)
+
+
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def decode_attention(q, k, v, valid, *, block_c: int = DEFAULT_BLOCK_C,
                      interpret: bool = False):

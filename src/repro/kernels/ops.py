@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention as _decode_pallas
+from .decode_attention import paged_decode_attention as _paged_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .fused_ffn import fused_ffn as _ffn_pallas
 from .rwkv6_scan import rwkv6_scan as _rwkv_pallas
@@ -70,6 +71,39 @@ def decode_attention(q: Array, k: Array, v: Array, valid: Array, *,
         out = _decode_pallas(qk, kk, vv, vd,
                              block_c=_divisor_block(C, 512),
                              interpret=_interpret())
+    return out.reshape(B, 1, nh, hd)
+
+
+def paged_decode_attention(q: Array, k_pool: Array, v_pool: Array,
+                           block_tables: Array, pos: Array, *,
+                           force_ref: bool = False) -> Array:
+    """Model layout: q [B,1,nh,hd]; k/v_pool [P,bs,nkv,hd];
+    block_tables [B,n_bt]; pos [B] -> [B,1,nh,hd].
+
+    ``force_ref`` densifies the pool through the block table (gather +
+    masked reference attend) — the cross-check path for the scalar-prefetch
+    kernel.
+    """
+    B, _, nh, hd = q.shape
+    P, bs, nkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    n_bt = block_tables.shape[1]
+    G = nh // nkv
+    qk = q.reshape(B, nkv, G, hd)
+    if force_ref:
+        C = n_bt * bs
+        gather = jnp.clip(block_tables, 0, P - 1)
+        kk = k_pool[gather].reshape(B, C, nkv, hd)
+        vv = v_pool[gather].reshape(B, C, nkv, hd)
+        valid = (jnp.arange(C)[None, :] <= pos[:, None]) \
+            & jnp.repeat(block_tables < P, bs, axis=1)
+        out = ref.decode_attention_ref(
+            qk.reshape(B * nkv, G, hd),
+            kk.transpose(0, 2, 1, 3).reshape(B * nkv, C, hd),
+            vv.transpose(0, 2, 1, 3).reshape(B * nkv, C, hd),
+            jnp.repeat(valid[:, None, :], nkv, 1).reshape(B * nkv, C))
+        return out.reshape(B, 1, nh, hd)
+    out = _paged_pallas(qk, k_pool, v_pool, block_tables, pos,
+                        interpret=_interpret())
     return out.reshape(B, 1, nh, hd)
 
 

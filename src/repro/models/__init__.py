@@ -1,4 +1,5 @@
 """Model zoo: dense GQA, fine-grained MoE, Mamba2, RWKV6, hybrid, VLM/audio."""
+from .attention import PagedKVCache, init_paged_cache
 from .config import ModelConfig, MoEConfig, RWKVConfig, SSMConfig, reduced
 from .transformer import (ModelOutput, decode_step, forward,
                           init_decode_cache, init_params)
@@ -6,4 +7,4 @@ from .sampling import sample
 
 __all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "RWKVConfig", "reduced",
            "init_params", "forward", "decode_step", "init_decode_cache",
-           "ModelOutput", "sample"]
+           "ModelOutput", "sample", "PagedKVCache", "init_paged_cache"]

@@ -48,6 +48,59 @@ class QuantKVCache(NamedTuple):
         return self.k.shape[1]
 
 
+class PagedKVCache(NamedTuple):
+    """Block-pooled KV cache (vLLM-style paged attention).
+
+    Instead of every slot owning a dense ``[C, nkv, hd]`` row, KV lives in
+    a shared pool of ``P`` fixed-size blocks and each slot maps its logical
+    positions onto pool blocks through a block table:
+
+        k, v          [L, P, bs, nkv, hd]   pool (bs = block_size); the same
+                                            block id addresses layer-aligned
+                                            physical blocks in every layer
+        block_tables  [B, n_bt] int32       per-slot logical->physical map;
+                                            entries == P (one past the pool)
+                                            are the UNASSIGNED sentinel
+        length        [L, B] int32          per-layer per-slot position
+        k_scale/v_scale [L, P, bs, nkv] f32 absmax scales when the pool is
+                                            int8 (``kv_cache_dtype="int8"``);
+                                            None for full-precision pools
+
+    Logical position ``p`` of slot ``b`` lives at
+    ``pool[layer, block_tables[b, p // bs], p % bs]``. Writes through a
+    sentinel entry are dropped (``.at[...].set(mode="drop")``), so rows
+    whose requests have retired can keep stepping inside a fused scan
+    without corrupting blocks that were freed and reassigned; reads clip
+    the sentinel and rely on the validity mask (``slots <= pos``) plus the
+    allocator's invariant that every block at index <= pos // bs of a live
+    slot is assigned.
+
+    The pool is sized independently of the slot count: admission is gated
+    by *tokens in use* (``serving.continuous.BlockAllocator``), not by
+    worst-case per-slot capacity.
+    """
+
+    k: Array
+    v: Array
+    block_tables: Array
+    length: Array
+    k_scale: Optional[Array] = None
+    v_scale: Optional[Array] = None
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def block_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def capacity(self) -> int:
+        """Per-slot logical capacity (block-table width x block size)."""
+        return self.block_tables.shape[1] * self.k.shape[2]
+
+
 def _quantize(t: Array):
     """t [..., hd] -> (int8, scale[...])."""
     amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
@@ -155,6 +208,94 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
             length=jnp.zeros((), jnp.int32))
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
                    length=jnp.zeros((), jnp.int32))
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, n_blocks: int,
+                     block_size: int, n_bt: int,
+                     dtype=None) -> PagedKVCache:
+    """Zeroed paged pool + all-sentinel block tables (layer-stacked).
+
+    ``n_bt`` is the block-table width = per-slot logical capacity in
+    blocks. Paged decode requires full (non-windowed) attention; ring
+    buffers keep the dense slot path.
+    """
+    assert cfg.sliding_window is None, "paged KV requires full attention"
+    dtype = dtype or cfg.jdtype
+    L = cfg.n_layers
+    shape = (L, n_blocks, block_size, cfg.n_kv_eff, cfg.hd)
+    tables = jnp.full((batch, n_bt), n_blocks, jnp.int32)
+    length = jnp.zeros((L, batch), jnp.int32)
+    if cfg.kv_cache_dtype == "int8":
+        return PagedKVCache(
+            k=jnp.zeros(shape, jnp.int8), v=jnp.zeros(shape, jnp.int8),
+            block_tables=tables, length=length,
+            k_scale=jnp.zeros(shape[:-1], jnp.float32),
+            v_scale=jnp.zeros(shape[:-1], jnp.float32))
+    return PagedKVCache(k=jnp.zeros(shape, dtype),
+                        v=jnp.zeros(shape, dtype),
+                        block_tables=tables, length=length)
+
+
+def attn_decode_paged(cfg: ModelConfig, p: dict, x: Array, pc: PagedKVCache,
+                      pos, layer: int):
+    """One-token step against the paged block pool.
+
+    x [B,1,d]; ``pc`` the layer-stacked :class:`PagedKVCache`; ``pos`` [B]
+    the layer's per-slot positions; ``layer`` a static index. Returns
+    (y [B,1,d], pc) with the new token's KV scattered into
+    ``pool[layer, block_tables[b, pos//bs], pos % bs]`` — writes through
+    sentinel / out-of-table positions are dropped, so retired rows riding
+    a fused scan are harmless. The attend path gathers the slot's blocks
+    back into dense ``[B, C, nkv, hd]`` (reference; pinned token-for-token
+    against ``attn_decode_stacked``) or runs the Pallas paged kernel over
+    the pool directly when ``cfg.use_decode_kernel`` is set.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(cfg, p, x, pos[:, None].astype(jnp.int32))
+    P, bs = pc.n_blocks, pc.block_size
+    n_bt = pc.block_tables.shape[1]
+    C = n_bt * bs
+    rows = jnp.arange(B)
+    bidx = pos // bs
+    # block id of the write; out-of-table positions (dead rows that kept
+    # stepping) map to the sentinel so mode="drop" discards them
+    blk = jnp.where(bidx < n_bt,
+                    pc.block_tables[rows, jnp.minimum(bidx, n_bt - 1)], P)
+    off = pos % bs
+    quant = pc.k_scale is not None
+    if quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        k_pool = pc.k.at[layer, blk, off].set(kq[:, 0], mode="drop")
+        v_pool = pc.v.at[layer, blk, off].set(vq[:, 0], mode="drop")
+        k_sc = pc.k_scale.at[layer, blk, off].set(ks[:, 0], mode="drop")
+        v_sc = pc.v_scale.at[layer, blk, off].set(vs[:, 0], mode="drop")
+        pc = pc._replace(k=k_pool, v=v_pool, k_scale=k_sc, v_scale=v_sc)
+    else:
+        k_pool = pc.k.at[layer, blk, off].set(k_new[:, 0], mode="drop")
+        v_pool = pc.v.at[layer, blk, off].set(v_new[:, 0], mode="drop")
+        pc = pc._replace(k=k_pool, v=v_pool)
+
+    if cfg.use_decode_kernel and not quant:
+        from ..kernels import ops as kops
+        out = kops.paged_decode_attention(q, pc.k[layer], pc.v[layer],
+                                          pc.block_tables, pos)
+        y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1), p["wo"])
+        return y, pc
+    # reference / int8 path: gather the slot's blocks into the dense
+    # [B, C, nkv, hd] layout (sentinels clip to a real block; the validity
+    # mask hides whatever they alias) and reuse the slot attend
+    gather = jnp.clip(pc.block_tables, 0, P - 1)          # [B, n_bt]
+    k = pc.k[layer][gather].reshape(B, C, cfg.n_kv_eff, cfg.hd)
+    v = pc.v[layer][gather].reshape(B, C, cfg.n_kv_eff, cfg.hd)
+    if quant:
+        k_sc = pc.k_scale[layer][gather].reshape(B, C, cfg.n_kv_eff)
+        v_sc = pc.v_scale[layer][gather].reshape(B, C, cfg.n_kv_eff)
+        k = _dequantize(k, k_sc, x.dtype)
+        v = _dequantize(v, v_sc, x.dtype)
+    valid = _decode_valid(cfg, pos, pos, B, C, per_row=True)
+    y = _decode_attend(cfg, p, q, k, v, valid, B, C)
+    return y, pc
 
 
 def cache_from_prefill(cfg: ModelConfig, k: Array, v: Array,
@@ -284,34 +425,51 @@ def attn_decode(cfg: ModelConfig, p: dict, x: Array, cache):
     return y, KVCache(k=k, v=v, length=pos + 1)
 
 
-def attn_decode_stacked(cfg: ModelConfig, p: dict, x: Array, k_all: Array,
-                        v_all: Array, pos, layer: int):
+def attn_decode_stacked(cfg: ModelConfig, p: dict, x: Array, kv, pos,
+                        layer: int):
     """One-token step scattering straight into STACKED cache leaves.
 
-    x [B,1,d]; k_all/v_all [L, B, C, nkv, hd] with ``layer`` a static
-    (trace-time) index into the leading stack axis; ``pos`` the layer's
-    cache length (scalar or [B]). Returns (y, k_all, v_all) with the new
-    token's KV written in place at ``[layer, :, slot]`` — no per-layer
-    slice-out/write-back copies, which is what lets XLA keep the whole
-    stacked cache aliased as a loop carry in the serving engines' fused
-    decode scan. Float math is identical to :func:`attn_decode`.
+    x [B,1,d]; ``kv`` a stacked :class:`KVCache` or :class:`QuantKVCache`
+    (leaves [L, B, C, ...]) with ``layer`` a static (trace-time) index into
+    the leading stack axis; ``pos`` the layer's cache length (scalar or
+    [B]). Returns (y, kv) with the new token's KV written in place at
+    ``[layer, :, slot]`` — no per-layer slice-out/write-back copies, which
+    is what lets XLA keep the whole stacked cache aliased as a loop carry
+    in the serving engines' fused decode scan. The caller owns the
+    ``length`` update. Float math is identical to :func:`attn_decode`
+    (int8: identical to the quantized slot path — scales land at the same
+    per-(position, head) granularity).
     """
     B = x.shape[0]
+    quant = isinstance(kv, QuantKVCache)
     per_row = pos.ndim == 1
     rope_pos = pos[:, None] if per_row else pos[None]
     q, k_new, v_new = _project_qkv(cfg, p, x, rope_pos.astype(jnp.int32))
-    C = k_all.shape[-3]
+    C = kv.k.shape[-3]
     slot = _decode_pos_slot(cfg, pos, C)
+
     if per_row:
         rows = jnp.arange(B)
-        k_all = k_all.at[layer, rows, slot].set(k_new[:, 0])
-        v_all = v_all.at[layer, rows, slot].set(v_new[:, 0])
+
+        def put(buf, val):                  # val [B, 1, ...] -> row scatter
+            return buf.at[layer, rows, slot].set(val[:, 0])
     else:
-        start = (layer, 0, slot, 0, 0)
-        k_all = jax.lax.dynamic_update_slice(k_all, k_new[None], start)
-        v_all = jax.lax.dynamic_update_slice(v_all, v_new[None], start)
-    k = k_all[layer]
-    v = v_all[layer]
+        def put(buf, val):
+            start = (layer, 0, slot) + (0,) * (buf.ndim - 3)
+            return jax.lax.dynamic_update_slice(buf, val[None], start)
+
+    if quant:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        kv = kv._replace(k=put(kv.k, kq), v=put(kv.v, vq),
+                         k_scale=put(kv.k_scale, ks),
+                         v_scale=put(kv.v_scale, vs))
+        k = _dequantize(kv.k[layer], kv.k_scale[layer], x.dtype)
+        v = _dequantize(kv.v[layer], kv.v_scale[layer], x.dtype)
+    else:
+        kv = kv._replace(k=put(kv.k, k_new), v=put(kv.v, v_new))
+        k = kv.k[layer]
+        v = kv.v[layer]
     valid = _decode_valid(cfg, pos, slot, B, C, per_row)
     y = _decode_attend(cfg, p, q, k, v, valid, B, C)
-    return y, k_all, v_all
+    return y, kv

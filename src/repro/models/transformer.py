@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import attention, mamba2, moe, rwkv6
-from .attention import KVCache
+from .attention import KVCache, PagedKVCache, QuantKVCache
 from .config import ModelConfig
 from .layers import (apply_mlp, apply_norm, embed_tokens, init_embed,
                      init_mlp, init_norm, lm_head)
@@ -296,19 +296,24 @@ def _write_at(stacked, update, *idx):
 
 
 def _attn_block_static(cfg: ModelConfig, kind: str, p: dict, x: Array,
-                       kv: KVCache, i: int):
-    """Attention/MoE block decode scattering straight into the stacked KV
-    leaves (no slice-out/write-back copy of the capacity-sized cache)."""
+                       kv, i: int):
+    """Attention/MoE block decode scattering straight into the stacked
+    (or paged) KV leaves — no slice-out/write-back copy of the
+    capacity-sized cache. ``kv`` is a stacked :class:`KVCache` /
+    :class:`QuantKVCache` or a :class:`PagedKVCache`."""
     pos = kv.length[i]
-    h, k_all, v_all = attention.attn_decode_stacked(
-        cfg, p["attn"], apply_norm(cfg, p["ln1"], x), kv.k, kv.v, pos, i)
+    xn = apply_norm(cfg, p["ln1"], x)
+    if isinstance(kv, PagedKVCache):
+        h, kv = attention.attn_decode_paged(cfg, p["attn"], xn, kv, pos, i)
+    else:
+        h, kv = attention.attn_decode_stacked(cfg, p["attn"], xn, kv, pos, i)
     x = x + h
     if kind == "attn":
         x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
     else:
         h, _ = moe.moe_forward(cfg, p["moe"], apply_norm(cfg, p["ln2"], x))
         x = x + h
-    kv = KVCache(k=k_all, v=v_all, length=kv.length.at[i].set(pos + 1))
+    kv = kv._replace(length=kv.length.at[i].set(pos + 1))
     return x, kv
 
 
@@ -321,14 +326,16 @@ def _decode_static(cfg: ModelConfig, params: dict, x: Array, cache):
     static slice + ``.at[i].set`` write-back — both of which XLA keeps in
     place inside a surrounding ``lax.scan``, instead of the layer-scan
     xs->ys round trip that re-materializes every capacity-sized cache leaf
-    once per token. int8 KV caches fall back to slice + write-back (their
-    quantized leaves are already half-width).
+    once per token. int8 (:class:`QuantKVCache`) and paged
+    (:class:`PagedKVCache`) caches ride the same in-place scatter path.
     """
     kind = cfg.backbone_kind
     block_fn = functools.partial(_block_decode, cfg, kind)
     if not cfg.has_shared_attn:
         layers = cache["layers"]
-        inplace_kv = kind in ("attn", "moe") and isinstance(layers, KVCache)
+        inplace_kv = (kind in ("attn", "moe")
+                      and isinstance(layers, (KVCache, QuantKVCache,
+                                              PagedKVCache)))
         for i in range(cfg.n_layers):
             lp = _layer_at(params["blocks"], i)
             if inplace_kv:
@@ -339,7 +346,7 @@ def _decode_static(cfg: ModelConfig, params: dict, x: Array, cache):
         return x, {"layers": layers}
     g, rem = _hybrid_layout(cfg)
     grouped, shared = cache["grouped"], cache["shared"]
-    shared_inplace = isinstance(shared, KVCache)
+    shared_inplace = isinstance(shared, (KVCache, QuantKVCache))
     for gi in range(g):
         for j in range(cfg.attn_every):
             x, ci = block_fn(_layer_at(params["blocks"],
@@ -380,6 +387,12 @@ def decode_step(cfg: ModelConfig, params: dict, token: Array,
     x = embed_tokens(cfg, params["embed"], token)
     kind = cfg.backbone_kind
     block_fn = functools.partial(_block_decode, cfg, kind)
+
+    if isinstance(cache, dict) and isinstance(cache.get("layers"),
+                                              PagedKVCache):
+        # the paged cache has no per-layer axis on its block tables, so it
+        # cannot thread the layer lax.scan — always take the static path
+        static_layers = True
 
     if static_layers:
         x, new_cache = _decode_static(cfg, params, x, cache)

@@ -21,6 +21,7 @@ Three simulator paths share one workload model:
   cross-checked against the Erlang-C/Lee-Longton analytics in
   ``core.mgc``.
 """
+from .batch_service import BatchServiceSim, simulate_batch_service
 from .batched import (BatchStats, SweepResult, lindley_jax, lindley_numpy,
                       simulate_fifo, simulate_fifo_batch, sweep)
 from .disciplines import (ALL_DISCIPLINES, DEFAULT_WINDOW, DISCIPLINES,
@@ -51,4 +52,5 @@ __all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
            "event_loop_mgc", "mgc_prediction", "free_server_numpy",
            "free_server_jax", "simulate_mgc", "simulate_mgc_batch",
            "sweep_mgc", "ci95", "Segment", "DriftTrace",
-           "generate_drift_trace", "trace_from_stream_batch"]
+           "generate_drift_trace", "trace_from_stream_batch",
+           "BatchServiceSim", "simulate_batch_service"]

@@ -56,6 +56,11 @@ class ServingReport:
     # last predicted-vs-measured drift check (obs.monitor
     # DriftReport.as_dict()); None when no monitor ran
     drift: dict | None = None
+    # KV occupancy gauge sampled at engine chunk boundaries:
+    # {"mean_tokens_in_use", "peak_tokens_in_use", "mean_pool_fill",
+    #  "peak_pool_fill", "pool_tokens", "n_samples"}; None from producers
+    # without a real KV pool (virtual accounting, legacy engines)
+    occupancy: dict | None = None
 
 
 def empty_report(n_resolves: int = 0,
@@ -72,10 +77,26 @@ def empty_report(n_resolves: int = 0,
         n_resolves=n_resolves, estimator_state=estimator_state)
 
 
+def occupancy_summary(samples, pool_tokens: int) -> dict | None:
+    """Fold (tokens_in_use, pool_fill) samples into the report's
+    occupancy gauge; None on no samples (producer had no KV pool)."""
+    if not samples:
+        return None
+    tok = np.asarray([s[0] for s in samples], dtype=np.float64)
+    fill = np.asarray([s[1] for s in samples], dtype=np.float64)
+    return {"mean_tokens_in_use": float(tok.mean()),
+            "peak_tokens_in_use": float(tok.max()),
+            "mean_pool_fill": float(fill.mean()),
+            "peak_pool_fill": float(fill.max()),
+            "pool_tokens": int(pool_tokens),
+            "n_samples": int(tok.size)}
+
+
 def summarize(problem: Problem, completed: Sequence[CompletedRequest],
               horizon: float, n_resolves: int = 0,
               estimator_state: dict | None = None,
-              drift: dict | None = None) -> ServingReport:
+              drift: dict | None = None,
+              occupancy: dict | None = None) -> ServingReport:
     if not completed:
         # empty-stream contract shared with the simulators (see
         # ``mg1.empty_result``): zeroed statistics, never a ValueError
@@ -117,4 +138,5 @@ def summarize(problem: Problem, completed: Sequence[CompletedRequest],
         wait_percentiles=percentile_summary(waits),
         system_time_percentiles=percentile_summary(syst),
         drift=drift,
+        occupancy=occupancy,
     )

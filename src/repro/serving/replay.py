@@ -57,7 +57,7 @@ from ..obs.trace import VIRTUAL_PID, timecall
 from ..queueing_sim.batched import lindley_numpy
 from ..queueing_sim.workload import DriftTrace
 from .estimators import EstimatorState, OnlineEstimators
-from .metrics import ServingReport, percentile_summary
+from .metrics import ServingReport, occupancy_summary, percentile_summary
 
 __all__ = ["ReplayConfig", "Controller", "BlockRecord", "ReplayResult",
            "ReplayHarness"]
@@ -108,6 +108,10 @@ class BlockRecord:
     # predicted-vs-measured drift check after this block
     # (obs.monitor DriftReport.as_dict()); None outside drift mode
     drift: dict | None = None
+    # time-averaged reasoning tokens held in service over the block's
+    # service window (sum_i l_i (finish_i - start_i) / span): the replay
+    # twin's analogue of the engine's tokens-in-use occupancy gauge
+    mean_tokens_in_use: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,6 +189,11 @@ class ReplayResult:
             system_time_percentiles=percentile_summary(syst),
             drift=next((b.drift for b in reversed(self.blocks)
                         if b.drift is not None), None),
+            # the replay twin serves one request at a time against an
+            # unbounded virtual cache, so there is no finite pool to fill:
+            # pool_tokens = 0 and fill 0.0 by convention
+            occupancy=occupancy_summary(
+                [(b.mean_tokens_in_use, 0.0) for b in self.blocks], 0),
         )
 
 
@@ -403,11 +412,18 @@ class ReplayHarness:
             prev_finish = float(finish[-1])
             budgets[idx], services[idx] = l, s
             waits[idx] = start - a
+            # tokens-in-use occupancy over the block's service window: one
+            # request in service at a time (M/G/1), holding l_i tokens for
+            # its service duration
+            span = max(float(finish[-1] - start[0]), 1e-12)
+            block_tokens = float(np.sum(l * (finish - start)) / span)
             if self.metrics is not None:
                 self.metrics.histogram("replay.wait").record_many(waits[idx])
                 self.metrics.histogram("replay.service").record_many(s)
                 self.metrics.histogram("replay.system_time").record_many(
                     finish - a)
+                self.metrics.histogram("replay.tokens_in_use").record(
+                    block_tokens)
                 self.metrics.counter("replay.requests").inc(b1 - b0)
             if self.tracer is not None:
                 self._trace_block(b0, a, k, l, s, start, finish)
@@ -444,7 +460,8 @@ class ReplayHarness:
                 mean_wait=float(waits[idx].mean()),
                 mean_service=float(s.mean()),
                 estimator=ctl.state().as_dict(),
-                drift=drift_rec))
+                drift=drift_rec,
+                mean_tokens_in_use=block_tokens))
         p, correct = self._accuracy(trace.types, budgets, trace.correct_us)
         return ReplayResult(
             arrivals=trace.arrivals.copy(), types=trace.types.copy(),

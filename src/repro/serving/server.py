@@ -34,7 +34,7 @@ from ..obs.trace import VIRTUAL_PID, timecall
 from ..queueing_sim.workload import Stream
 from .continuous import ContinuousBatchingEngine
 from .engine import DecodeEngine
-from .metrics import ServingReport, summarize
+from .metrics import ServingReport, occupancy_summary, summarize
 from .request import CompletedRequest, Phase, Request
 from .scheduler import Scheduler
 
@@ -71,6 +71,9 @@ class LLMServer:
         # pointer comparison per would-be event
         self.tracer = tracer
         self.metrics = metrics
+        # (tokens_in_use, pool_fill) samples from the continuous engine,
+        # one per decode chunk; folded into ServingReport.occupancy
+        self._occupancy_samples: list = []
 
     # ----------------------------------------------------------------- core
     def _service_time(self, reqs) -> float:
@@ -96,6 +99,12 @@ class LLMServer:
                     [(r.rid, r.prompt, r.budget, self.cfg.max_extra_tokens)
                      for r in pending])
                 pending = [r for r, ok in zip(pending, flags) if not ok]
+            tokens_in_use, fill = eng.tokens_in_use, eng.pool_fill
+            self._occupancy_samples.append((tokens_in_use, fill))
+            if self.metrics is not None:
+                self.metrics.histogram("server.tokens_in_use").record(
+                    tokens_in_use)
+                self.metrics.gauge("server.pool_fill").set(fill)
             for s in eng.step_chunk():
                 done[s.rid] = s
         for r in reqs:
@@ -155,6 +164,7 @@ class LLMServer:
         """
         self.completed = []
         self.scheduler.reset()
+        self._occupancy_samples = []
         queries = list(stream.queries)
         n = len(queries)
         i = 0                       # next arrival
@@ -215,9 +225,14 @@ class LLMServer:
                     self.metrics.counter("server.requests").inc()
                 if self.tracer is not None:
                     self._trace_request(r, start, finish, dur)
+        occ = None
+        if self._occupancy_samples:
+            occ = occupancy_summary(self._occupancy_samples,
+                                    self.engine.pool_tokens)
         return summarize(self.problem, self.completed, horizon,
                          self.allocator.n_resolves,
-                         estimator_state=self.allocator.estimator_state())
+                         estimator_state=self.allocator.estimator_state(),
+                         occupancy=occ)
 
     def _trace_request(self, r, start: float, finish: float,
                        dur: float) -> None:

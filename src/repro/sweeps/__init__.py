@@ -41,6 +41,7 @@ The scalar path (``core.allocator.solve``) remains the reference
 implementation; ``tests/test_solver_grid.py`` pins per-cell agreement
 (continuous optima to 1e-6, identical integer budgets).
 """
+from .batch_service import BatchServiceGrid, solve_grid_batch_service
 from .evaluate import GridEvaluation, evaluate_cells, evaluate_solution
 from .frontier import (frontier_comparison, heavy_traffic_lams,
                        heavy_traffic_slice, max_sustainable_lambda,
@@ -54,4 +55,5 @@ __all__ = [
     "GridEvaluation", "evaluate_cells", "evaluate_solution",
     "pareto_mask", "pareto_front", "saturation_rate", "heavy_traffic_lams",
     "heavy_traffic_slice", "max_sustainable_lambda", "frontier_comparison",
+    "BatchServiceGrid", "solve_grid_batch_service",
 ]

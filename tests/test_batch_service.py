@@ -1,0 +1,182 @@
+"""Occupancy-dependent batch-service model vs its DES cross-validation lane.
+
+Pins the contracts documented in ``core/batch_service.py``:
+
+* ``fit_step_latency`` recovers an affine step-latency model exactly from
+  synthetic measurements (and clamps noise-negative slopes),
+* the tagged-customer occupancy fixed point floors at 1, caps at
+  max_batch, and matches the size-biased occupancy a request experiences
+  in the DES,
+* exact reductions: flat model (d1 = 0) -> uncorrected M/G/c; and
+  max_batch = 1 -> the paper's M/G/1 P-K wait,
+* corrected analytics track the DES mean service/system time within the
+  documented envelope at moderate load, where the uncorrected prediction
+  is off by the occupancy ratio,
+* ``solve_grid_batch_service`` converges and reduces to a plain
+  ``solve_grid(..., c=max_batch)`` under a flat model.
+"""
+import numpy as np
+import pytest
+
+from repro.core.batch_service import (StepLatencyModel, batch_service_wait,
+                                      corrected_taskset, fit_step_latency,
+                                      occupancy_fixed_point)
+from repro.core.mgc import mgc_wait_np
+from repro.core.params import paper_tasks
+from repro.core.queueing import mean_wait, service_moments
+from repro.queueing_sim.batch_service import simulate_batch_service
+from repro.sweeps import solve_grid
+from repro.sweeps.batch_service import solve_grid_batch_service
+
+MODEL = StepLatencyModel(d0=0.02, d1=0.004)
+
+
+@pytest.fixture(scope="module")
+def tasks():
+    return paper_tasks()
+
+
+@pytest.fixture(scope="module")
+def lengths(tasks):
+    return np.full(tasks.n_tasks, 120.0)
+
+
+# ------------------------------------------------------------------ fitting
+def test_fit_recovers_affine_exactly():
+    b = np.array([1.0, 2.0, 4.0, 8.0, 16.0])
+    m = fit_step_latency(b, 0.015 + 0.003 * b)
+    assert m.d0 == pytest.approx(0.015, rel=1e-9)
+    assert m.d1 == pytest.approx(0.003, rel=1e-9)
+    assert m.ratio(1) == pytest.approx(1.0)
+    assert m.ratio(8) > m.ratio(2) > 1.0
+
+
+def test_fit_clamps_negative_slope():
+    m = fit_step_latency([1, 2, 4, 8], [0.02, 0.019, 0.018, 0.017])
+    assert m.d1 == 0.0
+    assert np.allclose(m.ratio([1, 4, 16]), 1.0)
+
+
+def test_fit_rejects_degenerate_input():
+    with pytest.raises(ValueError):
+        fit_step_latency([1.0], [0.02])
+    with pytest.raises(ValueError):
+        StepLatencyModel(d0=0.01, d1=-1e-3).validate()
+
+
+# -------------------------------------------------------------- fixed point
+def test_occupancy_floors_at_one(tasks, lengths):
+    b, conv, _ = occupancy_fixed_point(tasks, lengths, 1e-6, MODEL,
+                                       max_batch=8)
+    assert conv and b == pytest.approx(1.0, abs=1e-3)
+
+
+def test_occupancy_caps_at_max_batch(tasks, lengths):
+    b, _, _ = occupancy_fixed_point(tasks, lengths, 50.0, MODEL, max_batch=8)
+    assert b == pytest.approx(8.0, abs=1e-6)
+
+
+def test_occupancy_monotone_in_lambda(tasks, lengths):
+    bs = [occupancy_fixed_point(tasks, lengths, lam, MODEL, max_batch=16)[0]
+          for lam in (0.2, 0.5, 1.0, 2.0)]
+    assert all(b2 >= b1 for b1, b2 in zip(bs, bs[1:]))
+    assert all(1.0 <= b <= 16.0 for b in bs)
+
+
+def test_occupancy_matches_des_experienced(tasks, lengths):
+    """b_bar approximates the size-biased occupancy a request experiences
+    over its own service in the DES (not the time average)."""
+    lam = 0.8
+    b, conv, _ = occupancy_fixed_point(tasks, lengths, lam, MODEL,
+                                       max_batch=8)
+    sim = simulate_batch_service(tasks, lengths, lam, MODEL, max_batch=8,
+                                 n=4000, seed=1)
+    assert conv
+    assert b == pytest.approx(sim.exp_occupancy, rel=0.15)
+
+
+# ----------------------------------------------------------- exact reductions
+def test_flat_model_reduces_to_mgc(tasks, lengths):
+    flat = StepLatencyModel(d0=0.05, d1=0.0)
+    for lam, c in ((0.5, 4), (1.0, 8)):
+        res = batch_service_wait(tasks, lengths, lam, flat, max_batch=c)
+        ref = float(mgc_wait_np(tasks, lengths, lam, c_servers=c))
+        assert res.ratio == pytest.approx(1.0)
+        assert res.mean_wait == pytest.approx(ref, rel=1e-12, abs=1e-15)
+
+
+def test_single_server_reduces_to_pk(tasks, lengths):
+    lam = 0.05
+    res = batch_service_wait(tasks, lengths, lam, MODEL, max_batch=1)
+    corrected = corrected_taskset(tasks, MODEL, 1.0)
+    ref = mean_wait(service_moments(corrected, lengths, lam), lam)
+    assert res.b_bar == 1.0
+    assert res.mean_wait == pytest.approx(float(ref), rel=1e-6)
+
+
+def test_unstable_returns_inf(tasks, lengths):
+    res = batch_service_wait(tasks, lengths, 5.0, MODEL, max_batch=2)
+    assert np.isinf(res.mean_wait)
+
+
+# --------------------------------------------------------------- DES envelope
+@pytest.mark.parametrize("lam,c", [(0.3, 8), (0.8, 8), (0.8, 4)])
+def test_analytics_track_des_service(tasks, lengths, lam, c):
+    res = batch_service_wait(tasks, lengths, lam, MODEL, max_batch=c)
+    sim = simulate_batch_service(tasks, lengths, lam, MODEL, max_batch=c,
+                                 n=4000, seed=0)
+    # corrected mean service within 10% of the occupancy-dependent DES
+    assert res.mean_service == pytest.approx(sim.mean_service, rel=0.10)
+    # the uncorrected (r = 1) service misses by roughly the occupancy
+    # ratio whenever occupancy actually builds up
+    uncorr = float(np.sum(np.asarray(tasks.pi)
+                          * (np.asarray(tasks.t0)
+                             + np.asarray(tasks.c) * lengths)))
+    if res.b_bar > 1.5:
+        assert abs(uncorr - sim.mean_service) > \
+            2 * abs(res.mean_service - sim.mean_service)
+
+
+def test_analytics_track_des_system_time(tasks, lengths):
+    """Documented envelope: corrected mean wait/system time within ~30%
+    of the DES at moderate load (rho/c in [0.3, 0.9])."""
+    lam, c = 1.5, 8
+    res = batch_service_wait(tasks, lengths, lam, MODEL, max_batch=c)
+    sim = simulate_batch_service(tasks, lengths, lam, MODEL, max_batch=c,
+                                 n=6000, seed=2)
+    assert np.isfinite(res.mean_wait)
+    assert res.mean_system_time == pytest.approx(sim.mean_system_time,
+                                                 rel=0.30)
+
+
+def test_des_respects_concurrency_limit(tasks, lengths):
+    sim = simulate_batch_service(tasks, lengths, 3.0, MODEL, max_batch=4,
+                                 n=1500, seed=3)
+    assert sim.peak_occupancy <= 4
+    assert sim.n == 1500
+    assert sim.mean_system_time >= sim.mean_service > 0.0
+
+
+# ------------------------------------------------------------------- grid
+def test_grid_joint_solve_converges(tasks):
+    lam = np.array([0.2, 0.6])
+    out = solve_grid_batch_service(tasks, lam[:, None],
+                                   np.array([10.0, 30.0])[None, :],
+                                   4096.0, MODEL, max_batch=8)
+    assert out.converged and out.rounds <= 15
+    assert out.solution.lengths_int.shape == (2, 2, tasks.n_tasks)
+    assert bool(np.all(out.b_bar >= 1.0)) and bool(np.all(out.b_bar <= 8.0))
+    assert bool(np.all(out.ratio >= 1.0))
+    # heavier arrivals -> no lower occupancy, column-wise
+    assert bool(np.all(out.b_bar[1] >= out.b_bar[0] - 1e-9))
+
+
+def test_grid_flat_model_equals_plain_mgc_grid(tasks):
+    flat = StepLatencyModel(d0=0.05, d1=0.0)
+    lam, alpha, l_max = 0.4, 20.0, 4096.0
+    out = solve_grid_batch_service(tasks, lam, alpha, l_max, flat,
+                                   max_batch=8)
+    ref = solve_grid(tasks, lam, alpha, l_max, c=8)
+    assert out.rounds == 1 and out.converged
+    assert np.array_equal(out.solution.lengths_int, ref.lengths_int)
+    assert np.allclose(out.ratio, 1.0)

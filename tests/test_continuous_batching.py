@@ -171,6 +171,67 @@ def test_degenerate_budget_retires_without_overrun(setup):
         assert len(done[0]) == 1 and len(done[1]) == 1
 
 
+def test_seeded_sampling_chunk_invariant(setup):
+    """Stochastic decoding draws token g of request rid from
+    fold_in(fold_in(key(seed), rid), g): the stream depends only on
+    (seed, rid, g), never on chunk size, stepping mode, or batch
+    composition."""
+    cfg, params = setup
+    reqs = [(0, np.arange(1, 7, dtype=np.int32), 5, 2),
+            (1, np.arange(3, 12, dtype=np.int32), 6, 2),
+            (2, np.arange(2, 5, dtype=np.int32), 4, 2)]
+
+    def drain(stepper, max_slots, admit=reqs):
+        cb = ContinuousBatchingEngine(cfg, params, max_slots=max_slots,
+                                      capacity=64, temperature=0.7, seed=3)
+        pending = list(admit)
+        out = {}
+        for _ in range(60):
+            if pending:
+                ok = cb.admit_many(pending)
+                pending = [r for r, f in zip(pending, ok) if not f]
+            for s in stepper(cb):
+                out[s.rid] = s.tokens
+            if cb.n_active == 0 and not pending:
+                break
+        return out
+
+    ref = drain(lambda cb: cb.step(), 3)
+    assert sorted(ref) == [0, 1, 2]
+    # fused chunks, any chunk size: same streams
+    assert drain(lambda cb: cb.step_chunk(1), 3) == ref
+    assert drain(lambda cb: cb.step_chunk(3), 3) == ref
+    assert drain(lambda cb: cb.step_chunk(7), 3) == ref
+    # fewer slots: requests join mid-flight next to strangers, streams
+    # unchanged (per-slot keys are rid-derived, not slot-derived)
+    assert drain(lambda cb: cb.step_chunk(3), 2) == ref
+    # served alone: still the same stream
+    for r in reqs:
+        assert drain(lambda cb: cb.step_chunk(4), 1, admit=[r])[r[0]] \
+            == ref[r[0]]
+
+
+def test_seeded_sampling_paged_matches_slot(setup):
+    cfg, params = setup
+    reqs = [(i, np.arange(1 + i, 8 + 2 * i, dtype=np.int32), 4 + i, 2)
+            for i in range(3)]
+
+    def drain(paged):
+        cb = ContinuousBatchingEngine(cfg, params, max_slots=3, capacity=64,
+                                      chunk=3, temperature=0.7, seed=11,
+                                      paged=paged, block_size=8)
+        cb.admit_many(reqs)
+        out = {}
+        for _ in range(30):
+            for s in cb.step_chunk():
+                out[s.rid] = s.tokens
+            if cb.n_active == 0:
+                break
+        return out
+
+    assert drain(paged=True) == drain(paged=False)
+
+
 def test_budget_enforced_per_slot(setup):
     cfg, params = setup
     cb = ContinuousBatchingEngine(cfg, params, max_slots=2, capacity=64)
