@@ -81,6 +81,25 @@ GATES = {
         ("analytics.rel_err",
          lambda d: d["analytics"]["rel_err"], 0.35, "ceil_abs"),
     ],
+    "BENCH_resilience.json": [
+        # ladder-vs-naive deadline goodput under 2x overload: a
+        # machine-independent ratio; the strict > 1 assert lives in the
+        # bench itself, the gate catches an order-of-magnitude collapse
+        ("burst.goodput_ratio",
+         lambda d: d["burst"]["goodput_ratio"], 0.5),
+        # ladder p99 wait must never exceed the naive baseline's
+        ("burst.p99_wait_ratio",
+         lambda d: d["burst"]["p99_wait_ratio"], 1.0, "ceil_abs"),
+        # retry-storm metastability: impatient goodput over patient
+        # goodput — collapse, not graceful degradation
+        ("retry.collapse_ratio",
+         lambda d: d["retry"]["collapse_ratio"], 0.3, "ceil_abs"),
+        # analytic effective-arrival-rate fixed point vs the DES at a
+        # stable operating point
+        ("retry.lam_eff_rel_err",
+         lambda d: d["retry"]["fixed_point"]["lam_eff_rel_err"],
+         0.2, "ceil_abs"),
+    ],
     "BENCH_obs.json": [
         # histogram ingest must stay vectorized (order-of-magnitude floor)
         ("hist.updates_per_s", lambda d: d["hist"]["updates_per_s"], 0.02),

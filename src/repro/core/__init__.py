@@ -25,9 +25,11 @@ from .objective import grad, hessian, lipschitz_grad_bound, objective
 from .params import (PAPER_TABLE1_LSTAR, Problem, ServerParams, TaskSet,
                      paper_problem, paper_tasks)
 from .pga import safe_step_size, solve_pga, solve_pga_backtracking
-from .queueing import (is_stable, max_stable_budget, mean_system_time,
-                       mean_wait, priority_mean_waits, service_moments,
-                       stabilizable, stability_clip, worst_case)
+from .queueing import (RetryFixedPoint, is_stable, max_stable_budget,
+                       mean_system_time, mean_wait, priority_mean_waits,
+                       retry_fixed_point, retry_stable, service_moments,
+                       stabilizable, stability_clip, timeout_probability,
+                       worst_case)
 
 __all__ = [
     "Problem", "TaskSet", "ServerParams", "paper_problem", "paper_tasks",
@@ -44,4 +46,6 @@ __all__ = [
     "mean_system_time_mgc", "mgc_wait_np", "objective_mgc", "solve_mgc",
     "StepLatencyModel", "fit_step_latency", "occupancy_fixed_point",
     "corrected_taskset", "batch_service_wait", "BatchServiceResult",
+    "RetryFixedPoint", "retry_fixed_point", "retry_stable",
+    "timeout_probability",
 ]

@@ -217,3 +217,102 @@ def max_stable_budget(problem: Problem, margin: float = 1e-3) -> float:
     cbar = float(jnp.sum(tasks.pi * tasks.c))
     l = ((1.0 - margin) / lam - es0) / cbar
     return max(0.0, min(l, problem.server.l_max))
+
+
+class RetryFixedPoint(NamedTuple):
+    """Effective-arrival-rate fixed point under timeout-with-retry.
+
+    ``lam_eff`` solves ``lam_eff = lam * sum_{j<=K} p(lam_eff)^j`` where
+    ``p`` is the per-attempt timeout probability P(W > patience) at load
+    ``lam_eff`` (exponential-tail approximation of the P-K wait, the
+    same tail ``obs.monitor`` uses). ``stable`` is the retry-extended
+    stability certificate: the classic rho < 1 test applied to the
+    retry-inflated rate — when retries orphan their server work, every
+    attempt consumes E[S], so the queue is stable iff
+    ``lam_eff * E[S] < 1``. ``converged`` reports whether the monotone
+    iteration settled; in the metastable regime it pins at the saturated
+    point lam * (K + 1) with p = 1.
+    """
+    lam_eff: float
+    p_timeout: float
+    rho_eff: float
+    stable: bool
+    converged: bool
+
+
+def timeout_probability(lam: float, es: float, es2: float,
+                        patience: float) -> float:
+    """P(wait > patience) for M/G/1 FIFO, exponential-tail approximation.
+
+    P(W > 0) = rho and W | W > 0 ~ Exp(mean E[W]/rho), so
+    P(W > t) = rho * exp(-t * rho / E[W]); saturates at 1 when rho >= 1
+    (waits diverge, every finite patience is eventually exceeded).
+    Host-f64 control-plane helper, like :func:`priority_mean_waits`.
+    """
+    if not np.isfinite(patience):
+        return 0.0
+    rho = lam * es
+    if rho >= 1.0:
+        return 1.0
+    if patience <= 0.0:
+        return float(rho)
+    w = lam * es2 / (2.0 * (1.0 - rho))
+    if w <= 0.0:
+        return 0.0
+    return float(rho * np.exp(-patience * rho / w))
+
+
+def retry_fixed_point(lam: float, es: float, es2: float, patience: float,
+                      max_retries: int, max_iters: int = 500,
+                      tol: float = 1e-12) -> RetryFixedPoint:
+    """Solve the retry-inflated arrival-rate fixed point (see above).
+
+    The map ``g(x) = lam * (1 - p(x)**(K+1)) / (1 - p(x))`` is monotone
+    increasing in x, so iterating from ``x = lam`` converges to the
+    least fixed point when one exists below saturation; crossing
+    rho >= 1 saturates p at 1 and the iteration pins at lam * (K + 1) —
+    the retry-storm metastable regime, reported as unstable. This is the
+    analytic counterpart of the goodput-collapse curve measured by
+    ``queueing_sim.impatience`` (orphaned-service policies).
+    """
+    kk = int(max_retries)
+    if kk == 0 or not np.isfinite(patience):
+        p = timeout_probability(lam, es, es2, patience)
+        rho_eff = lam * es
+        return RetryFixedPoint(float(lam), p, float(rho_eff),
+                               bool(rho_eff < 1.0), True)
+    lam_eff = float(lam)
+    p = 0.0
+    converged = False
+    for _ in range(max_iters):
+        p = timeout_probability(lam_eff, es, es2, patience)
+        if p >= 1.0:
+            new = lam * (kk + 1)
+        else:
+            new = lam * (1.0 - p ** (kk + 1)) / (1.0 - p)
+        if abs(new - lam_eff) <= tol * max(abs(lam_eff), 1.0):
+            lam_eff = new
+            converged = True
+            break
+        lam_eff = new
+    rho_eff = lam_eff * es
+    return RetryFixedPoint(float(lam_eff), float(p), float(rho_eff),
+                           bool(converged and rho_eff < 1.0),
+                           bool(converged))
+
+
+def retry_stable(tasks: TaskSet, lengths, lam: float, patience: float,
+                 max_retries: int) -> bool:
+    """Retry-extended stability certificate at integer budgets ``lengths``.
+
+    Extends :func:`is_stable` (rho < 1) to timeout-with-retry clients
+    whose abandoned attempts orphan server work: computes the mixture
+    service moments host-side and requires the retry-inflated effective
+    rate to satisfy ``lam_eff * E[S] < 1`` at a converged fixed point.
+    """
+    lengths = np.asarray(lengths, dtype=np.float64)
+    t0, c, pi = (np.asarray(x) for x in (tasks.t0, tasks.c, tasks.pi))
+    t = t0 + c * lengths
+    es = float(np.sum(pi * t))
+    es2 = float(np.sum(pi * t * t))
+    return retry_fixed_point(lam, es, es2, patience, max_retries).stable

@@ -62,6 +62,12 @@ class DriftReport:
     rel_err_q: float            # tail relative error
     rho: float                  # estimator utilization at check time
     strikes: int                # consecutive over-tolerance checks
+    # overload alarm (orthogonal to drift): the estimated utilization
+    # itself crossed the monitor's ``rho_alarm`` threshold — the signal
+    # admission control escalates on even when the queueing model still
+    # fits the measurements (a correct model of an overloaded queue is
+    # not drift, but it is an emergency)
+    overload: bool = False
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -81,18 +87,24 @@ class DriftMonitor:
         over tolerance for a strike).
     wait_floor : absolute floor in the relative-error denominator so
         near-zero predicted waits (light traffic) don't divide to noise.
+    rho_alarm : estimated-utilization threshold for the ``overload``
+        flag on every report (instant — no patience: overload at the
+        estimator's time constant is already smoothed). ``n_overloads``
+        counts alarmed checks for reporting.
     """
 
     def __init__(self, *, rel_tol: float = 0.25, patience: int = 2,
                  min_samples: int = 64, q: float = 90.0,
                  gate_tail: bool = False, wait_floor: float = 1e-9,
-                 bits: int = 5):
+                 bits: int = 5, rho_alarm: float = 0.95):
         self.rel_tol = float(rel_tol)
         self.patience = int(patience)
         self.min_samples = int(min_samples)
         self.q = float(q)
         self.gate_tail = bool(gate_tail)
         self.wait_floor = float(wait_floor)
+        self.rho_alarm = float(rho_alarm)
+        self.n_overloads = 0
         self._bits = int(bits)
         self._hist = StreamingHistogram(bits=self._bits)
         self._strikes = 0
@@ -150,6 +162,12 @@ class DriftMonitor:
         rel_err = abs(measured - predicted) / denom
         denom_q = max(predicted_q, self.wait_floor)
         rel_err_q = abs(measured_q - predicted_q) / denom_q
+        # the overload alarm bypasses the sample gate: rho comes from the
+        # estimators, not the wait window, and an empty window right
+        # after a resolve is exactly when an overload must not be masked
+        overload = rho >= self.rho_alarm
+        if overload:
+            self.n_overloads += 1
 
         if snap.n < self.min_samples:
             report = DriftReport(
@@ -157,7 +175,7 @@ class DriftMonitor:
                 predicted_wait=predicted, measured_wait=measured,
                 rel_err=rel_err, predicted_q=predicted_q,
                 measured_q=measured_q, rel_err_q=rel_err_q, rho=rho,
-                strikes=self._strikes)
+                strikes=self._strikes, overload=overload)
             self.history.append(report)
             return report
 
@@ -171,6 +189,6 @@ class DriftMonitor:
             predicted_wait=predicted, measured_wait=measured,
             rel_err=rel_err, predicted_q=predicted_q,
             measured_q=measured_q, rel_err_q=rel_err_q, rho=rho,
-            strikes=self._strikes)
+            strikes=self._strikes, overload=overload)
         self.history.append(report)
         return report

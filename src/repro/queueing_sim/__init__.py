@@ -30,6 +30,9 @@ from .disciplines import (ALL_DISCIPLINES, DEFAULT_WINDOW, DISCIPLINES,
                           srpt_start_finish, sweep_disciplines,
                           windowed_jax, windowed_numpy,
                           windowed_start_finish)
+from .impatience import (ImpatienceResult, RetryPolicy,
+                         impatience_event_loop, impatience_jax,
+                         impatience_numpy, summarize_impatience)
 from .mg1 import (SimResult, event_loop, event_loop_mgc, mgc_prediction,
                   pk_prediction, simulate, srpt_event_loop)
 from .multiserver import (free_server_jax, free_server_numpy, simulate_mgc,
@@ -53,4 +56,6 @@ __all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
            "free_server_jax", "simulate_mgc", "simulate_mgc_batch",
            "sweep_mgc", "ci95", "Segment", "DriftTrace",
            "generate_drift_trace", "trace_from_stream_batch",
-           "BatchServiceSim", "simulate_batch_service"]
+           "BatchServiceSim", "simulate_batch_service",
+           "RetryPolicy", "ImpatienceResult", "impatience_event_loop",
+           "impatience_numpy", "impatience_jax", "summarize_impatience"]

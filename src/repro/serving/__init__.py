@@ -9,7 +9,9 @@ The closed control loop added in this package:
   observations feed the estimators, and token budgets are re-solved on a
   cadence through ``sweeps.solve_grid`` — no oracle operating point.
 """
-from .continuous import ContinuousBatchingEngine
+from .admission import (SHED_CLASS, AdmissionConfig, AdmissionController,
+                        AdmissionDecision)
+from .continuous import BlockAllocator, ContinuousBatchingEngine
 from .engine import DecodeEngine
 from .estimators import (EstimatorState, LatencyCalibrator, MixtureEstimator,
                          OnlineEstimators, RateEstimator,
@@ -21,7 +23,9 @@ from .request import CompletedRequest, Phase, Request
 from .scheduler import Scheduler
 from .server import LLMServer, ServerConfig
 
-__all__ = ["DecodeEngine", "ContinuousBatchingEngine", "LLMServer",
+__all__ = ["DecodeEngine", "ContinuousBatchingEngine", "BlockAllocator",
+           "AdmissionController", "AdmissionConfig", "AdmissionDecision",
+           "SHED_CLASS", "LLMServer",
            "ServerConfig", "Scheduler",
            "Request", "CompletedRequest", "Phase", "ServingReport",
            "summarize", "empty_report",

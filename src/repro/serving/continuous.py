@@ -146,6 +146,31 @@ class BlockAllocator:
         self._free.extend(blocks)
         assert len(self._free) <= self.n_blocks
 
+    def check_balance(self, in_use: Optional[int] = None) -> bool:
+        """Standing audit of the pool accounting; raises on violation.
+
+        Invariants: every free block is unique and in range (a double
+        ``free`` is the classic leak-by-aliasing), ``free + allocated ==
+        n_blocks`` (with ``in_use`` the caller's independent count of
+        blocks held — the engine passes its per-slot block lists), and
+        reservations stay within the pool. Chaos tests call this after
+        every fault scenario; ``tests/test_paged.py`` after every drain.
+        """
+        free = self._free
+        if len(set(free)) != len(free):
+            raise AssertionError("duplicate block on the free list")
+        if free and not all(0 <= b < self.n_blocks for b in free):
+            raise AssertionError("out-of-range block on the free list")
+        if not 0 <= self.reserved <= self.n_blocks:
+            raise AssertionError(
+                f"reservation accounting broken: {self.reserved} not in "
+                f"[0, {self.n_blocks}]")
+        if in_use is not None and len(free) + int(in_use) != self.n_blocks:
+            raise AssertionError(
+                f"block leak: {len(free)} free + {in_use} in use "
+                f"!= {self.n_blocks} total")
+        return True
+
 
 def _fold_sample(key: Array, g: Array, logits: Array,
                  temperature: float) -> Array:
@@ -168,7 +193,8 @@ class ContinuousBatchingEngine:
                  use_decode_kernel: bool = False, tracer=None,
                  paged: bool = False, block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 faults=None):
         if use_decode_kernel:
             cfg = dataclasses.replace(cfg, use_decode_kernel=True)
         self.cfg = cfg
@@ -182,6 +208,10 @@ class ContinuousBatchingEngine:
         # `is not None` check per dispatch when disabled. Jit labels feed
         # the obs.jax_hooks compile counters (per compile, not per call).
         self.tracer = tracer
+        # optional repro.faults injector bank: its on_decode_step hook
+        # fires at every step/chunk boundary (even while idle, so a
+        # pool-pressure reservation can't outlive its hold window)
+        self.faults = faults
         self.paged = paged
         from ..models import init_decode_cache
         from ..models.attention import init_paged_cache
@@ -596,12 +626,36 @@ class ContinuousBatchingEngine:
     def blocks_in_use(self) -> int:
         return self.allocator.n_allocated if self.paged else 0
 
+    def check_block_invariants(self) -> bool:
+        """Audit the paged pool against this engine's slot state.
+
+        Cross-checks :meth:`BlockAllocator.check_balance` with the
+        engine's independent count of held blocks (the per-slot block
+        lists) and verifies the slot reservations are covered by the
+        allocator's reservation counter (strict equality only when no
+        external tenant — e.g. ``repro.faults.PoolPressure`` — holds a
+        reservation, hence ``>=``). No-op ``True`` on non-paged engines;
+        chaos tests call it after every fault scenario.
+        """
+        if not self.paged:
+            return True
+        held = sum(len(b) for b in self._slot_blocks)
+        self.allocator.check_balance(in_use=held)
+        slot_res = sum(self._slot_reserved)
+        if self.allocator.reserved < slot_res:
+            raise AssertionError(
+                f"slot reservations {slot_res} exceed allocator "
+                f"reservation counter {self.allocator.reserved}")
+        return True
+
     def step(self) -> list:
         """One decode step for all active slots; returns finished Slots.
 
         Per-token reference path: one dispatch + one host sync per token.
         ``step_chunk`` is the fused fast path with identical semantics.
         """
+        if self.faults is not None:
+            self.faults.on_decode_step(self)
         if self.n_active == 0:
             return []
         if self.paged:
@@ -636,6 +690,8 @@ class ContinuousBatchingEngine:
         surplus steps are masked on device and discarded here; paged
         surplus writes drop on the sentinel past the reservation).
         """
+        if self.faults is not None:
+            self.faults.on_decode_step(self)
         chunk = self.chunk if chunk is None else chunk
         if self.n_active == 0 or chunk <= 0:
             return []

@@ -36,6 +36,19 @@ Every estimator supports two memories behind one interface:
 
 :class:`EstimatorState` is the frozen snapshot the harness records per
 control block and exposes through ``ServingReport.estimator_state``.
+
+**Observation guards.** Production telemetry is dirty: a dropped clock
+read arrives as NaN, an overflow as Inf, a race as a negative service
+time. EWMA/window folds are means — a single NaN poisons every
+subsequent estimate (``nan`` propagates through the numerator forever),
+which then propagates into the re-solved budgets. Every ``observe_*``
+therefore *skips* invalid rows (non-finite anywhere; non-positive
+service times; out-of-range types; out-of-order arrival gaps) and counts
+them in ``n_skipped``, surfaced via ``EstimatorState.n_skipped`` so
+monitoring can alarm on a corruption rate without the estimates
+themselves ever degrading. Regression-tested in
+``tests/test_faults.py``: one NaN observation must not move the
+re-solved budgets.
 """
 from __future__ import annotations
 
@@ -146,10 +159,20 @@ class RateEstimator:
                  window: int = 8192, t_origin: float | None = 0.0):
         self._mean = _make_mean(mode, halflife, window)
         self._last_t = t_origin
+        self.n_skipped = 0
 
     def observe_arrivals(self, ts) -> None:
-        """Fold a block of absolute arrival timestamps (sorted)."""
+        """Fold a block of absolute arrival timestamps (sorted).
+
+        Non-finite timestamps are skipped and counted (``n_skipped``)
+        before gaps are formed, so one NaN clock read costs one gap, not
+        the whole estimate; negative gaps (out-of-order stamps) are
+        likewise skipped rather than folded."""
         ts = np.asarray(ts, dtype=np.float64)
+        bad = ~np.isfinite(ts)
+        if bad.any():
+            self.n_skipped += int(bad.sum())
+            ts = ts[~bad]
         if ts.shape[0] == 0:
             return
         if self._last_t is None:
@@ -159,7 +182,11 @@ class RateEstimator:
                 return
         gaps = np.diff(ts, prepend=self._last_t)
         self._last_t = float(ts[-1])
-        self._mean.update(np.maximum(gaps, 0.0))
+        neg = gaps < 0.0
+        if neg.any():
+            self.n_skipped += int(neg.sum())
+            gaps = gaps[~neg]
+        self._mean.update(gaps)
 
     def observe(self, t: float) -> None:
         self.observe_arrivals([t])
@@ -186,9 +213,16 @@ class MixtureEstimator:
                  mode: str = "ewma", window: int = 8192):
         self.n_tasks = int(n_tasks)
         self._mean = _make_mean(mode, halflife, window)
+        self.n_skipped = 0
 
     def observe_types(self, types) -> None:
+        """Fold observed type indices; out-of-range indices (a corrupted
+        router tag) are skipped and counted, never folded."""
         types = np.asarray(types, dtype=np.int64)
+        bad = (types < 0) | (types >= self.n_tasks)
+        if bad.any():
+            self.n_skipped += int(bad.sum())
+            types = types[~bad]
         if types.shape[0] == 0:
             return
         onehot = np.zeros((types.shape[0], self.n_tasks))
@@ -214,9 +248,18 @@ class ServiceMomentEstimator:
     def __init__(self, halflife: float = 2048.0, mode: str = "ewma",
                  window: int = 8192):
         self._mean = _make_mean(mode, halflife, window)
+        self.n_skipped = 0
 
     def observe_services(self, s) -> None:
+        """Fold observed service times; non-finite or non-positive values
+        (NaN/Inf telemetry, negative clock races) are skipped and
+        counted — one poisoned measurement must not NaN the P-K inputs
+        forever (the EWMA numerator never recovers from a NaN fold)."""
         s = np.asarray(s, dtype=np.float64)
+        bad = ~(np.isfinite(s) & (s > 0.0))
+        if bad.any():
+            self.n_skipped += int(bad.sum())
+            s = s[~bad]
         if s.shape[0] == 0:
             return
         self._mean.update(np.stack([s, s * s], axis=-1))
@@ -273,11 +316,21 @@ class LatencyCalibrator:
         self._var_min = float(var_min)
         self._c_min = float(c_min)
         self._t0_min = float(t0_min)
+        self.n_skipped = 0
 
     def observe(self, types, budgets, services) -> None:
+        """Fold (type, budget, service) rows; rows with a non-finite /
+        non-positive service, non-finite / negative budget, or
+        out-of-range type are skipped and counted."""
         types = np.asarray(types, dtype=np.int64)
         budgets = np.asarray(budgets, dtype=np.float64)
         services = np.asarray(services, dtype=np.float64)
+        ok = (np.isfinite(services) & (services > 0.0)
+              & np.isfinite(budgets) & (budgets >= 0.0)
+              & (types >= 0) & (types < self.n_tasks))
+        if not ok.all():
+            self.n_skipped += int((~ok).sum())
+            types, budgets, services = types[ok], budgets[ok], services[ok]
         for k in np.unique(types):
             sel = types == k
             l, s = budgets[sel], services[sel]
@@ -321,6 +374,10 @@ class EstimatorState:
     identified: np.ndarray      # [N] slope identified from data?
     n_arrivals: int
     n_services: int
+    # invalid observations skipped by the guards (NaN/Inf/non-positive),
+    # summed across the bank — a health signal for monitoring, not an
+    # input to any estimate
+    n_skipped: int = 0
 
     @property
     def pk_wait(self) -> float:
@@ -344,6 +401,7 @@ class EstimatorState:
             "identified": [bool(v) for v in self.identified],
             "n_arrivals": int(self.n_arrivals),
             "n_services": int(self.n_services),
+            "n_skipped": int(self.n_skipped),
         }
 
 
@@ -389,4 +447,6 @@ class OnlineEstimators:
             t0=t0, c=c, identified=ident,
             n_arrivals=self.rate.n,
             n_services=self.moments.n,
+            n_skipped=(self.rate.n_skipped + self.mixture.n_skipped
+                       + self.moments.n_skipped + self.latency.n_skipped),
         )

@@ -61,6 +61,16 @@ class ServingReport:
     #  "peak_pool_fill", "pool_tokens", "n_samples"}; None from producers
     # without a real KV pool (virtual accounting, legacy engines)
     occupancy: dict | None = None
+    # overload-resilience block (serving.admission): goodput = correctly
+    # answered *served* requests per unit time — the quantity the
+    # degradation ladder defends under overload; None from producers
+    # predating admission control
+    goodput: float | None = None
+    n_shed: int = 0
+    shed_fraction: float = 0.0
+    # time-weighted fraction spent at each degradation level
+    # ({"0": 0.93, "1": 0.07, ...}); None when no admission controller ran
+    degradation_occupancy: dict | None = None
 
 
 def empty_report(n_resolves: int = 0,
@@ -139,4 +149,5 @@ def summarize(problem: Problem, completed: Sequence[CompletedRequest],
         system_time_percentiles=percentile_summary(syst),
         drift=drift,
         occupancy=occupancy,
+        goodput=float(correct.sum() / max(horizon, 1e-9)),
     )

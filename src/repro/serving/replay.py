@@ -112,6 +112,10 @@ class BlockRecord:
     # service window (sum_i l_i (finish_i - start_i) / span): the replay
     # twin's analogue of the engine's tokens-in-use occupancy gauge
     mean_tokens_in_use: float = 0.0
+    # admission control (when an AdmissionController is attached):
+    # degradation level during the block and typed-shed count
+    level: int = 0
+    n_shed: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,15 +135,31 @@ class ReplayResult:
     n_resolves: int
     estimator_state: dict          # final EstimatorState.as_dict()
     mode: str                      # "virtual" | "engine"
+    # admission control: per-request served mask (False = typed shed;
+    # all-True when no AdmissionController is attached) and the
+    # controller's final snapshot (None without admission)
+    served: np.ndarray | None = None
+    admission: dict | None = None
 
     @property
     def n(self) -> int:
         return int(self.arrivals.shape[0])
 
+    def served_mask(self) -> np.ndarray:
+        return (np.ones(self.n, dtype=bool) if self.served is None
+                else self.served)
+
     def measured(self, warmup_frac: float = 0.2) -> dict:
-        """Post-warmup measured operating point (the twin's observation)."""
+        """Post-warmup measured operating point (the twin's observation).
+
+        Means are over *served* requests (shed requests have no wait or
+        service; they show up in ``shed_frac`` instead).
+        """
         i0 = int(self.n * warmup_frac)
-        sel = slice(i0, None)
+        sel = np.zeros(self.n, dtype=bool)
+        sel[i0:] = True
+        shed_frac = 1.0 - float(self.served_mask()[sel].mean())
+        sel &= self.served_mask()
         syst = self.system_times[sel]
         se = float(syst.std(ddof=1) / np.sqrt(max(syst.shape[0], 2)))
         return {
@@ -150,43 +170,77 @@ class ReplayResult:
             "mean_service": float(self.services[sel].mean()),
             "mean_system_time": float(syst.mean()),
             "ci95_system_time": 1.96 * se,
+            "shed_frac": shed_frac,
+        }
+
+    def goodput(self, deadline: float = np.inf) -> dict:
+        """Correct completions per unit time (optionally SLO-deadlined).
+
+        A request counts toward goodput when it was admitted, answered
+        correctly, and (with a finite ``deadline``) finished within
+        ``deadline`` seconds of arrival — the resilience bench's scoring
+        of ladder-vs-naive under overload.
+        """
+        mask = self.served_mask() & self.correct
+        if np.isfinite(deadline):
+            mask &= self.system_times <= deadline
+        horizon = max(float(self.arrivals[-1]), 1e-12) if self.n else 1e-12
+        return {
+            "n_good": int(mask.sum()),
+            "goodput": float(mask.sum() / horizon),
+            "shed_fraction": 1.0 - float(self.served_mask().mean()),
+            "deadline": float(deadline),
         }
 
     def report(self, problem: Problem) -> ServingReport:
         """Summarize as a :class:`ServingReport` (array path; no per-request
-        object materialization, so million-query replays stay cheap)."""
-        syst = self.system_times
-        horizon = float(self.arrivals[-1] + self.system_times[-1] -
-                        self.waits[-1]) if self.n else 0.0
+        object materialization, so million-query replays stay cheap).
+        Wait/service/accuracy statistics are over served requests; shed
+        requests appear as ``n_shed`` / ``shed_fraction`` / ``goodput``."""
+        srv = self.served_mask()
+        if self.n == 0 or not srv.any():
+            from .metrics import empty_report
+            return empty_report(self.n_resolves, self.estimator_state)
+        syst = self.system_times[srv]
+        waits = self.waits[srv]
+        # last departure (shed requests contribute zero service, so the
+        # formula reduces to the pre-admission horizon when all served)
+        horizon = max(float(self.arrivals[-1] + self.system_times[-1]
+                            - self.waits[-1]), 1e-9)
         per_budget, per_sys = {}, {}
         for k in range(problem.tasks.n_tasks):
-            sel = self.types == k
+            sel = (self.types == k) & srv
             if sel.any():
                 per_budget[problem.tasks.names[k]] = \
                     float(self.budgets[sel].mean())
-                per_sys[problem.tasks.names[k]] = float(syst[sel].mean())
-        if self.n == 0:
-            from .metrics import empty_report
-            return empty_report(self.n_resolves, self.estimator_state)
+                per_sys[problem.tasks.names[k]] = \
+                    float(self.system_times[sel].mean())
         return ServingReport(
             n=self.n,
-            mean_wait=float(self.waits.mean()),
-            mean_service=float(self.services.mean()),
+            mean_wait=float(waits.mean()),
+            mean_service=float(self.services[srv].mean()),
             mean_system_time=float(syst.mean()),
             p50_system_time=float(np.percentile(syst, 50)),
             p99_system_time=float(np.percentile(syst, 99)),
-            utilization=float(self.services.sum() / max(horizon, 1e-9)),
-            accuracy=float(self.correct.mean()),
-            mean_accuracy_prob=float(self.accuracy_prob.mean()),
-            objective=float(problem.server.alpha * self.accuracy_prob.mean()
-                            - syst.mean()),
+            utilization=float(self.services[srv].sum() / horizon),
+            accuracy=float(self.correct[srv].mean()),
+            mean_accuracy_prob=float(self.accuracy_prob[srv].mean()),
+            objective=float(problem.server.alpha
+                            * self.accuracy_prob[srv].mean() - syst.mean()),
             per_task_budget=per_budget,
             per_task_system_time=per_sys,
-            tokens_generated=int(self.budgets.sum()),
+            tokens_generated=int(self.budgets[srv].sum()),
             n_resolves=self.n_resolves,
             estimator_state=self.estimator_state,
-            wait_percentiles=percentile_summary(self.waits),
+            wait_percentiles=percentile_summary(waits),
             system_time_percentiles=percentile_summary(syst),
+            goodput=float((srv & self.correct).sum() / horizon),
+            n_shed=int(self.n - srv.sum()),
+            shed_fraction=1.0 - float(srv.mean()),
+            degradation_occupancy=(
+                None if self.admission is None
+                else {str(k): v for k, v
+                      in self.admission["occupancy"].items()}),
             drift=next((b.drift for b in reversed(self.blocks)
                         if b.drift is not None), None),
             # the replay twin serves one request at a time against an
@@ -222,6 +276,10 @@ class Controller:
                                     mode=cfg.est_mode, window=cfg.est_window)
         self.budgets = np.full(self.n_tasks, int(cfg.l_init), dtype=np.int64)
         self.n_resolves = 0
+        # optional serving.admission.AdmissionController: when attached
+        # (ReplayHarness wires it), every re-solve also re-projects the
+        # degradation ladder down the allocator's accuracy-latency curve
+        self.admission = None
 
     @classmethod
     def from_problem(cls, problem: Problem, cfg: ReplayConfig) -> "Controller":
@@ -267,6 +325,21 @@ class Controller:
             return False
         self.budgets = np.asarray(sol.lengths_int, dtype=np.int64)
         self.n_resolves += 1
+        if self.admission is not None:
+            # re-project the degradation ladder: one vmapped solve over
+            # the tightened caps (anchored at the fresh solution's
+            # largest budget) walks the allocator's own accuracy-latency
+            # curve; infeasible cells fall back to clipping the level-0
+            # solution at the cap. set_ladder re-enforces monotonicity.
+            caps = self.admission.ladder_l_max(float(self.budgets.max()))
+            lsol = solve_grid(tasks_hat, lam, self.alpha, caps[1:])
+            lower = np.asarray(lsol.lengths_int, dtype=np.int64)
+            feas = np.asarray(lsol.feasible, dtype=bool)
+            clip = np.minimum(self.budgets[None, :],
+                              np.floor(caps[1:]).astype(np.int64)[:, None])
+            lower = np.where(feas[:, None], lower, clip)
+            self.admission.set_ladder(np.vstack([self.budgets[None, :],
+                                                 lower]))
         return True
 
 
@@ -274,11 +347,21 @@ class ReplayHarness:
     """The plant: replays a trace against the controller, virtual or real."""
 
     def __init__(self, problem: Problem, cfg: Optional[ReplayConfig] = None,
-                 engine=None, tracer=None, metrics=None, monitor=None):
+                 engine=None, tracer=None, metrics=None, monitor=None,
+                 admission=None, faults=None):
         self.problem = problem
         self.cfg = cfg or ReplayConfig()
         self.engine = engine
         self.controller = Controller.from_problem(problem, self.cfg)
+        # overload hardening: admission (serving.admission
+        # .AdmissionController) gates each block through the degradation
+        # ladder and is re-projected at every controller re-solve; faults
+        # (repro.faults.FaultInjector / FaultSet) perturb the replayed
+        # physics and the observation stream deterministically
+        self.admission = admission
+        self.faults = faults
+        if admission is not None:
+            self.controller.admission = admission
         # observability: tracer (obs.trace.Tracer) emits per-request span
         # trees + re-solve spans; metrics (obs.metrics.MetricsRegistry)
         # folds wait/service/system-time histograms per block. Both are
@@ -382,65 +465,146 @@ class ReplayHarness:
              + np.asarray(t.D)[types])
         return p, correct_us < p
 
+    def _rho_signal(self, st: EstimatorState) -> float:
+        """Overload signal for the admission ladder: estimated rho at the
+        *level-0* budgets. Scoring the undegraded allocation keeps the
+        signal independent of the current degradation level (the naive
+        ``st.rho`` drops as soon as budgets shrink, which would read as
+        instant recovery and flap the ladder); falls back to ``st.rho``
+        until the latency curve is identified. A task allocated zero
+        budget at level 0 contributes only its intercept to the score,
+        so its (unidentifiable: constant budget) slope is not required."""
+        if self.admission is None:
+            return st.rho
+        base = self.admission.ladder()[0]
+        ident = np.asarray(st.identified) | (np.asarray(base) <= 0)
+        if ident.all() and np.isfinite(st.lam):
+            es0 = float(np.sum(st.pi * (st.t0 + st.c * base)))
+            return float(st.lam * es0)
+        return st.rho
+
     def _run(self, trace: DriftTrace, mode: str, fixed_lengths,
              prompt_len: int, max_extra_tokens: int) -> ReplayResult:
-        cfg, ctl = self.cfg, self.controller
+        cfg, ctl, adm = self.cfg, self.controller, self.admission
+        if self.faults is not None:
+            trace = self.faults.transform_trace(trace)
         n = trace.n
         rng = np.random.default_rng(cfg.seed)
         budgets = np.zeros(n, dtype=np.int64)
         services = np.zeros(n)
         waits = np.zeros(n)
+        served = np.ones(n, dtype=bool)
         blocks = []
         prev_finish = 0.0
         adaptive = fixed_lengths is None
+        last_level = adm.level if adm is not None else 0
         for b0 in range(0, n, cfg.block_size):
             b1 = min(b0 + cfg.block_size, n)
             idx = slice(b0, b1)
             a = trace.arrivals[idx]
             k = trace.types[idx]
             l = self._stamp_budgets(k, rng, fixed_lengths)
-            if mode == "virtual":
-                s = self._virtual_services(k, l)
+            level = last_level
+            admit = np.ones(b1 - b0, dtype=bool)
+            if adm is not None and adaptive:
+                level = adm.update(float(a[0]),
+                                   rho=self._rho_signal(ctl.state()))
+                admit, _, _ = adm.decide_batch(k)
+                # ladder cap bounds the stamped budgets (exploration
+                # jitter included); shed requests carry no budget
+                l = np.minimum(l, adm.budgets()[k])
+                l[~admit] = 0
+            level_changed, last_level = level != last_level, level
+            # --- fallible section: compute the block's physics into
+            # locals only. An engine failure here propagates with NO
+            # harness state mutated (no estimator folds, no Lindley
+            # carry, no block record) — the exception-safety contract
+            # tested by tests/test_faults.py::test_engine_failure_*.
+            s = np.zeros(b1 - b0)
+            if admit.any():
+                ka, la = k[admit], l[admit]
+                if mode == "virtual":
+                    s[admit] = self._virtual_services(ka, la)
+                else:
+                    s[admit] = self._engine_services(ka, la, prompt_len,
+                                                     max_extra_tokens)
+                if self.faults is not None:
+                    s[admit] *= self.faults.service_multipliers(a[admit])
+                # Lindley continuation over the admitted requests:
+                # bumping the first admitted arrival to the previous
+                # block's last departure reproduces the single global
+                # pass exactly (start_i = max(a_i, finish_{i-1}))
+                a_eff = a[admit].copy()
+                a_eff[0] = max(a_eff[0], prev_finish)
+                start_a, finish_a = lindley_numpy(a_eff, s[admit])
+                next_finish = float(finish_a[-1])
             else:
-                s = self._engine_services(k, l, prompt_len, max_extra_tokens)
-            # Lindley continuation: bumping the block's first arrival to the
-            # previous block's last departure reproduces the recursion of a
-            # single global pass exactly (start_i = max(a_i, finish_{i-1}))
-            a_eff = a.copy()
-            a_eff[0] = max(a_eff[0], prev_finish)
-            start, finish = lindley_numpy(a_eff, s)
-            prev_finish = float(finish[-1])
+                start_a = finish_a = np.zeros(0)
+                next_finish = prev_finish
+            # the observed copy of the services: corruption faults poison
+            # what the estimators see, never the physics
+            s_obs = s
+            drop = None
+            if self.faults is not None and admit.any():
+                s_obs = s.copy()
+                s_obs[admit] = self.faults.corrupt_observations(s[admit])
+                drop = np.zeros(b1 - b0, dtype=bool)
+                drop[admit] = self.faults.drop_mask(int(admit.sum()))
+            # --- commit section: nothing below may fail mid-way (the
+            # estimator folds are guarded total functions), so harness
+            # state is only ever advanced by fully-served blocks.
+            prev_finish = next_finish
+            start = np.zeros(b1 - b0)
+            finish = np.zeros(b1 - b0)
+            start[admit], finish[admit] = start_a, finish_a
             budgets[idx], services[idx] = l, s
-            waits[idx] = start - a
+            served[idx] = admit
+            waits[idx] = np.where(admit, start - a, 0.0)
             # tokens-in-use occupancy over the block's service window: one
             # request in service at a time (M/G/1), holding l_i tokens for
             # its service duration
-            span = max(float(finish[-1] - start[0]), 1e-12)
-            block_tokens = float(np.sum(l * (finish - start)) / span)
+            if admit.any():
+                span = max(float(finish_a[-1] - start_a[0]), 1e-12)
+                block_tokens = float(np.sum(l[admit]
+                                            * (finish_a - start_a)) / span)
+            else:
+                block_tokens = 0.0
             if self.metrics is not None:
-                self.metrics.histogram("replay.wait").record_many(waits[idx])
-                self.metrics.histogram("replay.service").record_many(s)
+                self.metrics.histogram("replay.wait").record_many(
+                    waits[idx][admit])
+                self.metrics.histogram("replay.service").record_many(
+                    s[admit])
                 self.metrics.histogram("replay.system_time").record_many(
-                    finish - a)
+                    (finish - a)[admit])
                 self.metrics.histogram("replay.tokens_in_use").record(
                     block_tokens)
                 self.metrics.counter("replay.requests").inc(b1 - b0)
-            if self.tracer is not None:
+                if not admit.all():
+                    self.metrics.counter("replay.shed").inc(
+                        int((~admit).sum()))
+            if self.tracer is not None and admit.all():
                 self._trace_block(b0, a, k, l, s, start, finish)
             resolved = False
             drift_rec = None
-            if adaptive:
-                ctl.observe(a, k, l, s)
+            if adaptive and admit.any():
+                keep = admit if drop is None else (admit & ~drop)
+                if keep.any():
+                    ctl.observe(a[keep], k[keep], l[keep], s_obs[keep])
                 n_done = len(blocks) + 1      # blocks observed so far
                 if self.monitor is not None:
-                    self.monitor.observe(waits[idx])
+                    self.monitor.observe(waits[idx][admit])
                 if cfg.resolve_mode == "drift" and self.monitor is not None:
                     rep = self.monitor.check(ctl.state().as_dict())
                     drift_rec = rep.as_dict()
                     # bootstrap: the very first resolve still runs on the
                     # warmup clock (no drift exists against the uninformed
-                    # l_init point), after which only the alarm re-solves
+                    # l_init point), after which only the alarm re-solves.
+                    # A degradation-ladder transition also forces one: the
+                    # wait-drift alarm is blind to a degraded deployment
+                    # (small budgets predict their own small waits), so
+                    # overload onset/recovery must re-solve explicitly.
                     due = (rep.fired
+                           or level_changed
                            or (ctl.n_resolves == 0
                                and n_done > cfg.warmup_blocks))
                 else:
@@ -457,12 +621,16 @@ class ReplayHarness:
                 budgets=ctl.budgets.copy() if adaptive
                 else np.asarray(fixed_lengths, dtype=np.int64),
                 resolved=resolved,
-                mean_wait=float(waits[idx].mean()),
-                mean_service=float(s.mean()),
+                mean_wait=float(waits[idx][admit].mean())
+                if admit.any() else 0.0,
+                mean_service=float(s[admit].mean()) if admit.any() else 0.0,
                 estimator=ctl.state().as_dict(),
                 drift=drift_rec,
-                mean_tokens_in_use=block_tokens))
+                mean_tokens_in_use=block_tokens,
+                level=level,
+                n_shed=int((~admit).sum())))
         p, correct = self._accuracy(trace.types, budgets, trace.correct_us)
+        correct &= served               # a shed request is never "good"
         return ReplayResult(
             arrivals=trace.arrivals.copy(), types=trace.types.copy(),
             budgets=budgets, services=services, waits=waits,
@@ -471,7 +639,9 @@ class ReplayHarness:
             final_budgets=(ctl.budgets.copy() if adaptive
                            else np.asarray(fixed_lengths, dtype=np.int64)),
             n_resolves=ctl.n_resolves,
-            estimator_state=ctl.state().as_dict(), mode=mode)
+            estimator_state=ctl.state().as_dict(), mode=mode,
+            served=served,
+            admission=None if adm is None else adm.snapshot())
 
     # ------------------------------------------------------------------ API
     def run_virtual(self, trace: DriftTrace,

@@ -35,11 +35,18 @@ class Scheduler:
         self.n_admitted = 0
 
     def admit(self, req: Request, now: float,
-              observe: bool = True) -> None:
-        """Stamp budget and enqueue."""
+              observe: bool = True,
+              budget_cap: Optional[int] = None) -> None:
+        """Stamp budget and enqueue.
+
+        ``budget_cap`` (admission control's degradation ladder) bounds
+        the stamped budget *before* any discipline key is computed, so
+        SJF/priority ordering sees the degraded service time."""
         if observe:
             self.allocator.observe_arrival(req.task_index, now)
         req.budget = self.allocator.budget_for(req.task_index)
+        if budget_cap is not None:
+            req.budget = int(min(req.budget, budget_cap))
         req.phase = Phase.QUEUED
         self.n_admitted += 1
         if self.discipline == "fifo":

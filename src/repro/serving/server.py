@@ -55,7 +55,8 @@ class LLMServer:
                  server_cfg: Optional[ServerConfig] = None,
                  engine: Optional["DecodeEngine | ContinuousBatchingEngine"] = None,
                  allocator: Optional[TokenBudgetAllocator] = None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None,
+                 admission=None, faults=None):
         self.problem = problem
         # construct the default per instance: a shared `ServerConfig()`
         # default argument is evaluated once at def time, so mutating one
@@ -65,6 +66,17 @@ class LLMServer:
         self.allocator = allocator or TokenBudgetAllocator(problem)
         self.scheduler = Scheduler(self.allocator, self.cfg.discipline)
         self.completed: list = []
+        # overload hardening: serving.admission.AdmissionController gates
+        # every arrival (degradation-ladder budget caps, typed sheds);
+        # repro.faults injectors perturb service times and, on a
+        # continuous engine, run their decode-step hooks
+        self.admission = admission
+        self.faults = faults
+        self.shed: list = []
+        if (faults is not None
+                and isinstance(engine, ContinuousBatchingEngine)
+                and engine.faults is None):
+            engine.faults = faults
         # observability (obs.trace.Tracer / obs.metrics.MetricsRegistry);
         # both default to None and every recording site is guarded with a
         # single `is not None` check, so the uninstrumented path pays one
@@ -76,6 +88,29 @@ class LLMServer:
         self._occupancy_samples: list = []
 
     # ----------------------------------------------------------------- core
+    def _pool_fill(self) -> float:
+        eng = self.engine
+        return (float(eng.pool_fill)
+                if isinstance(eng, ContinuousBatchingEngine) and eng.paged
+                else 0.0)
+
+    def _rho_signal(self) -> float:
+        """Estimated utilization at the *level-0* (undegraded) budgets.
+
+        Scoring the healthy allocation keeps the overload signal
+        independent of the current degradation level — rho measured at
+        degraded budgets drops as soon as the ladder engages, which
+        would read as instant recovery and flap the controller."""
+        st = self.allocator.estimator_state()
+        lam = float(st.get("lam", 0.0))
+        if not np.isfinite(lam) or lam <= 0.0:
+            return 0.0
+        t0 = np.asarray(self.problem.tasks.t0)
+        c = np.asarray(self.problem.tasks.c)
+        pi = np.asarray(st["pi"], dtype=np.float64)
+        base = self.admission.ladder()[0]
+        return float(lam * np.sum(pi * (t0 + c * base)))
+
     def _service_time(self, reqs) -> float:
         t0 = np.asarray(self.problem.tasks.t0)
         c = np.asarray(self.problem.tasks.c)
@@ -163,6 +198,7 @@ class LLMServer:
         contract as ``mg1.simulate``).
         """
         self.completed = []
+        self.shed = []
         self.scheduler.reset()
         self._occupancy_samples = []
         queries = list(stream.queries)
@@ -172,19 +208,37 @@ class LLMServer:
         server_free_at = 0.0
         horizon = 0.0
         pending = self.scheduler
-        while len(self.completed) < n:
+        adm = self.admission
+        while len(self.completed) + len(self.shed) < n:
             # admit everything that arrived by the time the server frees
             while i < n and (queries[i].arrival <= server_free_at
                              or len(pending) == 0):
                 q = queries[i]
+                i += 1
+                budget_cap = None
+                if adm is not None:
+                    adm.update(q.arrival, rho=self._rho_signal(),
+                               fill=self._pool_fill())
+                    dec = adm.decide(q.task)
+                    if not dec.admitted:
+                        # typed rejection: no queueing, no service, no
+                        # tokens — the request never touches the server
+                        self.shed.append(CompletedRequest(
+                            rid=q.qid, task_index=q.task, budget=0,
+                            wait_time=0.0, service_time=0.0,
+                            system_time=0.0, n_tokens=0, correct=False))
+                        if self.metrics is not None:
+                            self.metrics.counter("server.shed").inc()
+                        continue
+                    budget_cap = dec.budget
                 if q.arrival > server_free_at and len(pending) == 0:
                     server_free_at = q.arrival
                 req = Request(rid=q.qid, task_index=q.task,
                               prompt=np.arange(q.prompt_len) % 97 + 1,
                               arrival_t=q.arrival, correct_u=q.correct_u)
                 pending.admit(req, q.arrival,
-                              observe=self.cfg.online_adaptation)
-                i += 1
+                              observe=self.cfg.online_adaptation,
+                              budget_cap=budget_cap)
             batch = []
             while len(batch) < self.cfg.batch_size and len(pending):
                 batch.append(pending.next_request())
@@ -192,6 +246,11 @@ class LLMServer:
                 continue
             start = server_free_at
             dur = self._execute(batch)
+            if self.faults is not None:
+                # a straggler in a batched decode delays every member:
+                # the batch takes its slowest member's multiplier
+                dur *= float(np.max(self.faults.service_multipliers(
+                    [r.arrival_t for r in batch])))
             finish = start + dur
             server_free_at = finish
             horizon = max(horizon, finish)
@@ -229,10 +288,17 @@ class LLMServer:
         if self._occupancy_samples:
             occ = occupancy_summary(self._occupancy_samples,
                                     self.engine.pool_tokens)
-        return summarize(self.problem, self.completed, horizon,
-                         self.allocator.n_resolves,
-                         estimator_state=self.allocator.estimator_state(),
-                         occupancy=occ)
+        rep = summarize(self.problem, self.completed, horizon,
+                        self.allocator.n_resolves,
+                        estimator_state=self.allocator.estimator_state(),
+                        occupancy=occ)
+        if self.admission is not None:
+            snap = self.admission.snapshot()
+            rep.n_shed = len(self.shed)
+            rep.shed_fraction = len(self.shed) / max(n, 1)
+            rep.degradation_occupancy = {
+                str(k): v for k, v in snap["occupancy"].items()}
+        return rep
 
     def _trace_request(self, r, start: float, finish: float,
                        dur: float) -> None:

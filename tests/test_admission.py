@@ -1,0 +1,214 @@
+"""AdmissionController: ladder construction, hysteresis state machine,
+shed ordering, typed decisions, and (hypothesis) the degradation-ladder
+contract under random overload trajectories."""
+import numpy as np
+import pytest
+
+from repro.serving import (SHED_CLASS, AdmissionConfig, AdmissionController,
+                           AdmissionDecision)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+BASE = np.array([0, 341, 0, 0, 346, 30])
+L_MAX = 32768.0
+
+
+def mk(**kw) -> AdmissionController:
+    return AdmissionController(BASE, L_MAX, AdmissionConfig(**kw))
+
+
+# ---------------------------------------------------------------- ladder
+def test_default_ladder_anchors_at_deployed_max():
+    """Level-j caps bite near the operating point (anchor = max budget),
+    not at the global l_max that never binds at paper scale."""
+    adm = mk(n_levels=3, l_max_decay=0.5)
+    caps = adm.ladder_l_max(float(BASE.max()))
+    assert caps[0] == L_MAX
+    np.testing.assert_allclose(caps[1:], [173.0, 86.5, 43.25])
+    lad = adm.ladder()
+    np.testing.assert_array_equal(lad[0], BASE)
+    # every level is element-wise <= the previous and within [l_min, l_max]
+    assert (np.diff(lad, axis=0) <= 0).all()
+    assert lad.min() >= 0 and lad.max() <= L_MAX
+    # the clip projection actually degrades the binding budgets
+    assert lad[1, 1] == 173 and lad[1, 4] == 173 and lad[1, 5] == 30
+
+
+def test_set_ladder_enforces_monotone_and_clip():
+    adm = mk(n_levels=2)
+    # a re-solve that reallocates upward at a tighter cap must be clipped
+    adm.set_ladder(np.array([[10, 300, 5, 0, 340, 30],
+                             [12, 150, 5, 0, 200, 40],
+                             [6, 200, 2, 0, 100, 10]]))
+    lad = adm.ladder()
+    np.testing.assert_array_equal(lad[1], [10, 150, 5, 0, 200, 30])
+    np.testing.assert_array_equal(lad[2], [6, 150, 2, 0, 100, 10])
+    with pytest.raises(ValueError):
+        adm.set_ladder(np.zeros((2, 6)))          # wrong level count
+
+
+# ------------------------------------------------------- state machine
+def test_hysteresis_ascend_descend_dwell():
+    adm = mk(n_levels=2, rho_high=0.9, rho_low=0.7, dwell_up=0.0,
+             dwell_down=5.0)
+    assert adm.update(0.0, rho=0.5) == 0
+    assert adm.update(1.0, rho=0.95) == 1         # hot: immediate ascent
+    assert adm.update(1.5, rho=0.95) == 2         # still hot: next step
+    assert adm.update(2.0, rho=0.95) == 2         # ladder exhausted
+    # calm but dwell_down not yet served: level holds
+    assert adm.update(3.0, rho=0.5) == 2
+    assert adm.update(7.9, rho=0.5) == 2
+    assert adm.update(8.1, rho=0.5) == 1          # 5s continuously calm
+    # re-armed: the next descent needs another full dwell
+    assert adm.update(9.0, rho=0.5) == 1
+    assert adm.update(13.2, rho=0.5) == 0
+    snap = adm.snapshot()
+    assert snap["n_level_up"] == 2 and snap["n_level_down"] == 2
+
+
+def test_hysteresis_band_resets_clocks():
+    """A signal oscillating inside (rho_low, rho_high) neither ascends
+    nor lets the calm clock accumulate — no flapping."""
+    adm = mk(n_levels=2, rho_high=0.9, rho_low=0.7, dwell_down=2.0)
+    adm.update(0.0, rho=0.95)
+    assert adm.level == 1
+    # calm, then band, then calm: the band visit resets the calm clock
+    adm.update(1.0, rho=0.5)
+    adm.update(2.5, rho=0.8)          # in the band
+    adm.update(3.0, rho=0.5)
+    assert adm.update(4.5, rho=0.5) == 1   # only 1.5s since band visit
+    assert adm.update(5.1, rho=0.5) == 0
+
+
+def test_pool_fill_is_an_independent_trigger():
+    adm = mk(fill_high=0.92, fill_low=0.7)
+    assert adm.update(0.0, rho=0.2, fill=0.95) == 1
+    # descent requires BOTH rho and fill calm
+    adm2 = mk(fill_high=0.92, fill_low=0.7, dwell_down=0.0)
+    adm2.update(0.0, rho=0.95)
+    assert adm2.level == 1
+    adm2.update(1.0, rho=0.5, fill=0.8)       # fill still above fill_low
+    assert adm2.level == 1
+
+
+def test_non_finite_rho_never_moves_level():
+    """A non-finite estimate (estimators not yet identified, or a
+    corrupted fold that slipped through) is treated as calm — the
+    controller must never escalate on garbage."""
+    adm = mk(dwell_up=0.0)
+    for t, r in enumerate([float("nan"), float("inf"), float("-inf")]):
+        assert adm.update(float(t), rho=r) == 0
+
+
+# --------------------------------------------------------- decisions
+def test_shed_order_lowest_weight_first():
+    adm = AdmissionController(
+        BASE, L_MAX,
+        AdmissionConfig(n_levels=2, shed_per_level=(0, 1, 3),
+                        class_weights=(5.0, 1.0, 3.0, 1.0, 2.0, 4.0)))
+    adm._level = 2
+    admit, budgets, level = adm.decide_batch(np.arange(6))
+    # weights (5,1,3,1,2,4): lowest three are tasks 1,3 (w=1) and 4 (w=2);
+    # the w=1 tie sheds the higher index first but both are inside top-3
+    np.testing.assert_array_equal(admit, [True, False, True, False,
+                                          False, True])
+    assert (budgets[~admit] == 0).all() and level == 2
+
+
+def test_decide_typed_rejection():
+    adm = AdmissionController(BASE, L_MAX,
+                              AdmissionConfig(shed_per_level=(0, 0, 0, 1)))
+    adm._level = 3
+    shed_task = int(np.argwhere(adm._shed_mask[3]).ravel()[0])
+    dec = adm.decide(shed_task)
+    assert isinstance(dec, AdmissionDecision)
+    assert not dec.admitted and dec.reason == SHED_CLASS and dec.budget == 0
+    ok_task = int(np.argwhere(~adm._shed_mask[3]).ravel()[0])
+    dec2 = adm.decide(ok_task)
+    assert dec2.admitted and dec2.reason is None
+    assert dec2.budget == adm.ladder()[3, ok_task]
+
+
+def test_occupancy_accounting():
+    adm = mk(n_levels=1, dwell_down=1.0)
+    adm.update(0.0, rho=0.95)      # -> level 1 at t=0
+    adm.update(10.0, rho=0.5)      # 10s at level 1
+    adm.update(11.5, rho=0.5)      # descends at 11.0+: 1.5s more at 1
+    adm.update(20.0, rho=0.5)      # 8.5s at level 0
+    occ = adm.occupancy()
+    assert occ[1] == pytest.approx(11.5 / 20.0)
+    assert occ[0] == pytest.approx(8.5 / 20.0)
+
+
+def test_config_validation():
+    for kw in ({"n_levels": 0}, {"rho_low": 0.95},
+               {"l_max_decay": 1.5}, {"dwell_down": -1.0},
+               {"shed_per_level": (1, 2)}):
+        with pytest.raises(ValueError):
+            AdmissionConfig(**kw)
+
+
+# ------------------------------------------------- property (hypothesis)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(
+        st.tuples(st.floats(0.0, 2.0),                 # dt between updates
+                  st.one_of(st.floats(0.0, 1.5),
+                            st.just(float("nan"))),    # rho signal
+                  st.floats(0.0, 1.0)),                # pool fill
+        min_size=1, max_size=120),
+        st.integers(1, 4),                             # n_levels
+        st.floats(0.0, 3.0), st.floats(0.0, 3.0))      # dwells
+    def test_ladder_contract_property(traj, n_levels, dwell_up, dwell_down):
+        """The degradation-ladder contract under arbitrary trajectories:
+        at most one level move per update, level in [0, n_levels],
+        dwell times respected, budgets always from the installed ladder
+        (monotone, in [l_min, l_max]), shed set a function of level."""
+        cfg = AdmissionConfig(n_levels=n_levels, dwell_up=dwell_up,
+                              dwell_down=dwell_down)
+        adm = AdmissionController(BASE, L_MAX, cfg)
+        lad = adm.ladder()
+        assert (np.diff(lad, axis=0) <= 0).all()
+        assert lad.min() >= cfg.l_min and lad.max() <= L_MAX
+        now, prev = 0.0, adm.level
+        hot_since = calm_since = None
+        for dt, rho, fill in traj:
+            now += dt
+            lvl = adm.update(now, rho=rho, fill=fill)
+            assert abs(lvl - prev) <= 1                # one step per update
+            assert 0 <= lvl <= n_levels
+            r = 0.0 if not np.isfinite(rho) else rho
+            hot = r >= cfg.rho_high or fill >= cfg.fill_high
+            calm = r <= cfg.rho_low and fill <= cfg.fill_low
+            if lvl > prev:       # ascent only after a continuous hot dwell
+                assert hot and hot_since is not None \
+                    and now - hot_since >= dwell_up or (hot and dwell_up == 0.0)
+            if lvl < prev:       # descent only after a continuous calm dwell
+                assert calm and (dwell_down == 0.0 or (
+                    calm_since is not None
+                    and now - calm_since >= dwell_down))
+            # mirror the clock semantics (reset on opposite/band states)
+            if hot:
+                calm_since = None
+                hot_since = now if hot_since is None else hot_since
+                if lvl > prev:
+                    hot_since = now
+            elif calm:
+                hot_since = None
+                calm_since = now if calm_since is None else calm_since
+                if lvl < prev:
+                    calm_since = now
+            else:
+                hot_since = calm_since = None
+            # budgets come straight from the installed monotone ladder
+            admit, budgets, _ = adm.decide_batch(np.arange(BASE.shape[0]))
+            np.testing.assert_array_equal(
+                budgets[admit], lad[lvl][admit])
+            assert (budgets >= cfg.l_min).all() and (budgets <= L_MAX).all()
+            np.testing.assert_array_equal(~admit, adm._shed_mask[lvl])
+            prev = lvl

@@ -1,0 +1,333 @@
+"""Chaos suite: seeded fault injection across the stack (`-m chaos` lane).
+
+Invariants under fault: no crash, no leaked KV blocks, budgets always in
+[l_min, l_max], bounded queue after a burst passes, estimator folds and
+Lindley carry never half-applied on an engine failure, one NaN never
+corrupts the re-solved budgets, and the drift-gated re-solver
+reconverges to the oracle after the fault clears.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.core.allocator import solve
+from repro.obs.monitor import DriftMonitor
+from repro.faults import (ArrivalBurst, DroppedCompletions, FaultInjector,
+                          FaultSet, ObservationCorruption, PoolPressure,
+                          StragglerDecode)
+from repro.queueing_sim import (RetryPolicy, Segment, generate_drift_trace,
+                                impatience_numpy)
+from repro.serving import (AdmissionConfig, AdmissionController,
+                           OnlineEstimators, ReplayConfig, ReplayHarness)
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+@pytest.fixture(scope="module")
+def oracle_lengths(prob):
+    return np.asarray(solve(prob).lengths_int, dtype=np.int64)
+
+
+# ------------------------------------------------------------ determinism
+def test_fault_schedule_is_deterministic(prob):
+    """Every injector is a pure function of (seed, call sequence)."""
+    def bank():
+        return FaultSet(StragglerDecode(0.2, 5.0, seed=4),
+                        ObservationCorruption(0.1, "nan", seed=5),
+                        DroppedCompletions(0.1, seed=6))
+    a = np.linspace(0.0, 10.0, 64)
+    f1, f2 = bank(), bank()
+    for _ in range(5):
+        np.testing.assert_array_equal(f1.service_multipliers(a),
+                                      f2.service_multipliers(a))
+        np.testing.assert_array_equal(f1.corrupt_observations(a + 1.0),
+                                      f2.corrupt_observations(a + 1.0))
+        np.testing.assert_array_equal(f1.drop_mask(64), f2.drop_mask(64))
+
+
+def test_arrival_burst_transform(prob):
+    """Gap compression inside the window, rate untouched outside, common
+    random numbers preserved (types/correctness identical)."""
+    trace = generate_drift_trace(prob.tasks, [Segment(4000, 0.5)], seed=3)
+    burst = ArrivalBurst(t0=1000.0, t1=2000.0, factor=4.0)
+    out = burst.transform_trace(trace)
+    a0, a1 = trace.arrivals, out.arrivals
+    assert (np.diff(a1) >= 0).all() and a1[-1] < a0[-1]
+    np.testing.assert_array_equal(out.types, trace.types)
+    np.testing.assert_array_equal(out.correct_us, trace.correct_us)
+    # in-window instantaneous rate is ~factor times the original
+    w0 = (a0 >= 1000.0) & (a0 < 2000.0)
+    gaps0 = np.diff(a0, prepend=0.0)[w0]
+    gaps1 = np.diff(a1, prepend=0.0)[w0]
+    np.testing.assert_allclose(gaps1, gaps0 / 4.0, rtol=1e-9, atol=1e-12)
+    # post-burst gaps are untouched (pure time shift)
+    post = a0 >= 2000.0
+    np.testing.assert_allclose(np.diff(a1[post]), np.diff(a0[post]),
+                               rtol=1e-9, atol=1e-12)
+
+
+# ------------------------------------------------- estimator guards (NaN)
+def test_one_nan_does_not_move_estimates():
+    """Regression: a single NaN observation used to poison the EWMA
+    numerator forever. With the guards, folding a batch containing
+    invalid rows is exactly folding the filtered batch — and the skip
+    is counted."""
+    rng = np.random.default_rng(0)
+    t = np.cumsum(rng.exponential(1.0, 64))
+    k = rng.integers(0, 6, 64)
+    l = rng.integers(10, 400, 64).astype(np.float64)
+    s = rng.exponential(1.0, 64) + 0.01
+
+    clean, dirty = OnlineEstimators(6), OnlineEstimators(6)
+    clean.observe_block(t[:32], k[:32], l[:32], s[:32])
+    dirty.observe_block(t[:32], k[:32], l[:32], s[:32])
+    s_bad = s[32:].copy()
+    s_bad[[3, 7]] = [np.nan, -1.0]
+    keep = np.ones(32, dtype=bool)
+    keep[[3, 7]] = False
+    clean.observe_block(t[32:][keep], k[32:][keep], l[32:][keep],
+                        s[32:][keep])
+    dirty.observe_block(t[32:], k[32:], l[32:], s_bad)
+    sc, sd = clean.state(), dirty.state()
+    # moments and latency curve identical to the hand-filtered fold
+    assert sd.es == sc.es and sd.es2 == sc.es2
+    np.testing.assert_array_equal(sd.t0, sc.t0)
+    np.testing.assert_array_equal(sd.c, sc.c)
+    assert np.isfinite(sd.rho)
+    assert sd.n_skipped == 4          # 2 in moments + 2 in the calibrator
+    # non-finite timestamps and out-of-range types are likewise skipped
+    dirty.rate.observe_arrivals([np.nan, np.inf])
+    dirty.mixture.observe_types([99, -1])
+    assert dirty.rate.n_skipped == 2 and dirty.mixture.n_skipped == 2
+
+
+def test_nan_corruption_does_not_corrupt_resolved_budgets(prob,
+                                                          oracle_lengths):
+    """Closed loop under observation poisoning: with NaN corruption on
+    5% of the observed services the re-solved budgets stay finite, in
+    bounds, and land near the clean run's solution."""
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(12_000, prob.server.lam)], seed=7)
+    cfg = ReplayConfig(block_size=512)
+    clean = ReplayHarness(prob, cfg).run_virtual(trace)
+    dirty = ReplayHarness(
+        prob, cfg,
+        faults=ObservationCorruption(0.05, "nan", seed=2)).run_virtual(trace)
+    assert dirty.estimator_state["n_skipped"] > 100
+    assert np.isfinite(dirty.estimator_state["rho"])
+    assert (dirty.budgets >= 0).all()
+    assert (dirty.budgets <= prob.server.l_max).all()
+    assert np.max(np.abs(dirty.final_budgets - clean.final_budgets)) <= 24
+    assert np.max(np.abs(dirty.final_budgets - oracle_lengths)) <= 32
+
+
+# ----------------------------------------------- exception safety (blocks)
+class _ExplodingServices(FaultInjector):
+    """Raises inside the replay block's fallible section after ``n_ok``
+    blocks (service_multipliers is called exactly once per block)."""
+
+    def __init__(self, n_ok: int):
+        self.n_ok, self.calls = int(n_ok), 0
+
+    def service_multipliers(self, arrivals) -> np.ndarray:
+        self.calls += 1
+        if self.calls > self.n_ok:
+            raise RuntimeError("engine died mid-block")
+        return np.ones(np.asarray(arrivals).shape[0])
+
+
+def test_engine_failure_leaves_harness_consistent(prob):
+    """An engine exception mid-block must not leave estimator folds
+    half-applied or the Lindley carry inconsistent: the controller state
+    after the crash is bit-identical to a clean run over exactly the
+    completed blocks."""
+    n_ok, bs = 6, 256
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(8 * bs, prob.server.lam)], seed=9)
+    cfg = ReplayConfig(block_size=bs, resolve_every=2)
+    crashing = ReplayHarness(prob, cfg, faults=_ExplodingServices(n_ok))
+    with pytest.raises(RuntimeError, match="mid-block"):
+        crashing.run_virtual(trace)
+    # reference: the same trace truncated to the blocks that completed
+    sub = dataclasses.replace(
+        trace,
+        arrivals=trace.arrivals[:n_ok * bs],
+        types=trace.types[:n_ok * bs],
+        prompt_lens=trace.prompt_lens[:n_ok * bs],
+        correct_us=trace.correct_us[:n_ok * bs],
+        segment_ids=trace.segment_ids[:n_ok * bs])
+    ref = ReplayHarness(prob, cfg)
+    ref.run_virtual(sub)
+    assert crashing.controller.state().as_dict() == \
+        ref.controller.state().as_dict()
+    assert crashing.controller.n_resolves == ref.controller.n_resolves
+    np.testing.assert_array_equal(crashing.controller.budgets,
+                                  ref.controller.budgets)
+
+
+# ------------------------------------------------------- replay chaos run
+@pytest.fixture(scope="module")
+def hot_problem(prob, oracle_lengths):
+    """Paper problem re-rated to rho = 0.6 at the paper-oracle budgets
+    (the seed operating point rho ~ 0.17 cannot be overloaded by any
+    realistic burst factor)."""
+    es = float(np.sum(np.asarray(prob.tasks.pi)
+                      * (np.asarray(prob.tasks.t0)
+                         + np.asarray(prob.tasks.c) * oracle_lengths)))
+    p2 = dataclasses.replace(
+        prob, server=dataclasses.replace(prob.server, lam=0.6 / es))
+    return p2, np.asarray(solve(p2).lengths_int, dtype=np.int64)
+
+
+def test_burst_with_admission_recovers(hot_problem):
+    """Full overload drill: 8x arrival burst + stragglers + poisoned and
+    dropped observations, with the degradation ladder in front. No
+    crash; budgets within bounds; the ladder escalates during the burst
+    and fully de-escalates after; the queue drains; the level-transition
+    forced re-solve brings the budgets back to the oracle."""
+    prob2, oracle2 = hot_problem
+    lam0 = prob2.server.lam
+    trace = generate_drift_trace(prob2.tasks, [Segment(10_000, lam0)],
+                                 seed=13)
+    adm = AdmissionController(
+        oracle2, prob2.server.l_max,
+        AdmissionConfig(rho_high=0.85, rho_low=0.6, dwell_down=800.0))
+    faults = FaultSet(ArrivalBurst(8000.0, 20_000.0, 8.0),
+                      StragglerDecode(0.02, 2.0, seed=1),
+                      ObservationCorruption(0.02, "nan", seed=2),
+                      DroppedCompletions(0.02, seed=3))
+    h = ReplayHarness(prob2,
+                      ReplayConfig(block_size=256, resolve_mode="drift",
+                                   est_halflife=128.0),
+                      monitor=DriftMonitor(), admission=adm, faults=faults)
+    res = h.run_virtual(trace)
+    assert (res.budgets >= 0).all()
+    assert (res.budgets <= prob2.server.l_max).all()
+    # the ladder engaged during the burst and fully recovered after
+    assert max(b.level for b in res.blocks) >= 1
+    assert res.admission["level"] == 0
+    occ = res.admission["occupancy"]
+    assert occ[0] > 0.8 and sum(occ[j] for j in occ if j > 0) > 0.0
+    # bounded queue post-burst: the tail of the run is back at the
+    # steady-state wait level, far below the in-burst peak (the burst
+    # window [8000, 20000] compresses to [8000, 9500] in replayed time)
+    a, sm = res.arrivals, res.served_mask()
+    tail = (a >= a[-1] - 4000.0) & sm
+    burst = (a >= 8000.0) & (a <= 10_500.0) & sm
+    assert res.waits[tail].mean() < 0.1 * res.waits[burst].mean()
+    # reconvergence: the forced re-solve on the final ladder descent
+    # lands the budgets back at the clairvoyant solution
+    assert np.max(np.abs(res.final_budgets - oracle2)) <= 32
+    assert res.estimator_state["lam"] == pytest.approx(lam0, rel=0.15)
+    rep = res.report(prob2)
+    assert rep.goodput > 0 and np.isfinite(rep.goodput)
+    assert rep.degradation_occupancy is not None
+    assert rep.degradation_occupancy["0"] == pytest.approx(occ[0])
+
+
+def test_admission_sheds_under_sustained_overload(prob, oracle_lengths):
+    """Pure admission path (re-solver frozen so the ladder anchor stays
+    at the deployed budgets): at a sustained 2x the anchored service
+    rate the ladder escalates to the top level and sheds the
+    lowest-weight classes, and shed requests cost nothing."""
+    es = float(np.sum(np.asarray(prob.tasks.pi)
+                      * (np.asarray(prob.tasks.t0)
+                         + np.asarray(prob.tasks.c) * oracle_lengths)))
+    trace = generate_drift_trace(prob.tasks, [Segment(8000, 2.0 / es)],
+                                 seed=17)
+    adm = AdmissionController(
+        oracle_lengths, prob.server.l_max,
+        AdmissionConfig(n_levels=3, rho_high=0.9, rho_low=0.7,
+                        dwell_down=1e9))
+    # warmup never elapses: estimators identify but budgets never
+    # re-solve, isolating the ladder from the re-solver's own backoff.
+    # l_init sits below the smallest anchored budget so the ladder cap
+    # does not clip the exploration jitter to a constant (a constant
+    # budget has no identifiable latency slope).
+    h = ReplayHarness(prob,
+                      ReplayConfig(block_size=256, l_init=16,
+                                   warmup_blocks=10 ** 9),
+                      admission=adm)
+    res = h.run_virtual(trace)
+    snap = res.admission
+    assert snap["level"] == 3 and snap["n_shed"] > 0
+    assert max(b.level for b in res.blocks) == 3
+    shed = ~res.served_mask()
+    assert shed.sum() == snap["n_shed"]
+    assert (res.services[shed] == 0).all()
+    assert (res.budgets[shed] == 0).all()
+    assert not res.correct[shed].any()
+    # only the configured shed classes are ever rejected
+    assert set(np.unique(res.types[shed])) <= \
+        set(np.flatnonzero(adm._shed_mask[3]))
+
+
+# ------------------------------------------------------------- DES chaos
+def test_des_burst_with_reneging_recovers():
+    """Burst through the impatience DES: reneging sheds the overload and
+    the post-burst waits return to the pre-burst level."""
+    rng = np.random.default_rng(5)
+    n = 6000
+    a = np.cumsum(rng.exponential(1.0 / 0.6, n))
+    s = rng.exponential(1.0, n)
+    gaps = np.diff(a, prepend=0.0)
+    w = (a >= 3000.0) & (a < 4000.0)
+    a2 = np.cumsum(np.where(w, gaps / 4.0, gaps))
+    pol = RetryPolicy(patience=15.0, orphaned_service=False)
+    res = impatience_numpy(a2, s, pol)
+    pre = (a2 < 2500.0) & res.served
+    post = (a2 > a2[-1] - 1000.0) & res.served
+    assert res.served.mean() > 0.8               # burst shed, not collapse
+    assert res.wait[post].mean() < 2.0 * max(res.wait[pre].mean(), 0.1)
+    assert np.all(res.wait[res.served] <= pol.patience + 1e-12)
+
+
+# ------------------------------------------------------------ engine chaos
+@pytest.mark.slow
+def test_engine_pool_pressure_no_leaks():
+    """Paged engine under block-pool pressure: tokens identical to the
+    unfaulted run (back-pressure changes timing, never content), and the
+    pool audit balances after release."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params, reduced
+    from repro.serving.continuous import ContinuousBatchingEngine
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = [(i, rng.integers(1, 97, size=int(rng.integers(3, 20))).astype(
+        np.int32), int(rng.integers(1, 12)), 4) for i in range(10)]
+
+    def drain(eng):
+        pending, done = list(reqs), {}
+        while pending or eng.n_active:
+            if pending:
+                flags = eng.admit_many(pending)
+                pending = [r for r, ok in zip(pending, flags) if not ok]
+            for s in eng.step_chunk():
+                done[s.rid] = s
+        return {k: v.tokens for k, v in done.items()}
+
+    ref = drain(ContinuousBatchingEngine(cfg, params, max_slots=4,
+                                         capacity=64, chunk=5, paged=True,
+                                         block_size=8))
+    faults = FaultSet(PoolPressure(0.4, hold_steps=3, period_steps=4,
+                                   seed=8))
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, capacity=64,
+                                   chunk=5, paged=True, block_size=8,
+                                   faults=faults)
+    out = drain(eng)
+    assert out == ref
+    faults.release_all(eng)
+    assert eng.check_block_invariants()
+    assert eng.allocator.n_free == eng.allocator.n_blocks
+    assert eng.allocator.reserved == 0

@@ -150,6 +150,7 @@ def test_pool_exhaustion_queues_not_crashes(setup, requests):
     assert out == slot_ref                    # back-pressure never changes
     #                                           tokens, only timing
     assert eng.allocator.n_free == 6 and eng.allocator.reserved == 0
+    assert eng.check_block_invariants()
     assert (eng._tables_host == eng.n_blocks).all()
 
 
@@ -165,6 +166,7 @@ def test_free_list_reuse_after_retire(setup):
         eng.step_chunk()
         first_blocks |= set(eng._slot_blocks[0])
     assert eng.allocator.n_free == 8
+    assert eng.check_block_invariants()
     # the freed blocks are handed to the next request (LIFO reuse)
     assert eng.admit(1, prompt, budget=4, max_extra=2)
     reused = set(eng._slot_blocks[0]) | set(eng._slot_blocks[1])
@@ -234,7 +236,7 @@ def test_block_allocator_randomized_churn():
                 live.append((blocks, n))
         held = [b for bl, _ in live for b in bl]
         assert len(held) == len(set(held))              # no double alloc
-        assert al.n_free + len(held) == 32              # conservation
+        assert al.check_balance(in_use=len(held))       # conservation
         assert al.reserved == sum(r for _, r in live)
     for blocks, res in live:
         al.free(blocks)
@@ -259,7 +261,7 @@ if HAVE_HYPOTHESIS:
                 live.append((al.alloc(n), n))
             held = [b for bl, _ in live for b in bl]
             assert len(held) == len(set(held))
-            assert al.n_free + len(held) == n_blocks
+            assert al.check_balance(in_use=len(held))
         for blocks, res in live:
             al.free(blocks)
             al.release(res)
