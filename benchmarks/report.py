@@ -100,6 +100,16 @@ GATES = {
          lambda d: d["retry"]["fixed_point"]["lam_eff_rel_err"],
          0.2, "ceil_abs"),
     ],
+    "BENCH_prediction.json": [
+        # frontier sweep must stay on the K-lane fast path
+        ("timings.queries_per_s",
+         lambda d: d["timings"]["queries_per_s"], 0.02),
+        # the SPRPT tail crossover must exist (a None/missing value fails
+        # as unreadable) and stay inside the documented band — losing the
+        # finite crossover means the frontier's structure is gone
+        ("crossover.sprpt_p99",
+         lambda d: d["crossover"]["sprpt_p99"], 2.5, "ceil_abs"),
+    ],
     "BENCH_obs.json": [
         # histogram ingest must stay vectorized (order-of-magnitude floor)
         ("hist.updates_per_s", lambda d: d["hist"]["updates_per_s"], 0.02),

@@ -1,6 +1,11 @@
-"""Data pipeline: synthetic token streams shared with the serving workload."""
+"""Data pipeline: synthetic token streams shared with the serving workload,
+plus the service-length predictors the predicted disciplines consume."""
+from .predictor import (LengthPredictor, calibrate_from_synthetic,
+                        fit_quantile, fit_two_point, lognormal_factors)
 from .synthetic import DataConfig, SyntheticTokens
 from .tokenizer import BOS_ID, EOS_ID, PAD_ID, ByteTokenizer
 
 __all__ = ["DataConfig", "SyntheticTokens", "ByteTokenizer",
-           "PAD_ID", "BOS_ID", "EOS_ID"]
+           "PAD_ID", "BOS_ID", "EOS_ID",
+           "LengthPredictor", "fit_two_point", "fit_quantile",
+           "calibrate_from_synthetic", "lognormal_factors"]

@@ -13,7 +13,9 @@ Three simulator paths share one workload model:
   (:func:`simulate_discipline`, :func:`simulate_batch`,
   ``sweep(discipline=...)``), with per-stream heapq fallback when a
   queue outgrows the candidate window — plus the preemptive SRPT ring
-  kernel (:func:`srpt_numpy`), pinned against ``mg1.srpt_event_loop``.
+  kernel (:func:`srpt_numpy`), pinned against ``mg1.srpt_event_loop``,
+  and their predicted-key variants SPJF/SPRPT (:func:`sprpt_numpy`),
+  which reduce bitwise to SJF/SRPT at zero prediction error.
 * ``multiserver`` — batched M/G/c next-free-server kernels for a pod of
   c data-parallel replicas behind one queue (:func:`free_server_numpy` /
   :func:`free_server_jax`, :func:`simulate_mgc_batch`,
@@ -25,8 +27,10 @@ from .batch_service import BatchServiceSim, simulate_batch_service
 from .batched import (BatchStats, SweepResult, lindley_jax, lindley_numpy,
                       simulate_fifo, simulate_fifo_batch, sweep)
 from .disciplines import (ALL_DISCIPLINES, DEFAULT_WINDOW, DISCIPLINES,
-                          PREEMPTIVE_DISCIPLINES, discipline_keys,
-                          simulate_batch, simulate_discipline, srpt_numpy,
+                          PREDICTED_DISCIPLINES, PREEMPTIVE_DISCIPLINES,
+                          discipline_keys, simulate_batch,
+                          simulate_discipline, sprpt_numpy,
+                          sprpt_start_finish, srpt_numpy,
                           srpt_start_finish, sweep_disciplines,
                           windowed_jax, windowed_numpy,
                           windowed_start_finish)
@@ -34,7 +38,8 @@ from .impatience import (ImpatienceResult, RetryPolicy,
                          impatience_event_loop, impatience_jax,
                          impatience_numpy, summarize_impatience)
 from .mg1 import (SimResult, event_loop, event_loop_mgc, mgc_prediction,
-                  pk_prediction, simulate, srpt_event_loop)
+                  pk_prediction, simulate, sprpt_event_loop,
+                  srpt_event_loop)
 from .multiserver import (free_server_jax, free_server_numpy, simulate_mgc,
                           simulate_mgc_batch, sweep_mgc)
 from .stats import ci95
@@ -47,11 +52,12 @@ __all__ = ["SimResult", "simulate", "pk_prediction", "event_loop", "Stream",
            "Query", "generate_stream", "empirical_mixture", "StreamBatch",
            "generate_streams", "BatchStats", "SweepResult", "lindley_numpy",
            "lindley_jax", "simulate_fifo", "simulate_fifo_batch", "sweep",
-           "DISCIPLINES", "PREEMPTIVE_DISCIPLINES", "ALL_DISCIPLINES",
-           "DEFAULT_WINDOW", "discipline_keys",
+           "DISCIPLINES", "PREEMPTIVE_DISCIPLINES", "PREDICTED_DISCIPLINES",
+           "ALL_DISCIPLINES", "DEFAULT_WINDOW", "discipline_keys",
            "simulate_discipline", "simulate_batch", "sweep_disciplines",
            "windowed_numpy", "windowed_jax", "windowed_start_finish",
            "srpt_numpy", "srpt_start_finish", "srpt_event_loop",
+           "sprpt_numpy", "sprpt_start_finish", "sprpt_event_loop",
            "event_loop_mgc", "mgc_prediction", "free_server_numpy",
            "free_server_jax", "simulate_mgc", "simulate_mgc_batch",
            "sweep_mgc", "ci95", "Segment", "DriftTrace",

@@ -403,6 +403,15 @@ def _grid_budgets(problem: Problem, policies, lams, clip_unstable: bool,
     names = tuple(policies.keys())
     P = len(names)
     Lg = len(lams)
+    n_tasks = problem.tasks.n_tasks
+    for k in names:
+        pk = np.asarray(policies[k], dtype=np.float64)
+        # a scalar or mis-sized policy would otherwise broadcast (or
+        # crash deep in np.stack / the service table) — fail loudly here
+        if pk.shape != (n_tasks,):
+            raise ValueError(
+                f"policy {k!r} has shape {pk.shape}, expected "
+                f"({n_tasks},) — one token budget per task type")
     base = np.stack([np.asarray(policies[k], dtype=np.float64)
                      for k in names])                      # [P, N]
     lengths = np.empty((Lg, P, base.shape[-1]))

@@ -1,4 +1,11 @@
-"""Batched non-FIFO disciplines: SJF / priority on the vectorized fast path.
+"""Batched non-FIFO disciplines on the vectorized fast path.
+
+Covers the non-preemptive SJF / priority orderings, preemptive SRPT, and
+their *predicted-size* counterparts SPJF / SPRPT, where the scheduler
+keys on a noisy service-time estimate (``data.predictor``) instead of
+the true size — at zero prediction error SPJF is bitwise SJF and SPRPT
+is bitwise SRPT (pinned in ``tests/test_prediction.py`` and
+``benchmarks/prediction_bench.py``).
 
 The heapq event loop (``mg1.simulate``) handles every discipline but runs
 one scalar stream per Python call, so the discipline ablations could not
@@ -35,11 +42,21 @@ exactly the flagged streams through the heapq reference
 the reference at 1e-10 across disciplines, backends, and overflowing
 windows.
 
+Preemptive disciplines run on a separate two-panel kernel
+(:func:`srpt_numpy` / :func:`sprpt_numpy`, shared implementation): a
+*true-remaining* panel governs completions and elapsed work while the
+scheduler's argmin runs on a *key-remaining* panel — identical for SRPT,
+the predictor's noisy estimate for SPRPT (an underestimated long job can
+monopolize the server, which is exactly the tail pathology the
+prediction-error frontier in ``sweeps.prediction`` measures). Both fall
+back to the heapq references ``mg1.srpt_event_loop`` /
+``mg1.sprpt_event_loop`` on window overflow.
+
 On top of the kernels: :func:`simulate_discipline` (scalar drop-in for
 ``mg1.simulate``), :func:`simulate_batch` (policy stacks x seed batches,
 any discipline), and :func:`discipline_keys` — the one definition of the
-per-query priority keys, shared with ``mg1.simulate`` and
-``serving.scheduler``.
+per-query priority keys, shared with ``mg1.simulate``,
+``serving.scheduler``, ``serving.replay``, and the masked-argmin engine.
 """
 from __future__ import annotations
 
@@ -53,15 +70,16 @@ from .batched import (_accuracy_table, _batch_stats, _batch_stats_tabular,
                       _sweep_result, BatchStats, lindley_numpy,
                       simulate_fifo_batch)
 from .mg1 import (SimResult, empty_result, event_loop,
-                  result_from_trajectory, srpt_event_loop, stream_arrays)
+                  result_from_trajectory, sprpt_event_loop,
+                  srpt_event_loop, stream_arrays)
 from .workload import Stream, StreamBatch, generate_streams
 
 __all__ = [
-    "DISCIPLINES", "PREEMPTIVE_DISCIPLINES", "ALL_DISCIPLINES",
-    "DEFAULT_WINDOW", "discipline_keys", "windowed_numpy",
-    "windowed_jax", "windowed_start_finish", "srpt_numpy",
-    "srpt_start_finish", "simulate_discipline", "simulate_batch",
-    "sweep_disciplines",
+    "DISCIPLINES", "PREEMPTIVE_DISCIPLINES", "PREDICTED_DISCIPLINES",
+    "ALL_DISCIPLINES", "DEFAULT_WINDOW", "discipline_keys",
+    "windowed_numpy", "windowed_jax", "windowed_start_finish",
+    "srpt_numpy", "srpt_start_finish", "sprpt_numpy", "sprpt_start_finish",
+    "simulate_discipline", "simulate_batch", "sweep_disciplines",
 ]
 
 #: Non-preemptive disciplines served by the masked-argmin engine.
@@ -69,9 +87,17 @@ DISCIPLINES = ("fifo", "sjf", "priority")
 
 #: Preemptive disciplines with their own kernels (remaining-work state
 #: cannot ride the completion-ordered masked-argmin pass).
-PREEMPTIVE_DISCIPLINES = ("srpt",)
+PREEMPTIVE_DISCIPLINES = ("srpt", "sprpt")
 
-ALL_DISCIPLINES = DISCIPLINES + PREEMPTIVE_DISCIPLINES
+#: Disciplines ordered by a *predicted* service time instead of the true
+#: one (Mitzenmacher & Shahout): "spjf" = shortest predicted job first
+#: (non-preemptive; rides the masked-argmin engine with predicted keys),
+#: "sprpt" = shortest predicted remaining processing time (preemptive;
+#: its own panel kernel). Both require a per-query ``predicted`` array
+#: and reduce bitwise to SJF / SRPT when ``predicted == services``.
+PREDICTED_DISCIPLINES = ("spjf", "sprpt")
+
+ALL_DISCIPLINES = DISCIPLINES + ("spjf",) + PREEMPTIVE_DISCIPLINES
 
 #: Fixed capacity of the masked-argmin candidate window. Streams whose
 #: arrived-but-unserved span ever exceeds it fall back to the heapq loop.
@@ -79,7 +105,7 @@ DEFAULT_WINDOW = 512
 
 
 def discipline_keys(discipline: str, *, arrivals=None, services=None,
-                    accuracy=None):
+                    accuracy=None, predicted=None):
     """Service-priority keys (lower = served first), any leading shape.
 
     * ``fifo``: the arrival time — queue order is arrival order.
@@ -92,6 +118,16 @@ def discipline_keys(discipline: str, *, arrivals=None, services=None,
       serving scheduler) orders SRPT work by; the DES engines instead
       track remaining work through preemptions (:func:`srpt_numpy`,
       ``mg1.srpt_event_loop``).
+    * ``spjf`` / ``sprpt``: the *predicted* service time (``predicted``
+      is required — e.g. ``data.predictor.LengthPredictor.predict`` over
+      the true services). At admission the predicted remaining equals
+      the full prediction, so both share the key; the preemptive DES
+      kernels (:func:`sprpt_numpy`, ``mg1.sprpt_event_loop``) track
+      predicted remaining through preemptions.
+
+    When both ``predicted`` and ``services`` are given their shapes must
+    match exactly — a mis-sized prediction array raises ``ValueError``
+    rather than silently broadcasting to the wrong queries.
 
     This is the single numerical definition used by the heapq reference
     (``mg1.simulate``), the vectorized engine here, and the serving
@@ -101,6 +137,20 @@ def discipline_keys(discipline: str, *, arrivals=None, services=None,
         return np.asarray(arrivals, dtype=np.float64)
     if discipline in ("sjf", "srpt"):
         return np.asarray(services, dtype=np.float64)
+    if discipline in PREDICTED_DISCIPLINES:
+        if predicted is None:
+            raise ValueError(
+                f"discipline {discipline!r} requires a per-query "
+                "'predicted' service-time array (see data.predictor)")
+        p = np.asarray(predicted, dtype=np.float64)
+        if services is not None:
+            s = np.asarray(services, dtype=np.float64)
+            if p.shape != s.shape:
+                raise ValueError(
+                    f"predicted service shape {p.shape} must match the "
+                    f"services shape {s.shape} exactly (one prediction "
+                    "per query; silent broadcasting is not allowed)")
+        return p
     if discipline == "priority":
         s = np.asarray(services, dtype=np.float64)
         return -np.asarray(accuracy, dtype=np.float64) / np.maximum(s, 1e-12)
@@ -629,30 +679,245 @@ def srpt_start_finish(arrivals, services,
 
 
 # --------------------------------------------------------------------------
+# preemptive SPRPT kernel (predicted keys, true completions)
+# --------------------------------------------------------------------------
+
+def _sprpt_bucket(arr_w, svc_w, prd_w, Lb, fin_o) -> None:
+    """SPRPT over one dense length-bucket of busy periods, in place.
+
+    The predicted twin of :func:`_srpt_bucket`: two panels instead of
+    one — ``trem`` (true remaining work: governs completion instants)
+    and ``prem`` (predicted remaining work: the argmin selection key).
+    Both are charged the same elapsed time on preemption, so an
+    underestimated job's ``prem`` goes negative and it monopolizes the
+    server until its true work drains — the reference failure mode.
+    With ``prd_w == svc_w`` the two panels stay numerically identical
+    and every float op matches :func:`_srpt_bucket` term for term, so
+    zero prediction error is bitwise SRPT.
+    """
+    M, maxL = arr_w.shape
+    trem = np.full((M, maxL), np.inf)
+    prem = np.full((M, maxL), np.inf)
+    trem[:, 0] = svc_w[:, 0]             # the head job, served at arrival
+    prem[:, 0] = prd_w[:, 0]
+    t = arr_w[:, 0].copy()
+    rows = np.arange(M)
+
+    def serve_until(Mt: int, ta: np.ndarray) -> None:
+        subt, subp, tt = trem[:Mt], prem[:Mt], t[:Mt]
+        rr = rows[:Mt]
+        bounded = np.isfinite(ta)
+        while True:
+            j = np.argmin(subp, axis=1)  # first min = lowest qid
+            m = subt[rr, j]              # TRUE remaining of the selection
+            fin_t = tt + m
+            can = np.isfinite(m) & (fin_t <= ta)
+            if not can.any():
+                act = np.isfinite(m) & bounded
+                if act.any():
+                    ra, ja = rr[act], j[act]
+                    el = ta[act] - tt[act]
+                    subt[ra, ja] = m[act] - el
+                    subp[ra, ja] = subp[ra, ja] - el
+                tt[bounded] = ta[bounded]
+                return
+            rc, jc = rr[can], j[can]
+            tt[can] = fin_t[can]
+            fin_o[rc, jc] = fin_t[can]
+            subt[rc, jc] = np.inf
+            subp[rc, jc] = np.inf
+
+    for k in range(1, maxL):
+        Mt = int(np.searchsorted(-Lb, -k, side="right"))  # rows with L >= k
+        serve_until(Mt, arr_w[:Mt, k])   # inf past a row's length: drains
+        valid_k = np.isfinite(arr_w[:Mt, k])
+        trem[:Mt, k][valid_k] = svc_w[:Mt, k][valid_k]
+        prem[:Mt, k][valid_k] = prd_w[:Mt, k][valid_k]
+    Mt = int(np.searchsorted(-Lb, -maxL, side="right"))
+    serve_until(Mt, np.full(Mt, np.inf))
+
+
+def sprpt_numpy(arrivals, services, predicted,
+                window: int = DEFAULT_WINDOW, fifo_finish=None) -> tuple:
+    """Preemptive SPRPT finish times, ``[..., n] -> (finish, overflow)``.
+
+    Shortest-Predicted-Remaining-Processing-Time: :func:`srpt_numpy`
+    with the selection key driven by ``predicted`` service times while
+    completions follow the true ``services``. SPRPT serves *some* job
+    whenever work is present regardless of prediction quality, so it is
+    work-conserving and rides the same FIFO-Lindley busy-period
+    decomposition; per period the dense panel loop is
+    :func:`_sprpt_bucket`. ``predicted`` must match the broadcast
+    arrival/service shape exactly (one prediction per query — no silent
+    broadcasting). Pinned against ``mg1.sprpt_event_loop``; bitwise SRPT
+    at ``predicted == services``. Same overflow/fallback contract as
+    :func:`srpt_numpy`.
+    """
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    services = np.asarray(services, dtype=np.float64)
+    arrivals, services = np.broadcast_arrays(arrivals, services)
+    predicted = np.asarray(predicted, dtype=np.float64)
+    if predicted.shape != services.shape:
+        raise ValueError(
+            f"predicted service shape {predicted.shape} must match the "
+            f"broadcast arrival/service shape {services.shape} exactly "
+            "(one prediction per query; silent broadcasting is not "
+            "allowed)")
+    shape = arrivals.shape
+    n = shape[-1]
+    B = arrivals.size // n if n else 0
+    if n == 0 or B == 0:
+        return np.zeros(shape), np.zeros(shape[:-1], dtype=bool)
+    a = np.ascontiguousarray(arrivals).reshape(B, n)
+    s = np.ascontiguousarray(services).reshape(B, n)
+    p = np.ascontiguousarray(predicted).reshape(B, n)
+    # discipline-independent busy structure from the FIFO Lindley pass
+    if fifo_finish is None:
+        _, fin_f = lindley_numpy(a, s)
+    else:
+        fin_f = np.broadcast_to(fifo_finish, shape).reshape(B, n)
+    new_bp = np.empty((B, n), dtype=bool)
+    new_bp[:, 0] = True
+    new_bp[:, 1:] = a[:, 1:] > fin_f[:, :-1]
+
+    fa, fs, fp = a.ravel(), s.ravel(), p.ravel()
+    Bn = B * n
+    f = np.flatnonzero(new_bp.ravel())        # first query of each period
+    L = np.diff(np.append(f, Bn))
+    sb = f // n
+    overflow = np.zeros(B, dtype=bool)
+    overflow[sb[L > window]] = True
+    keep = ~overflow[sb]
+
+    finish = np.empty(Bn)
+    ovf_rows = np.flatnonzero(overflow)
+    for b in ovf_rows:
+        # defined placeholder for flagged streams (see srpt_numpy)
+        finish[b * n:(b + 1) * n] = fin_f[b]
+
+    # closed forms: a lone job finishes at arrival + service; a length-2
+    # period preempts iff the newcomer's PREDICTION is strictly below the
+    # head's predicted remaining (and the head still has true work left —
+    # an exact-boundary arrival sees the completion first)
+    f1 = f[keep & (L == 1)]
+    finish[f1] = fa[f1] + fs[f1]
+    f2 = f[keep & (L == 2)]
+    if f2.size:
+        rem0 = fs[f2] - (fa[f2 + 1] - fa[f2])
+        prem0 = fp[f2] - (fa[f2 + 1] - fa[f2])
+        s1 = fs[f2 + 1]
+        pre = (fp[f2 + 1] < prem0) & (rem0 > 0)
+        fin_first = fa[f2 + 1] + np.where(pre, s1, rem0)
+        finish[np.where(pre, f2 + 1, f2)] = fin_first
+        finish[np.where(pre, f2, f2 + 1)] = fin_first + np.where(pre, rem0,
+                                                                 s1)
+
+    # dense panel loop for longer periods (cf. srpt_numpy's bucketing)
+    ranges = ([(3, 3)] if window >= 3 else []) + _buckets(window)
+    for lo_b, bound in ranges:
+        sel = keep & (L >= lo_b) & (L <= bound)
+        if not sel.any():
+            continue
+        fb, Lb = f[sel], L[sel]
+        order = np.argsort(-Lb, kind="stable")
+        fb, Lb = fb[order], Lb[order]
+        maxL = int(Lb[0])
+        M = fb.shape[0]
+        offs = np.arange(maxL)
+        idx = np.minimum(fb[:, None] + offs[None, :], Bn - 1)
+        valid = offs[None, :] < Lb[:, None]
+        arr_w = np.where(valid, fa[idx], np.inf)
+        svc_w = np.where(valid, fs[idx], 0.0)
+        prd_w = np.where(valid, fp[idx], 0.0)
+        fin_o = np.empty((M, maxL))
+        _sprpt_bucket(arr_w, svc_w, prd_w, Lb, fin_o)
+        finish[idx[valid]] = fin_o[valid]
+
+    return finish.reshape(shape), overflow.reshape(shape[:-1])
+
+
+def sprpt_start_finish(arrivals, services, predicted,
+                       window: int = DEFAULT_WINDOW,
+                       fifo_finish=None) -> tuple:
+    """Exact SPRPT trajectories with heapq fallback on window overflow.
+
+    The predicted twin of :func:`srpt_start_finish`: overflowed streams
+    replay through ``mg1.sprpt_event_loop``; ``start`` is the effective
+    ``finish - service`` (see :func:`srpt_start_finish` for why).
+    """
+    finish, ovf = sprpt_numpy(arrivals, services, predicted, window,
+                              fifo_finish)
+    if ovf.any():
+        a, s = np.broadcast_arrays(np.asarray(arrivals, dtype=np.float64),
+                                   np.asarray(services, dtype=np.float64))
+        p = np.asarray(predicted, dtype=np.float64)
+        n = a.shape[-1]
+        a2 = a.reshape(-1, n)
+        s2 = s.reshape(-1, n)
+        p2 = p.reshape(-1, n)
+        f2 = finish.reshape(-1, n)
+        for b in np.flatnonzero(ovf.ravel()):
+            f2[b] = sprpt_event_loop(a2[b], s2[b], p2[b])
+        finish = f2.reshape(a.shape)
+    start = finish - np.asarray(services, dtype=np.float64)
+    return start, finish, ovf
+
+
+# --------------------------------------------------------------------------
 # simulation layers
 # --------------------------------------------------------------------------
+
+def _predict_services(predictor, services, stream_seed) -> np.ndarray:
+    """Predicted services over a ``[..., S, n]`` grid.
+
+    One standard-normal draw per query (the trailing ``[S, n]`` axes),
+    seeded by ``(predictor.seed, stream_seed)`` and broadcast across any
+    leading policy axis — so policy stacks and disciplines sharing a
+    stream batch are compared on common random predictions. ``None``
+    selects the zero-error oracle (predicted == true services, bitwise).
+    """
+    from ..data.predictor import LengthPredictor
+
+    if predictor is None:
+        predictor = LengthPredictor()
+    z = None
+    if predictor.sigma > 0:
+        rng = np.random.default_rng((int(predictor.seed), int(stream_seed)))
+        z = np.broadcast_to(rng.standard_normal(services.shape[-2:]),
+                            services.shape)
+    return predictor.predict(services, z=z)
+
 
 def simulate_discipline(problem: Problem, lengths, stream: Stream,
                         discipline: str = "fifo", backend: str = "numpy",
                         window: int = DEFAULT_WINDOW,
-                        service_time_fn=None) -> SimResult:
+                        service_time_fn=None,
+                        predicted=None) -> SimResult:
     """Fast drop-in for ``mg1.simulate`` under any discipline.
 
     Agrees with the heapq reference within ~1e-10 per query on identical
     streams (bitwise in practice), including when the stream overflows
-    ``window`` and takes the fallback. ``srpt`` runs the preemptive ring
-    kernel (:func:`srpt_numpy`; numpy-only — ``backend`` selects the
-    kernel for the non-preemptive disciplines).
+    ``window`` and takes the fallback. ``srpt``/``sprpt`` run the
+    preemptive panel kernels (:func:`srpt_numpy` / :func:`sprpt_numpy`;
+    numpy-only — ``backend`` selects the kernel for the non-preemptive
+    disciplines). The predicted disciplines ("spjf"/"sprpt") require
+    ``predicted``: a per-query predicted-service array of length
+    ``len(stream)`` (shape-validated; see ``data.predictor``). SPJF rides
+    the masked-argmin engine with the prediction as its key, so it works
+    on both backends.
     """
     lengths = np.asarray(lengths, dtype=np.float64)
     if len(stream.queries) == 0:
         return empty_result(problem)
     types, arrivals, services, us, keys = stream_arrays(
-        problem, lengths, stream, discipline, service_time_fn)
+        problem, lengths, stream, discipline, service_time_fn, predicted)
     if discipline == "fifo":
         start, finish = _lindley(arrivals, services, backend)
     elif discipline == "srpt":
         start, finish, _ = srpt_start_finish(arrivals, services, window)
+    elif discipline == "sprpt":
+        start, finish, _ = sprpt_start_finish(arrivals, services, keys,
+                                              window)
     else:
         start, finish, _ = windowed_start_finish(arrivals, services, keys,
                                                  window, backend)
@@ -662,13 +927,20 @@ def simulate_discipline(problem: Problem, lengths, stream: Stream,
 
 def simulate_batch(problem: Problem, lengths, batch: StreamBatch,
                    discipline: str = "fifo", backend: str = "numpy",
-                   window: int = DEFAULT_WINDOW) -> BatchStats:
+                   window: int = DEFAULT_WINDOW,
+                   predictor=None) -> BatchStats:
     """``simulate_fifo_batch`` with a discipline axis.
 
     ``lengths``: ``[N]`` or ``[P, N]`` token budgets; ``batch``: ``[S, n]``
     streams. Returns :class:`BatchStats` with shape ``[S]`` or ``[P, S]``.
-    FIFO routes to the Lindley fast path; SJF/priority run the masked-
-    argmin engine (with heapq fallback on window overflow).
+    FIFO routes to the Lindley fast path; SJF/priority/SPJF run the
+    masked-argmin engine (with heapq fallback on window overflow);
+    SRPT/SPRPT run the preemptive panel kernels. The predicted
+    disciplines take ``predictor`` (a ``data.predictor.LengthPredictor``;
+    ``None`` = the zero-error oracle, making SPJF/SPRPT bitwise
+    SJF/SRPT). Noise draws are one standard normal per query — seeded by
+    ``(predictor.seed, batch.seed)`` and shared across the policy axis,
+    so policies are compared on common random predictions.
     """
     if discipline == "fifo":
         return simulate_fifo_batch(problem, lengths, batch, backend=backend)
@@ -683,11 +955,17 @@ def simulate_batch(problem: Problem, lengths, batch: StreamBatch,
     services = _service_table(problem, L)[:, batch.types]   # [P, S, n]
     p_query = _accuracy_table(problem, L)[:, batch.types]   # [P, S, n]
     arr = np.broadcast_to(batch.arrivals[None], services.shape)
+    predicted = None
+    if discipline in PREDICTED_DISCIPLINES:
+        predicted = _predict_services(predictor, services, batch.seed)
     if discipline == "srpt":
         start, finish, _ = srpt_start_finish(arr, services, window)
+    elif discipline == "sprpt":
+        start, finish, _ = sprpt_start_finish(arr, services, predicted,
+                                              window)
     else:
         keys = discipline_keys(discipline, arrivals=arr, services=services,
-                               accuracy=p_query)
+                               accuracy=p_query, predicted=predicted)
         start, finish, _ = windowed_start_finish(arr, services, keys,
                                                  window, backend)
     stats = _batch_stats(problem, batch.arrivals, services, start, finish,
@@ -703,7 +981,8 @@ def sweep_disciplines(problem: Problem, policies, lams,
                       n_queries: int = 10_000, seed: int = 0,
                       backend: str = "numpy", clip_unstable: bool = True,
                       margin: float = 1e-3, prompt_len_range=(16, 128),
-                      window: int = DEFAULT_WINDOW) -> dict:
+                      window: int = DEFAULT_WINDOW,
+                      predictor=None) -> dict:
     """The full discipline-ablation grid with all shared work amortized.
 
     Equivalent to ``{d: batched.sweep(..., discipline=d) for d in
@@ -720,6 +999,13 @@ def sweep_disciplines(problem: Problem, policies, lams,
     memory peaks at one ``[P, S, n]`` tensor per field (the lambda axis
     is streamed, never materialized). Grid setup and aggregation are the
     ``sweep`` helpers, so the clip/NaN-unstable contract is identical.
+
+    The predicted disciplines ("spjf"/"sprpt") use ``predictor`` (a
+    ``data.predictor.LengthPredictor``; ``None`` = zero-error oracle).
+    The per-query noise normals are drawn once per ``(predictor.seed,
+    seed)`` pair and reused across the lambda axis — types (hence true
+    services) are already common random numbers across lambda, so the
+    predicted lanes are too.
     """
     for d in disciplines:
         if d not in ALL_DISCIPLINES:
@@ -727,6 +1013,7 @@ def sweep_disciplines(problem: Problem, policies, lams,
     names, lengths, rho, masked = _grid_budgets(problem, policies, lams,
                                                 clip_unstable, margin)
     Lg, P = rho.shape
+    want_predicted = any(d in PREDICTED_DISCIPLINES for d in disciplines)
 
     per_seed = {d: {nm: np.zeros((Lg, P, n_seeds)) for nm in
                     ("mean_wait", "mean_system_time", "mean_service",
@@ -752,10 +1039,14 @@ def sweep_disciplines(problem: Problem, policies, lams,
         mean_arr = batch.arrivals.mean(axis=-1)
         non_fifo = [d for d in disciplines
                     if d != "fifo" and d not in PREEMPTIVE_DISCIPLINES]
+        pred = (_predict_services(predictor, svc, seed)
+                if want_predicted else None)
 
         def _keys(d):
             if d == "sjf":
                 return svc
+            if d == "spjf":
+                return pred
             return discipline_keys("priority", services=t_tab,
                                    accuracy=p_tab)[:, batch.types]
 
@@ -772,6 +1063,14 @@ def sweep_disciplines(problem: Problem, policies, lams,
             delay["srpt"] = (st_p.mean(axis=-1) - mean_arr,
                              fin_p.mean(axis=-1) - mean_arr)
             ovf["srpt"][i] = o
+        if "sprpt" in disciplines:
+            # predicted-preemptive lane: same Lindley sharing (SPRPT is
+            # work-conserving regardless of prediction quality)
+            st_p, fin_p, o = sprpt_start_finish(arr_b, svc, pred, window,
+                                                fifo_finish=fin_f)
+            delay["sprpt"] = (st_p.mean(axis=-1) - mean_arr,
+                              fin_p.mean(axis=-1) - mean_arr)
+            ovf["sprpt"][i] = o
         if non_fifo and backend == "numpy":
             # one K-lane busy-period pass: split/setup shared across lanes
             st_k, fin_k, o = _windowed_numpy_multi(

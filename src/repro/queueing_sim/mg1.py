@@ -1,9 +1,11 @@
 """Event-driven M/G/1 simulation of the LLM server (paper Sec IV).
 
 Service times are deterministic per type, t_k(l_k); randomness enters via
-Poisson arrivals and type draws. FIFO is the paper's discipline; SJF and
-non-preemptive priority are beyond-paper ablations showing how much of the
-optimal allocation's gain is discipline-specific.
+Poisson arrivals and type draws. FIFO is the paper's discipline; SJF,
+non-preemptive priority, preemptive SRPT, and the predicted-length
+variants SPJF/SPRPT are beyond-paper ablations showing how much of the
+optimal allocation's gain is discipline-specific (and how much survives
+an imperfect length predictor).
 
 This heapq event loop is the *reference* path: it handles every discipline
 but simulates one scalar stream per Python call. Batched workloads should
@@ -63,12 +65,16 @@ def empty_result(problem: Problem) -> SimResult:
 
 
 def stream_arrays(problem: Problem, lengths, stream: Stream,
-                  discipline: str = "fifo", service_time_fn=None) -> tuple:
+                  discipline: str = "fifo", service_time_fn=None,
+                  predicted=None) -> tuple:
     """Unpack one stream into ``(types, arrivals, services, us, keys)``.
 
     The single preamble shared by the heapq reference (:func:`simulate`)
     and the vectorized engine (``disciplines.simulate_discipline``), so
     service model and key semantics cannot drift between the two paths.
+    The predicted disciplines ("spjf"/"sprpt") require ``predicted``: a
+    per-query predicted-service array of length ``len(stream)`` (shape is
+    validated — no silent broadcasting).
     """
     # deferred: disciplines imports this module for the fallback path
     from .disciplines import discipline_keys
@@ -87,7 +93,7 @@ def stream_arrays(problem: Problem, lengths, stream: Stream,
     accuracy = (accuracy_np(problem.tasks, lengths)[types]
                 if discipline == "priority" else None)
     keys = discipline_keys(discipline, arrivals=arrivals, services=services,
-                           accuracy=accuracy)
+                           accuracy=accuracy, predicted=predicted)
     return types, arrivals, services, us, keys
 
 
@@ -211,6 +217,54 @@ def srpt_event_loop(arrivals: np.ndarray, services: np.ndarray) -> np.ndarray:
     return finish
 
 
+def sprpt_event_loop(arrivals: np.ndarray, services: np.ndarray,
+                     predicted: np.ndarray) -> np.ndarray:
+    """Reference preemptive SPRPT pass: per-query finish times.
+
+    Shortest-*Predicted*-Remaining-Processing-Time (Mitzenmacher &
+    Shahout): the scheduler sees only ``predicted`` service times; at
+    every instant the server works on the job whose predicted remaining
+    work (prediction minus attained service) is smallest, preempting on
+    arrival of a job with a smaller prediction. Completion is governed by
+    the TRUE service requirement, so an underestimated job's predicted
+    remaining goes negative and it keeps the server until done — exactly
+    the starvation failure mode that erodes SPRPT's advantage as
+    prediction error grows. With ``predicted == services`` every heap key
+    and float operation coincides with :func:`srpt_event_loop`, so the
+    zero-error case is bitwise SRPT (pinned in
+    ``tests/test_prediction.py``). Ties break on query index, matching
+    the vectorized panel kernel ``disciplines.sprpt_numpy``.
+    """
+    n = len(arrivals)
+    finish = np.zeros(n)
+    heap: list[tuple[float, int]] = []    # (predicted remaining, qid)
+    trem = np.asarray(services, dtype=np.float64).copy()  # true remaining
+    t = 0.0
+    i = 0
+    while i < n or heap:
+        if not heap:
+            # idle: jump to the next arrival
+            t = float(arrivals[i])
+            heapq.heappush(heap, (float(predicted[i]), i))
+            i += 1
+            continue
+        prem, qid = heap[0]
+        tr = trem[qid]
+        if i < n and arrivals[i] < t + tr:
+            # arrival preempts (or queues): charge elapsed work against
+            # both the predicted key and the true remaining work
+            heapq.heapreplace(heap, (prem - (float(arrivals[i]) - t), qid))
+            trem[qid] = tr - (float(arrivals[i]) - t)
+            t = float(arrivals[i])
+            heapq.heappush(heap, (float(predicted[i]), i))
+            i += 1
+        else:
+            t = t + tr
+            finish[qid] = t
+            heapq.heappop(heap)
+    return finish
+
+
 def result_from_trajectory(problem: Problem, lengths, types, arrivals,
                            services, correct_us, start,
                            finish) -> SimResult:
@@ -246,29 +300,37 @@ def result_from_trajectory(problem: Problem, lengths, types, arrivals,
 def simulate(problem: Problem, lengths, stream: Stream,
              discipline: str = "fifo",
              service_time_fn: Callable | None = None,
-             c_servers: int = 1) -> SimResult:
+             c_servers: int = 1, predicted=None) -> SimResult:
     """Simulate the queue under integer budgets ``lengths``.
 
     discipline: "fifo" (paper), "sjf" (shortest-job-first, non-preemptive),
-    "priority" (highest marginal utility per second first), or "srpt"
-    (preemptive shortest-remaining-work; both beyond paper).
+    "priority" (highest marginal utility per second first), "srpt"
+    (preemptive shortest-remaining-work), or the predicted variants
+    "spjf" / "sprpt" which order by a noisy length prediction instead of
+    the true service time (all beyond paper). The predicted disciplines
+    require ``predicted``: a per-query predicted-service array, e.g. from
+    ``data.predictor.LengthPredictor.predict``; with
+    ``predicted == services`` they reduce bitwise to SJF / SRPT.
     ``service_time_fn(query, lengths) -> float`` overrides the analytic
     service model (used to couple the DES to the real decode engine).
     ``c_servers`` > 1 simulates the M/G/c pod (non-preemptive disciplines
     only) through :func:`event_loop_mgc`; utilization is then per server
-    (busy time over c * makespan). Waits under "srpt" are reported as
-    system time minus service time (start times are undefined under
-    preemption).
+    (busy time over c * makespan). Waits under "srpt"/"sprpt" are
+    reported as system time minus service time (start times are
+    undefined under preemption).
     """
     lengths = np.asarray(lengths, dtype=np.float64)
     if len(stream.queries) == 0:
         return empty_result(problem)
     types, arrivals, services, us, keys = stream_arrays(
-        problem, lengths, stream, discipline, service_time_fn)
-    if discipline == "srpt":
+        problem, lengths, stream, discipline, service_time_fn, predicted)
+    if discipline in ("srpt", "sprpt"):
         if c_servers != 1:
-            raise NotImplementedError("srpt is single-server only")
-        finish = srpt_event_loop(arrivals, services)
+            raise NotImplementedError(f"{discipline} is single-server only")
+        if discipline == "srpt":
+            finish = srpt_event_loop(arrivals, services)
+        else:
+            finish = sprpt_event_loop(arrivals, services, keys)
         start = finish - services
     elif c_servers == 1:
         start, finish = event_loop(arrivals, services, keys)

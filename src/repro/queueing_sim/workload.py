@@ -182,6 +182,16 @@ def generate_drift_trace(tasks: TaskSet, segments, seed: int = 0,
         t = float(a[-1])
         pi = np.asarray(tasks.pi if seg.pi is None else seg.pi,
                         dtype=np.float64)
+        # a mis-sized mixture override would otherwise surface as an
+        # opaque rng.choice error (or a scalar would silently broadcast)
+        if pi.shape != (tasks.n_tasks,):
+            raise ValueError(
+                f"segment {s_idx}: pi override has shape {pi.shape}, "
+                f"expected ({tasks.n_tasks},) — one weight per task type")
+        if not np.all(np.isfinite(pi)) or np.any(pi < 0) or pi.sum() <= 0:
+            raise ValueError(
+                f"segment {s_idx}: pi override must be finite, "
+                "non-negative, and sum to a positive value")
         pi = pi / pi.sum()
         arr.append(a)
         typ.append(rng.choice(tasks.n_tasks, size=seg.n_queries, p=pi))

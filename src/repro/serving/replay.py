@@ -10,7 +10,9 @@ loop over a recorded trace:
 
     trace block  ->  stamp budgets (current solution + exploration jitter)
                  ->  services (virtual latency model | real engine decode)
-                 ->  Lindley FIFO queueing (exact, vectorized, with carry)
+                 ->  queueing: Lindley FIFO (exact, vectorized, with carry)
+                     or any ``queueing_sim`` discipline, including the
+                     predicted SPJF/SPRPT keys (``cfg.discipline``)
                  ->  fold observations into ``serving.estimators``
                  ->  re-solve token allocation via ``sweeps.solve_grid``
                  ->  next block
@@ -55,6 +57,8 @@ from ..core.queueing import mean_system_time, service_moments
 from ..obs.monitor import DriftMonitor
 from ..obs.trace import VIRTUAL_PID, timecall
 from ..queueing_sim.batched import lindley_numpy
+from ..queueing_sim.disciplines import (ALL_DISCIPLINES, discipline_keys,
+                                        windowed_start_finish)
 from ..queueing_sim.workload import DriftTrace
 from .estimators import EstimatorState, OnlineEstimators
 from .metrics import ServingReport, occupancy_summary, percentile_summary
@@ -69,6 +73,20 @@ class ReplayConfig:
 
     block_size: int = 256          # requests per control interval
     l_init: int = 64               # uninformed initial budget (all tasks)
+    # service order within each block: any queueing_sim discipline.
+    # "fifo" is the paper's M/G/1 and stays byte-identical to the plain
+    # Lindley pass; the others order each block's admitted work by
+    # ``discipline_keys`` with exact busy carry across block boundaries
+    # (a ghost job pins the server busy until the previous block's last
+    # departure). Like the serving Scheduler, the replay twin never
+    # cancels a decoding request, so "srpt"/"sprpt" order by (predicted)
+    # total work at admission — non-preemptive within the block.
+    discipline: str = "fifo"
+    # predicted disciplines ("spjf"/"sprpt"): the LengthPredictor whose
+    # noisy keys order the blocks (None = zero-error oracle). Its noise
+    # stream is seeded apart from the exploration RNG, so attaching a
+    # predictor never changes the budgets a FIFO run would stamp.
+    predictor: object = None
     warmup_blocks: int = 1         # blocks before the first re-solve
     resolve_every: int = 1         # re-solve cadence, in blocks
     # re-solve trigger: "cadence" = blind block clock (above);
@@ -343,6 +361,29 @@ class Controller:
         return True
 
 
+def _ordered_block(arrivals, services, keys, prev_finish: float):
+    """One block under a non-FIFO discipline, with exact busy carry.
+
+    A busy server at the block boundary is represented by a *ghost job*:
+    arrival at the block's first arrival, service ``prev_finish -
+    arrival``, key ``-inf``. The discipline engine necessarily serves it
+    first (it heads the busy period), reproducing a server that only
+    frees at ``prev_finish``; its row is dropped from the result. The
+    next carry is ``finish.max()`` — under any non-preemptive order the
+    last departure is the maximum finish, not the last array entry.
+    """
+    a, s, kk = arrivals, services, np.asarray(keys, dtype=np.float64)
+    ghost = 0
+    if prev_finish > a[0]:
+        a = np.concatenate([a[:1], a])
+        s = np.concatenate([[prev_finish - a[0]], s])
+        kk = np.concatenate([[-np.inf], kk])
+        ghost = 1
+    start, finish, _ = windowed_start_finish(a[None], s[None], kk[None])
+    start, finish = start[0, ghost:], finish[0, ghost:]
+    return start, finish, float(finish.max())
+
+
 class ReplayHarness:
     """The plant: replays a trace against the controller, virtual or real."""
 
@@ -351,6 +392,9 @@ class ReplayHarness:
                  admission=None, faults=None):
         self.problem = problem
         self.cfg = cfg or ReplayConfig()
+        if self.cfg.discipline not in ALL_DISCIPLINES:
+            raise ValueError(f"unknown discipline {self.cfg.discipline!r} "
+                             f"(expected one of {ALL_DISCIPLINES})")
         self.engine = engine
         self.controller = Controller.from_problem(problem, self.cfg)
         # overload hardening: admission (serving.admission
@@ -362,6 +406,13 @@ class ReplayHarness:
         self.faults = faults
         if admission is not None:
             self.controller.admission = admission
+        # predicted block ordering: default to the zero-error oracle so
+        # cfg.discipline="spjf"/"sprpt" without a predictor is exactly
+        # the known-size SJF / admission-time-SRPT order
+        self._pred = self.cfg.predictor
+        if self._pred is None and self.cfg.discipline in ("spjf", "sprpt"):
+            from ..data.predictor import LengthPredictor
+            self._pred = LengthPredictor()
         # observability: tracer (obs.trace.Tracer) emits per-request span
         # trees + re-solve spans; metrics (obs.metrics.MetricsRegistry)
         # folds wait/service/system-time histograms per block. Both are
@@ -391,6 +442,23 @@ class ReplayHarness:
         lj = np.clip(l + np.where(mask, jitter, 0), 0,
                      int(self.problem.server.l_max))
         return lj.astype(np.int64)
+
+    def _block_keys(self, types, budgets, services, pred_rng) -> np.ndarray:
+        """Discipline keys for one block's admitted requests — the same
+        ``discipline_keys`` mapping the DES engines and the Scheduler use
+        (srpt/sprpt: non-preemptive admission-time keys, see ReplayConfig).
+        """
+        d = self.cfg.discipline
+        if d in ("sjf", "srpt"):
+            return discipline_keys(d, services=services)
+        if d in ("spjf", "sprpt"):
+            pred = self._pred.predict(services, rng=pred_rng)
+            return discipline_keys(d, services=services, predicted=pred)
+        t = self.problem.tasks
+        p = (np.asarray(t.A)[types]
+             * (1 - np.exp(-np.asarray(t.b)[types] * budgets))
+             + np.asarray(t.D)[types])
+        return discipline_keys("priority", services=services, accuracy=p)
 
     def _virtual_services(self, types, budgets) -> np.ndarray:
         t0 = np.asarray(self.problem.tasks.t0)
@@ -490,6 +558,11 @@ class ReplayHarness:
             trace = self.faults.transform_trace(trace)
         n = trace.n
         rng = np.random.default_rng(cfg.seed)
+        # prediction noise draws from their own stream: a predicted run
+        # stamps exactly the budgets the FIFO run would
+        pred_rng = (np.random.default_rng(
+            (int(getattr(self._pred, "seed", 0)), int(cfg.seed), 104729))
+            if cfg.discipline in ("spjf", "sprpt") else None)
         budgets = np.zeros(n, dtype=np.int64)
         services = np.zeros(n)
         waits = np.zeros(n)
@@ -530,14 +603,20 @@ class ReplayHarness:
                                                      max_extra_tokens)
                 if self.faults is not None:
                     s[admit] *= self.faults.service_multipliers(a[admit])
-                # Lindley continuation over the admitted requests:
-                # bumping the first admitted arrival to the previous
-                # block's last departure reproduces the single global
-                # pass exactly (start_i = max(a_i, finish_{i-1}))
-                a_eff = a[admit].copy()
-                a_eff[0] = max(a_eff[0], prev_finish)
-                start_a, finish_a = lindley_numpy(a_eff, s[admit])
-                next_finish = float(finish_a[-1])
+                if cfg.discipline == "fifo":
+                    # Lindley continuation over the admitted requests:
+                    # bumping the first admitted arrival to the previous
+                    # block's last departure reproduces the single global
+                    # pass exactly (start_i = max(a_i, finish_{i-1}))
+                    a_eff = a[admit].copy()
+                    a_eff[0] = max(a_eff[0], prev_finish)
+                    start_a, finish_a = lindley_numpy(a_eff, s[admit])
+                    next_finish = float(finish_a[-1])
+                else:
+                    keys = self._block_keys(k[admit], l[admit], s[admit],
+                                            pred_rng)
+                    start_a, finish_a, next_finish = _ordered_block(
+                        a[admit], s[admit], keys, prev_finish)
             else:
                 start_a = finish_a = np.zeros(0)
                 next_finish = prev_finish

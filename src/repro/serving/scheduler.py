@@ -1,13 +1,17 @@
-"""FIFO admission queue with allocator-assigned budgets.
+"""Admission queue with allocator-assigned budgets, any discipline.
 
 The paper's serving discipline: FIFO, one query in service at a time
 (M/G/1). At admission the scheduler stamps the request with the current
 optimal integer budget for its task type (the allocator re-solves online
-as lambda/pi drift). SJF/priority/SRPT variants are exposed for the
-ablation benchmarks; the admission queue is non-preemptive (a decoding
-request is never cancelled), so ``srpt`` orders waiting work by remaining
-work at admission — the full service time, the same
-``discipline_keys("srpt")`` the DES engines share.
+as lambda/pi drift). The SJF/priority/SRPT variants and the predicted
+SPJF/SPRPT variants are exposed for the ablation benchmarks; the
+admission queue is non-preemptive (a decoding request is never
+cancelled), so ``srpt``/``sprpt`` order waiting work by (predicted)
+remaining work at admission — the full (predicted) service time, the
+same ``discipline_keys`` the DES engines share. The predicted
+disciplines draw their keys from a ``data.predictor.LengthPredictor``
+(``None`` = zero-error oracle, collapsing SPJF to SJF and SPRPT to the
+admission-time SRPT key).
 """
 from __future__ import annotations
 
@@ -24,11 +28,21 @@ from .request import Phase, Request
 
 class Scheduler:
     def __init__(self, allocator: TokenBudgetAllocator,
-                 discipline: str = "fifo"):
+                 discipline: str = "fifo", predictor=None,
+                 predictor_seed: int = 0):
         if discipline not in ALL_DISCIPLINES:
             raise ValueError(discipline)
         self.allocator = allocator
         self.discipline = discipline
+        # predicted disciplines: per-admission noise stream, seeded apart
+        # from anything else so attaching a predictor never perturbs the
+        # allocator's draws. None = zero-error oracle.
+        self.predictor = predictor
+        if predictor is None and discipline in ("spjf", "sprpt"):
+            from ..data.predictor import LengthPredictor
+            self.predictor = LengthPredictor()
+        self._pred_rng = np.random.default_rng(
+            (int(getattr(self.predictor, "seed", 0)), int(predictor_seed)))
         self._fifo: collections.deque = collections.deque()
         self._heap: list = []
         self._seq = 0
@@ -61,6 +75,13 @@ class Scheduler:
             # at admission remaining work == full service, so the srpt
             # key coincides with sjf (preemption happens only in the DES)
             key = float(discipline_keys(self.discipline, services=t_service))
+        elif self.discipline in ("spjf", "sprpt"):
+            # predicted key: the predictor sees the true model service
+            # and returns its noisy estimate (oracle => key == t_service)
+            t_pred = float(self.predictor.predict(t_service,
+                                                  rng=self._pred_rng))
+            key = float(discipline_keys(self.discipline, services=t_service,
+                                        predicted=t_pred))
         else:  # priority: highest accuracy-per-second first
             k = req.task_index
             p = float(prob.tasks.A[k]

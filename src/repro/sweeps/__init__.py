@@ -37,6 +37,14 @@ API -> paper map
     (eq 4's boundary at l = 0); and "max sustainable lambda at target
     accuracy" capacity queries by grid refinement.
 
+``prediction.sweep_prediction_error`` / ``fifo_crossover_sigma``
+    Prediction-error robustness frontier for the predicted disciplines
+    (SPJF/SPRPT keyed on ``data.predictor`` estimates): mean/p99 wait vs
+    error level sigma on common random numbers, against exact-size
+    SJF/SRPT and size-blind FIFO references; ``fifo_crossover_sigma``
+    reports "how wrong can the predictor be before FIFO wins" (beyond
+    the paper, which assumes sizes known on arrival — Sec II).
+
 The scalar path (``core.allocator.solve``) remains the reference
 implementation; ``tests/test_solver_grid.py`` pins per-cell agreement
 (continuous optima to 1e-6, identical integer budgets).
@@ -46,6 +54,8 @@ from .evaluate import GridEvaluation, evaluate_cells, evaluate_solution
 from .frontier import (frontier_comparison, heavy_traffic_lams,
                        heavy_traffic_slice, max_sustainable_lambda,
                        pareto_front, pareto_mask, saturation_rate)
+from .prediction import (PredictionFrontier, fifo_crossover_sigma,
+                         service_cv2, sweep_prediction_error)
 from .solver_grid import (GridSolution, TaskArrays, reference_check,
                           solve_grid, solve_grid_flat)
 
@@ -56,4 +66,6 @@ __all__ = [
     "pareto_mask", "pareto_front", "saturation_rate", "heavy_traffic_lams",
     "heavy_traffic_slice", "max_sustainable_lambda", "frontier_comparison",
     "BatchServiceGrid", "solve_grid_batch_service",
+    "PredictionFrontier", "sweep_prediction_error", "fifo_crossover_sigma",
+    "service_cv2",
 ]

@@ -1,0 +1,401 @@
+"""Predicted disciplines (SPJF/SPRPT) + the prediction-error frontier.
+
+Pins the contracts promised by the prediction layer:
+
+* zero-error identity: SPJF is bitwise SJF and SPRPT is bitwise SRPT on
+  every lane (heapq event loops, NumPy panel kernels, JAX masked-argmin,
+  the batch/sweep layers, the serving scheduler, and the replay twin);
+* noisy SPRPT kernels agree with the ``sprpt_event_loop`` oracle per
+  query, including window-overflow fallback streams;
+* ``LengthPredictor``: mean-one noise, deterministic seeding, fitted
+  step predictors, strict shape validation;
+* the validation bugfixes: mis-sized per-task ``pi`` overrides
+  (``generate_drift_trace``), policy arrays (``_grid_budgets``), and
+  predicted-service arrays (``discipline_keys``) raise ``ValueError``
+  instead of broadcasting silently;
+* the robustness frontier: on the heavy-tailed benchmark policy the
+  SPRPT p99 FIFO-crossover sigma is finite and stable across seeds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import paper_problem
+from repro.data import (LengthPredictor, calibrate_from_synthetic,
+                        fit_quantile, fit_two_point)
+from repro.queueing_sim import (PREDICTED_DISCIPLINES, Segment,
+                                discipline_keys, event_loop,
+                                generate_drift_trace, generate_streams,
+                                simulate, simulate_batch,
+                                simulate_discipline, sprpt_event_loop,
+                                sprpt_numpy, sprpt_start_finish,
+                                srpt_event_loop, srpt_start_finish,
+                                sweep_disciplines, windowed_start_finish)
+from repro.sweeps import (fifo_crossover_sigma, service_cv2,
+                          sweep_prediction_error)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+LSTAR = np.array([0.0, 340.0, 0.0, 0.0, 345.0, 30.0])
+HEAVY = np.array([2000.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return paper_problem()
+
+
+def _stream_arrays(prob, lengths, lam=0.2, n_seeds=2, n=1200, seed=11):
+    batch = generate_streams(prob.tasks, lam, n_seeds, n, seed=seed)
+    t = prob.tasks
+    svc = (np.asarray(t.t0) + np.asarray(t.c) * np.asarray(lengths,
+                                                           float))[batch.types]
+    return batch, batch.arrivals, svc
+
+
+def _noisy(svc, sigma, seed=0):
+    z = np.random.default_rng(seed).standard_normal(svc.shape)
+    return LengthPredictor(sigma=sigma).predict(svc, z=z)
+
+
+# ------------------------------------------------------ zero-error identity
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_spjf_zero_error_is_sjf_bitwise(prob, backend):
+    _, arr, svc = _stream_arrays(prob, LSTAR)
+    oracle = LengthPredictor().predict(svc)
+    k_spjf = discipline_keys("spjf", services=svc, predicted=oracle)
+    st1, f1, _ = windowed_start_finish(arr, svc, svc, backend=backend)
+    st2, f2, _ = windowed_start_finish(arr, svc, k_spjf, backend=backend)
+    assert np.array_equal(st1, st2) and np.array_equal(f1, f2)
+
+
+def test_sprpt_zero_error_is_srpt_bitwise(prob):
+    _, arr, svc = _stream_arrays(prob, LSTAR)
+    st1, f1, _ = srpt_start_finish(arr, svc)
+    st2, f2, _ = sprpt_start_finish(arr, svc, svc.copy())
+    assert np.array_equal(st1, st2) and np.array_equal(f1, f2)
+    for s in range(arr.shape[0]):
+        assert np.array_equal(srpt_event_loop(arr[s], svc[s]),
+                              sprpt_event_loop(arr[s], svc[s],
+                                               svc[s].copy()))
+
+
+def test_zero_error_small_window_fallback_bitwise(prob):
+    """The identity survives the heapq fallback (window overflow)."""
+    _, arr, svc = _stream_arrays(prob, LSTAR, lam=0.3, n_seeds=1, n=600)
+    st1, f1, o1 = srpt_start_finish(arr, svc, window=4)
+    st2, f2, o2 = sprpt_start_finish(arr, svc, svc.copy(), window=4)
+    assert o1.any(), "grid too light: fallback path not exercised"
+    assert np.array_equal(o1, o2)
+    assert np.array_equal(st1, st2) and np.array_equal(f1, f2)
+
+
+def test_simulate_batch_oracle_predictor_matches_known_size(prob):
+    batch, _, _ = _stream_arrays(prob, LSTAR)
+    sjf = simulate_batch(prob, LSTAR, batch, discipline="sjf")
+    spjf = simulate_batch(prob, LSTAR, batch, discipline="spjf")
+    srpt = simulate_batch(prob, LSTAR, batch, discipline="srpt")
+    sprpt = simulate_batch(prob, LSTAR, batch, discipline="sprpt")
+    np.testing.assert_array_equal(spjf.mean_wait, sjf.mean_wait)
+    np.testing.assert_array_equal(sprpt.mean_wait, srpt.mean_wait)
+
+
+def test_sweep_disciplines_predicted_lanes_zero_error(prob):
+    res = sweep_disciplines(prob, {"opt": LSTAR}, [0.1, 0.2],
+                            disciplines=("fifo", "sjf", "srpt",
+                                         "spjf", "sprpt"),
+                            n_seeds=3, n_queries=800, seed=2)
+    np.testing.assert_array_equal(res["spjf"].mean_wait,
+                                  res["sjf"].mean_wait)
+    np.testing.assert_array_equal(res["sprpt"].mean_wait,
+                                  res["srpt"].mean_wait)
+
+
+# --------------------------------------------------- noisy kernels vs heapq
+
+def test_noisy_sprpt_kernel_matches_event_loop(prob):
+    _, arr, svc = _stream_arrays(prob, LSTAR, n_seeds=3)
+    pred = _noisy(svc, 0.8, seed=3)
+    _, fin, ovf = sprpt_start_finish(arr, svc, pred)
+    assert not ovf.any()
+    for s in range(arr.shape[0]):
+        ref = sprpt_event_loop(arr[s], svc[s], pred[s])
+        assert np.abs(fin[s] - ref).max() < 1e-9
+
+
+def test_noisy_sprpt_small_window_fallback_exact(prob):
+    _, arr, svc = _stream_arrays(prob, LSTAR, lam=0.3, n_seeds=1, n=500)
+    pred = _noisy(svc, 1.0, seed=4)
+    _, fin, ovf = sprpt_start_finish(arr, svc, pred, window=4)
+    assert ovf.any()
+    ref = sprpt_event_loop(arr[0], svc[0], pred[0])
+    assert np.abs(fin[0] - ref).max() < 1e-9
+
+
+def test_noisy_spjf_matches_event_loop(prob):
+    _, arr, svc = _stream_arrays(prob, LSTAR, n_seeds=2)
+    pred = _noisy(svc, 0.7, seed=5)
+    keys = discipline_keys("spjf", services=svc, predicted=pred)
+    _, fin, ovf = windowed_start_finish(arr, svc, keys)
+    assert not ovf.any()
+    for s in range(arr.shape[0]):
+        _, ref = event_loop(arr[s], svc[s], pred[s])
+        assert np.abs(fin[s] - ref).max() < 1e-9
+
+
+def test_simulate_predicted_disciplines_scalar_path(prob):
+    from repro.queueing_sim import generate_stream
+    stream = generate_stream(prob.tasks, 0.2, 600, seed=9)
+    svc = np.asarray([prob.tasks.t0[q.task] + prob.tasks.c[q.task]
+                      * LSTAR[q.task] for q in stream.queries])
+    # oracle predictions reproduce the known-size disciplines exactly
+    sjf = simulate(prob, LSTAR, stream, discipline="sjf")
+    spjf = simulate(prob, LSTAR, stream, discipline="spjf",
+                    predicted=svc.copy())
+    assert spjf.mean_wait == sjf.mean_wait
+    srpt = simulate(prob, LSTAR, stream, discipline="srpt")
+    sprpt = simulate(prob, LSTAR, stream, discipline="sprpt",
+                     predicted=svc.copy())
+    assert sprpt.mean_wait == srpt.mean_wait
+    fast = simulate_discipline(prob, LSTAR, stream, discipline="sprpt",
+                               predicted=svc.copy())
+    assert abs(fast.mean_wait - srpt.mean_wait) < 1e-9
+
+
+# ----------------------------------------------------- hypothesis property
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=1, max_value=60),
+           st.integers(min_value=0, max_value=10_000),
+           st.floats(min_value=0.1, max_value=3.0))
+    def test_property_zero_error_identity(n, seed, lam):
+        """SPJF==SJF and SPRPT==SRPT bitwise on arbitrary streams."""
+        rng = np.random.default_rng(seed)
+        arr = np.cumsum(rng.exponential(1.0 / lam, n))
+        svc = rng.exponential(1.0, n)
+        _, f_sjf, _ = windowed_start_finish(arr[None], svc[None], svc[None])
+        k = discipline_keys("spjf", services=svc, predicted=svc.copy())
+        _, f_spjf, _ = windowed_start_finish(arr[None], svc[None], k[None])
+        assert np.array_equal(f_sjf, f_spjf)
+        _, f_srpt, _ = srpt_start_finish(arr[None], svc[None])
+        _, f_sprpt, _ = sprpt_start_finish(arr[None], svc[None],
+                                           svc[None].copy())
+        assert np.array_equal(f_srpt, f_sprpt)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=1, max_value=50),
+           st.integers(min_value=0, max_value=10_000),
+           st.floats(min_value=0.05, max_value=2.0))
+    def test_property_noisy_sprpt_vs_oracle(n, seed, sigma):
+        """The panel kernel tracks the heapq oracle under any noise."""
+        rng = np.random.default_rng(seed)
+        arr = np.cumsum(rng.exponential(1.0, n))
+        svc = rng.exponential(1.0, n)
+        pred = svc * np.exp(sigma * rng.standard_normal(n)
+                            - 0.5 * sigma * sigma)
+        _, fin, _ = sprpt_start_finish(arr[None], svc[None], pred[None])
+        ref = sprpt_event_loop(arr, svc, pred)
+        assert np.abs(fin[0] - ref).max() < 1e-9
+
+
+# ------------------------------------------------------------ predictor
+
+def test_predictor_oracle_sigma0_is_identity():
+    s = np.random.default_rng(0).exponential(1.0, 100)
+    out = LengthPredictor().predict(s)
+    np.testing.assert_array_equal(out, s)
+
+
+def test_predictor_noise_is_mean_one_and_deterministic():
+    s = np.full(200_000, 2.0)
+    p = LengthPredictor(sigma=0.5, seed=3)
+    out1, out2 = p.predict(s), p.predict(s)
+    np.testing.assert_array_equal(out1, out2)   # seeded => reproducible
+    assert abs(out1.mean() / 2.0 - 1.0) < 0.01  # E[factor] == 1
+    assert (out1 > 0).all()
+
+
+def test_predictor_shape_validation():
+    s = np.ones((2, 10))
+    with pytest.raises(ValueError, match="noise shape"):
+        LengthPredictor(sigma=0.5).predict(s, z=np.zeros(10))
+    with pytest.raises(ValueError, match="kind"):
+        LengthPredictor(kind="magic")
+    with pytest.raises(ValueError, match="sigma"):
+        LengthPredictor(sigma=-1.0)
+
+
+def test_fitted_predictors_step_structure():
+    s = np.concatenate([np.full(50, 1.0), np.full(50, 9.0)])
+    tp = fit_two_point(s)
+    # predictions collapse to the two class means
+    assert set(np.unique(tp.point(s))) == {1.0, 9.0}
+    qt = fit_quantile(np.random.default_rng(1).exponential(1.0, 500),
+                      n_bins=4)
+    assert len(qt.values) == len(qt.boundaries) + 1
+    # bucket means are increasing for an increasing step function
+    assert np.all(np.diff(qt.values) > 0)
+
+
+def test_calibrate_from_synthetic_deterministic(prob):
+    p1 = calibrate_from_synthetic(prob, LSTAR, seed=5)
+    p2 = calibrate_from_synthetic(prob, LSTAR, seed=5)
+    assert p1 == p2
+    assert p1.kind == "two_point"
+    q = calibrate_from_synthetic(prob, LSTAR, kind="quantile", n_bins=3,
+                                 seed=5)
+    assert q.kind == "quantile"
+    # fitted on the service scale of the deployed budgets
+    svc = np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * LSTAR
+    assert svc.min() <= min(q.values) <= max(q.values) <= svc.max() + 1e-9
+
+
+# ------------------------------------------------- validation (bugfixes)
+
+def test_discipline_keys_predicted_shape_mismatch_raises(prob):
+    svc = np.ones(20)
+    with pytest.raises(ValueError, match="predicted service shape"):
+        discipline_keys("spjf", services=svc, predicted=np.ones(5))
+    with pytest.raises(ValueError, match="requires a per-query"):
+        discipline_keys("sprpt", services=svc)
+
+
+def test_sprpt_numpy_predicted_shape_mismatch_raises(prob):
+    _, arr, svc = _stream_arrays(prob, LSTAR, n_seeds=1, n=50)
+    with pytest.raises(ValueError, match="predicted"):
+        sprpt_numpy(arr, svc, np.ones(7))
+
+
+def test_drift_trace_pi_override_validation(prob):
+    bad = Segment(n_queries=10, lam=1.0, pi=(0.5, 0.5))   # 2 != n_tasks
+    with pytest.raises(ValueError, match="pi override has shape"):
+        generate_drift_trace(prob.tasks, [bad])
+    neg = Segment(n_queries=10, lam=1.0, pi=(1, -1, 1, 0, 0, 0))
+    with pytest.raises(ValueError, match="non-negative"):
+        generate_drift_trace(prob.tasks, [neg])
+    ok = Segment(n_queries=10, lam=1.0, pi=(2, 1, 1, 0, 0, 0))  # normalized
+    assert generate_drift_trace(prob.tasks, [ok]).n == 10
+
+
+def test_sweep_policy_shape_validation(prob):
+    with pytest.raises(ValueError, match="one token budget per task type"):
+        sweep_disciplines(prob, {"bad": np.ones(3)}, [0.1],
+                          n_seeds=1, n_queries=10)
+
+
+# ------------------------------------------------------------- frontier
+
+@pytest.fixture(scope="module")
+def frontier(prob):
+    t = np.asarray(prob.tasks.t0) + np.asarray(prob.tasks.c) * HEAVY
+    es = float(np.sum(np.asarray(prob.tasks.pi) * t))
+    sig = np.array([0.0, 0.3, 0.6, 1.0, 2.0])
+    return [sweep_prediction_error(prob, HEAVY, np.array([0.8 / es]), sig,
+                                   n_seeds=8, n_queries=1500, seed=s)
+            for s in (0, 1)]
+
+
+def test_frontier_left_edge_is_reference(frontier):
+    for fr in frontier:
+        np.testing.assert_array_equal(fr.mean_wait["spjf"][0],
+                                      fr.mean_wait["sjf"])
+        np.testing.assert_array_equal(fr.mean_wait["sprpt"][0],
+                                      fr.mean_wait["srpt"])
+
+
+def test_frontier_crossover_finite_and_stable(prob, frontier):
+    """The documented structure: finite SPRPT p99 crossover on the
+    heavy-tailed policy, consistent across stream seeds."""
+    assert service_cv2(prob, HEAVY) > 1.0
+    xs = [fifo_crossover_sigma(fr, "sprpt", "p99_wait") for fr in frontier]
+    for x in xs:
+        assert np.isfinite(x) and 0.05 < x < 2.5, xs
+    # and the mean advantage survives the whole sweep at CV^2 > 1
+    for fr in frontier:
+        assert np.all(fr.mean_wait["sprpt"] < fr.mean_wait["fifo"][None, :])
+        assert np.all(fr.mean_wait["spjf"] < fr.mean_wait["fifo"][None, :])
+
+
+def test_frontier_summary_is_json_serializable(frontier):
+    import json
+    out = json.loads(json.dumps(frontier[0].summary()))
+    assert out["predictor_kind"] == "oracle"
+    assert len(out["mean_wait"]["sprpt"]) == len(out["sigmas"])
+
+
+# ------------------------------------------------------- serving layers
+
+def test_scheduler_predicted_disciplines(prob):
+    from repro.core.allocator import TokenBudgetAllocator
+    from repro.serving.request import Request
+    from repro.serving.scheduler import Scheduler
+
+    def order(discipline, predictor=None):
+        sch = Scheduler(TokenBudgetAllocator(prob), discipline=discipline,
+                        predictor=predictor)
+        for i in range(6):
+            sch.admit(Request(rid=i, task_index=i % 6,
+                              prompt=np.zeros(4, np.int32),
+                              arrival_t=0.1 * i), now=0.1 * i)
+        return [sch.next_request().rid for _ in range(6)]
+
+    # oracle predictions reproduce the known-size order exactly
+    assert order("spjf") == order("sjf")
+    assert order("sprpt") == order("srpt")
+    # the noisy order is still a permutation of the same work
+    noisy = order("spjf", predictor=LengthPredictor(sigma=1.0, seed=1))
+    assert sorted(noisy) == list(range(6))
+
+
+def test_replay_discipline_threading(prob):
+    from repro.queueing_sim import generate_drift_trace
+    from repro.serving.replay import ReplayConfig, ReplayHarness
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(n_queries=600, lam=0.2)], seed=3)
+    L = LSTAR.astype(np.int64)
+
+    def run(**kw):
+        h = ReplayHarness(prob, ReplayConfig(block_size=64,
+                                             explore_frac=0.0, **kw))
+        return h.run_virtual(trace, fixed_lengths=L)
+
+    fifo = run()
+    sjf = run(discipline="sjf")
+    spjf = run(discipline="spjf")                 # oracle predictor
+    # oracle spjf ordering is exactly the sjf ordering, block for block
+    np.testing.assert_array_equal(spjf.waits, sjf.waits)
+    # size-based ordering reduces the mean wait on this stream
+    assert sjf.waits.mean() < fifo.waits.mean()
+    # noisy predictions change the order but not the stamped budgets
+    noisy = run(discipline="spjf",
+                predictor=LengthPredictor(sigma=1.0))
+    assert not np.array_equal(noisy.waits, sjf.waits)
+    np.testing.assert_array_equal(noisy.budgets, fifo.budgets)
+    # work conservation: total service identical, waits non-negative
+    np.testing.assert_allclose(noisy.services.sum(), fifo.services.sum())
+    assert (noisy.waits > -1e-12).all()
+    with pytest.raises(ValueError, match="unknown discipline"):
+        ReplayHarness(prob, ReplayConfig(discipline="lifo"))
+
+
+def test_replay_single_block_matches_des(prob):
+    """One block spanning the trace == the DES windowed engine exactly."""
+    from repro.serving.replay import ReplayConfig, ReplayHarness
+    trace = generate_drift_trace(prob.tasks,
+                                 [Segment(n_queries=400, lam=0.2)], seed=5)
+    L = LSTAR.astype(np.int64)
+    h = ReplayHarness(prob, ReplayConfig(block_size=1000, discipline="sjf",
+                                         explore_frac=0.0))
+    res = h.run_virtual(trace, fixed_lengths=L)
+    t = prob.tasks
+    svc = (np.asarray(t.t0) + np.asarray(t.c) * L)[trace.types]
+    st, _, _ = windowed_start_finish(trace.arrivals[None], svc[None],
+                                     svc[None])
+    np.testing.assert_allclose(res.waits, st[0] - trace.arrivals,
+                               atol=1e-9)

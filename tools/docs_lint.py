@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Documentation lint: dead links + undocumented examples.
+
+Checks, over ``README.md`` and every ``docs/*.md``:
+
+* every relative markdown link ``[text](path)`` (and bare relative image
+  reference) resolves to a file or directory inside the repo, after
+  stripping any ``#anchor`` fragment — absolute URLs are ignored;
+* every ``examples/*.py`` script is referenced by name from at least one
+  documentation page, so new examples cannot land undocumented.
+
+Run from the repo root (CI does): ``python tools/docs_lint.py``.
+Exit status 0 = clean, 1 = problems (each printed on its own line).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^```.*?^```", re.M | re.S)
+CODE = re.compile(r"`[^`]*`")
+
+
+def prose(page: pathlib.Path) -> str:
+    """Page text with fenced blocks and inline code spans removed, so
+    bracketed math like ``E[T](l)`` is never mistaken for a link."""
+    return CODE.sub("", FENCE.sub("", page.read_text()))
+
+
+def doc_pages() -> list[pathlib.Path]:
+    pages = []
+    readme = ROOT / "README.md"
+    if readme.exists():
+        pages.append(readme)
+    pages.extend(sorted((ROOT / "docs").glob("*.md")))
+    return pages
+
+
+def check_links(pages) -> list[str]:
+    problems = []
+    for page in pages:
+        for target in LINK.findall(prose(page)):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:
+                continue
+            if target.startswith("#"):                     # same-page anchor
+                continue
+            path = target.split("#", 1)[0]
+            resolved = (page.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{page.relative_to(ROOT)}: dead link -> {target}")
+            elif ROOT not in resolved.parents and resolved != ROOT:
+                problems.append(
+                    f"{page.relative_to(ROOT)}: link escapes repo -> {target}")
+    return problems
+
+
+def check_examples_referenced(pages) -> list[str]:
+    corpus = "\n".join(p.read_text() for p in pages)
+    problems = []
+    for script in sorted((ROOT / "examples").glob("*.py")):
+        if script.name not in corpus:
+            problems.append(
+                f"examples/{script.name}: not referenced by README.md "
+                "or any docs/*.md page")
+    return problems
+
+
+def main() -> int:
+    pages = doc_pages()
+    if not pages:
+        print("docs lint: no README.md or docs/*.md pages found")
+        return 1
+    problems = check_links(pages) + check_examples_referenced(pages)
+    for p in problems:
+        print(p)
+    n_links = sum(len(LINK.findall(prose(p))) for p in pages)
+    status = f"{len(problems)} problem(s)" if problems else "clean"
+    print(f"docs lint: {len(pages)} page(s), {n_links} link(s), "
+          f"{len(list((ROOT / 'examples').glob('*.py')))} example(s) "
+          f"-- {status}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
